@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark plus the
+per-figure detail lines.  Figure map:
+    io_bandwidth     → Fig. 8a/8b (write bandwidth vs ranks, vs VPIC-IO)
+    io_ablation      → §5.2 optimisation ablation + async overlap
+    ghost_exchange   → Fig. 2a (halo update scaling)
+    multigrid_bench  → Fig. 2b/2c (solver scaling / contraction)
+    trs_savings      → §4 TRS cost-saving scenario
+    lm_checkpoint    → framework integration (train-state snapshots)
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from . import ghost_exchange, io_ablation, io_bandwidth, lm_checkpoint, multigrid_bench, trs_savings
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("io_bandwidth_fig8", io_bandwidth.run, lambda rows: f"best={max(r['mpfluid_MBps'] for r in rows)}MB/s"),
+        ("io_ablation_s52", io_ablation.run, lambda rows: f"overlap_ratio={rows[-1]['overlap_ratio']:.3f}"),
+        ("ghost_exchange_fig2a", ghost_exchange.run, lambda rows: f"us_per_grid={rows[-1]['us_per_grid']:.2f}"),
+        ("multigrid_fig2bc", multigrid_bench.run, lambda rows: f"contraction={rows[-1]['contraction_per_cycle']:.3f}"),
+        ("trs_savings_s4", trs_savings.run, lambda rows: f"production_ratio={rows[-1]['prod_ratio']:.3f}"),
+        ("lm_checkpoint", lm_checkpoint.run, lambda rows: f"write={max(r['write_MBps'] for r in rows):.0f}MB/s"),
+    ]
+    for name, fn, derive in suites:
+        t0 = time.perf_counter()
+        rows = fn(out=lambda s: print(f"  {s}"))
+        wall = time.perf_counter() - t0
+        print(f"{name},{wall * 1e6 / max(len(rows), 1):.0f},{derive(rows)}")
+
+
+if __name__ == "__main__":
+    main()

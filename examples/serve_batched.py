@@ -1,0 +1,50 @@
+"""Batched serving: prefill + greedy decode with per-mixer caches.
+
+    PYTHONPATH=src python examples/serve_batched.py [arch]
+
+Loads a reduced config of any assigned architecture (default: the
+RecurrentGemma hybrid — recurrent state + window ring cache), prefills a
+batch of prompts and decodes new tokens, reporting prefill/decode
+throughput.  Works for every family: GQA full caches, MLA latent caches,
+SSD states, ring-buffer local windows.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_smoke
+from repro.models import transformer
+from repro.serve.engine import BatchedServer, Request
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "recurrentgemma-9b"
+    assert arch in ARCHS, f"unknown arch {arch}"
+    cfg = get_smoke(arch)
+    print(f"serving reduced {arch} ({cfg.name})")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+
+    rng = np.random.default_rng(0)
+    vocab = cfg.codebook_vocab if cfg.n_codebooks else cfg.vocab_size
+    S = 32
+    shape = (S, cfg.n_codebooks) if cfg.n_codebooks else (S,)
+    requests = [
+        Request(rid=i, prompt=rng.integers(0, vocab, shape).astype(np.int32), max_new=8)
+        for i in range(8)
+    ]
+    server = BatchedServer(cfg, params, max_batch=4, max_len=S + 16)
+    stats = server.serve(requests)
+    print(f"  prefill: {stats.n_prompt_tokens} tokens in {stats.prefill_s*1e3:.0f} ms")
+    print(f"  decode:  {stats.n_generated} tokens in {stats.decode_s*1e3:.0f} ms "
+          f"({stats.decode_tok_per_s:.0f} tok/s)")
+    print(f"  request 0 generated: {requests[0].out_tokens}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

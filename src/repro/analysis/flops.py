@@ -1,0 +1,179 @@
+"""Analytic FLOP / HBM-byte model per (arch × shape) cell.
+
+``compiled.cost_analysis()`` on the CPU backend counts each ``while`` body
+**once**, so scan-over-layers models under-report by ~n_layers×.  This
+module computes trip-correct totals analytically from the config — every
+einsum in the model has a closed-form FLOP count — and an itemised HBM
+traffic estimate.  The dry-run records both (analytic + raw XLA) and the
+roofline uses the analytic terms; the collective term comes from the
+trip-scaled HLO parse in ``roofline.py``.
+
+Conventions: 1 MAC = 2 FLOPs; causal attention scores use the exact
+average context (S+1)/2; bf16 activations (2 B), f32 params/optimizer
+(4 B) unless stated.
+"""
+
+from __future__ import annotations
+
+from ..models.common import LayerSpec, ModelConfig
+
+
+def _attn_flops(cfg: ModelConfig, B: int, S: int, T_avg: float, window: int) -> float:
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = min(window, T_avg) if window else T_avg
+    f = 2.0 * B * S * D * (H + 2 * KV) * Dh  # qkv proj
+    f += 2.0 * B * S * H * Dh * t * 2  # scores + weighted values
+    f += 2.0 * B * S * H * Dh * D  # out proj
+    return f
+
+
+def _mla_flops(cfg: ModelConfig, B: int, S: int, T_avg: float, decode: bool) -> float:
+    m, D, H = cfg.mla, cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    f = 2.0 * B * S * D * m.q_lora_rank + 2.0 * B * S * m.q_lora_rank * H * qk
+    f += 2.0 * B * S * D * (m.kv_lora_rank + m.qk_rope_dim)
+    if decode and S == 1:
+        # absorbed form: latent-space attention
+        f += 2.0 * B * S * H * m.qk_nope_dim * m.kv_lora_rank  # q absorb
+        f += 2.0 * B * S * H * T_avg * (m.kv_lora_rank + m.qk_rope_dim)  # scores
+        f += 2.0 * B * S * H * T_avg * m.kv_lora_rank  # ctx
+        f += 2.0 * B * S * H * m.kv_lora_rank * m.v_head_dim  # out absorb
+    else:
+        f += 2.0 * B * S * m.kv_lora_rank * H * (m.qk_nope_dim + m.v_head_dim)  # expand
+        f += 2.0 * B * S * H * T_avg * (qk + m.v_head_dim)  # scores + av
+    f += 2.0 * B * S * H * m.v_head_dim * D
+    return f
+
+
+def _ssd_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    s = cfg.ssd
+    D = cfg.d_model
+    d_in = s.expand * D
+    H = d_in // s.head_dim
+    P, G, N = s.head_dim, s.n_groups, s.d_state
+    conv_ch = d_in + 2 * G * N
+    Q = min(S, 256)
+    f = 2.0 * B * S * D * (2 * d_in + 2 * G * N + H)  # in_proj
+    f += 2.0 * B * S * s.conv_width * conv_ch  # depthwise conv
+    if S > 1:
+        f += 2.0 * B * S * Q * G * N  # CB intra-chunk
+        f += 2.0 * B * S * Q * H * P  # M @ X
+    f += 2.0 * B * S * H * P * N * 2  # state build + apply
+    f += 2.0 * B * S * d_in * D  # out_proj
+    return f
+
+
+def _rglru_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    r, D = cfg.rglru, cfg.d_model
+    W = r.lru_width
+    f = 2.0 * B * S * D * W * 2  # x + gate branches
+    f += 2.0 * B * S * W * W * 2  # r/i gate projections
+    f += 2.0 * B * S * r.conv_width * W
+    f += 10.0 * B * S * W  # recurrence elementwise
+    f += 2.0 * B * S * W * D
+    return f
+
+
+def _ffn_flops(cfg: ModelConfig, spec: LayerSpec, B: int, S: int) -> float:
+    if spec.ffn == "mlp":
+        n_mats = 2 if cfg.mlp_variant == "gelu" else 3
+        return 2.0 * B * S * cfg.d_model * cfg.d_ff * n_mats
+    if spec.ffn == "moe":
+        e = cfg.moe
+        N = B * S
+        from ..models.moe import moe_capacity
+
+        C = moe_capacity(N, cfg)
+        f = 2.0 * N * cfg.d_model * e.n_experts  # router
+        f += 2.0 * e.n_experts * C * cfg.d_model * cfg.d_ff * 3  # expert SwiGLU
+        return f
+    return 0.0
+
+
+def forward_flops(cfg: ModelConfig, B: int, S: int, kind: str, cache_len: int = 0) -> dict:
+    """Breakdown of one forward pass.  kind: train|prefill|decode."""
+    decode = kind in ("decode", "decode_long")
+    if decode:
+        T_avg = float(cache_len)
+    else:
+        T_avg = (S + 1) / 2.0
+    per_layer = 0.0
+    for stage in cfg.stages:
+        for spec in stage.pattern:
+            if spec.mixer in ("attn", "local"):
+                w = cfg.local_window if spec.mixer == "local" else 0
+                f = _attn_flops(cfg, B, S, T_avg, w)
+            elif spec.mixer == "mla":
+                f = _mla_flops(cfg, B, S, T_avg, decode)
+            elif spec.mixer == "ssd":
+                f = _ssd_flops(cfg, B, S)
+            elif spec.mixer == "rglru":
+                f = _rglru_flops(cfg, B, S)
+            else:
+                f = 0.0
+            f += _ffn_flops(cfg, spec, B, S)
+            per_layer += f * stage.repeat
+    # head: full logits for train loss; last-token otherwise
+    V = cfg.codebook_vocab * cfg.n_codebooks if cfg.n_codebooks else cfg.vocab_size
+    head = 2.0 * B * (S if kind == "train" else 1) * cfg.d_model * V
+    return {"layers": per_layer, "head": head, "total": per_layer + head}
+
+
+def cell_flops(cfg: ModelConfig, B: int, S: int, kind: str, cache_len: int = 0) -> dict:
+    """Total step FLOPs.  Train = fwd + 2×bwd (+1 layer-recompute for
+    remat=full); serve kinds = fwd only."""
+    fwd = forward_flops(cfg, B, S, kind, cache_len)
+    if kind != "train":
+        return {"fwd": fwd["total"], "total": fwd["total"], **fwd}
+    mult_layers = 3.0 + (1.0 if cfg.remat == "full" else 0.0)
+    total = fwd["layers"] * mult_layers + fwd["head"] * 3.0
+    return {"fwd": fwd["total"], "layers": fwd["layers"], "head": fwd["head"], "total": total}
+
+
+def cache_bytes(cfg: ModelConfig, B: int, length: int) -> int:
+    """Total KV/state cache bytes (bf16 kv, f32 recurrent states)."""
+    total = 0
+    for stage in cfg.stages:
+        for spec in stage.pattern:
+            if spec.mixer == "attn":
+                total += stage.repeat * 2 * B * length * cfg.n_kv_heads * cfg.head_dim * 2
+            elif spec.mixer == "local":
+                L = min(length, cfg.local_window) if cfg.local_window else length
+                total += stage.repeat * 2 * B * L * cfg.n_kv_heads * cfg.head_dim * 2
+            elif spec.mixer == "mla":
+                m = cfg.mla
+                total += stage.repeat * B * length * (m.kv_lora_rank + m.qk_rope_dim) * 2
+            elif spec.mixer == "ssd":
+                s = cfg.ssd
+                d_in = s.expand * cfg.d_model
+                H = d_in // s.head_dim
+                total += stage.repeat * B * (
+                    (s.conv_width - 1) * (d_in + 2 * s.n_groups * s.d_state) * 2
+                    + H * s.head_dim * s.d_state * 4
+                )
+            elif spec.mixer == "rglru":
+                r = cfg.rglru
+                total += stage.repeat * B * ((r.conv_width - 1) * r.lru_width * 2 + r.lru_width * 4)
+    return total
+
+
+def cell_hbm_bytes(cfg: ModelConfig, n_params: int, B: int, S: int, kind: str, cache_len: int = 0) -> dict:
+    """Itemised HBM traffic per step (analytic estimate)."""
+    act_unit = B * S * cfg.d_model * 2  # one residual-stream tensor, bf16
+    L = cfg.n_layers
+    if kind == "train":
+        params = n_params * 4 * 3  # fwd read + bwd read + remat read
+        opt = n_params * 4 * 7  # grads w, m/v r+w, p r+w
+        acts = act_unit * L * (2 + 4)  # save+read residuals; working set churn
+        cache = 0
+    else:
+        params = n_params * 4  # one read (serving would hold bf16; f32 here)
+        opt = 0
+        acts = act_unit * L * 2
+        cache = cache_bytes(cfg, B, cache_len)
+        if kind == "prefill":
+            cache = cache  # written once
+        else:
+            cache = cache * 1  # read once per decoded token (+ tiny write)
+    total = params + opt + acts + cache
+    return {"params": params, "optimizer": opt, "activations": acts, "cache": cache, "total": total}

@@ -1,0 +1,319 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+    compute term    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective term = collective wire-bytes / (chips × 50 GB/s/link × links)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-chip*
+flops/bytes, so the formulas reduce to per-chip quantities over per-chip
+rates.  Collective bytes are NOT in cost_analysis: we parse the compiled
+HLO, build an instruction→result-bytes table, and for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+sum the **operand** sizes (looked up in the table), plus a modeled ring
+**wire-bytes** figure per op kind:
+
+    all-reduce      2·(n−1)/n · B      (reduce-scatter + all-gather phases)
+    all-gather      (n−1)/n · B_out
+    reduce-scatter  (n−1)/n · B_in
+    all-to-all      (n−1)/n · B
+    collective-permute  B
+
+The wire-bytes figure feeds the collective term (it is what actually
+crosses ICI); raw operand bytes are recorded alongside for the brief's
+formula.  Cross-pod groups (spanning >1 pod on the multi-pod mesh) are
+split out and costed against DCN bandwidth in the report.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from ..launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_BF16_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# result type may carry a layout suffix `{4,2,1,0,3}` and may be a tuple —
+# match lazily up to the opcode token right before '('
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,\s]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+
+def shape_bytes(type_str: str) -> int:
+    """Sum bytes over every dtype[dims] group in a (possibly tuple) type."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    op_bytes: dict = field(default_factory=dict)  # opcode -> operand bytes (per chip)
+    wire_bytes: dict = field(default_factory=dict)  # opcode -> modeled ring bytes
+    op_counts: dict = field(default_factory=dict)
+    total_operand_bytes: int = 0
+    total_wire_bytes: float = 0.0
+    f32_wire_bytes: float = 0.0  # share moved at f32
+
+    @property
+    def wire_bytes_tpu_adjusted(self) -> float:
+        """The CPU backend lowers bf16 dots as f32 (audited: 9/9 dots), so
+        SPMD moves activation partials at f32.  With bf16 working params
+        (master-weights mode) every f32 activation collective would be bf16
+        on a real TPU (native-bf16 MXU) → halve the f32 share."""
+        return self.total_wire_bytes - 0.5 * self.f32_wire_bytes
+
+    def to_json(self) -> dict:
+        return {
+            "operand_bytes_by_op": self.op_bytes,
+            "wire_bytes_by_op": {k: float(v) for k, v in self.wire_bytes.items()},
+            "counts_by_op": self.op_counts,
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_wire_bytes": float(self.total_wire_bytes),
+            "f32_wire_bytes": float(self.f32_wire_bytes),
+            "wire_bytes_tpu_adjusted": float(self.wire_bytes_tpu_adjusted),
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_CALLEE_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name → its instruction lines (module-order)."""
+    comps: dict[str, list[str]] = {}
+    current: str | None = None
+    entry_seen = False
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line.strip())
+        if m and ("->" in line):
+            current = m.group(1)
+            if line.strip().startswith("ENTRY"):
+                comps["__entry__"] = comps.setdefault(m.group(1), [])
+                entry_seen = True
+            comps.setdefault(current, [])
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+                continue
+            comps[current].append(line)
+    if not entry_seen and comps:
+        # fall back: treat the last computation as the entry
+        comps["__entry__"] = comps[list(comps)[-1]]
+    return comps
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Per-chip collective byte totals, **trip-count-scaled**: a collective
+    inside a `while` body (a `lax.scan` over layers / microbatches / loss
+    chunks) is counted trip_count times, using XLA's
+    ``known_trip_count`` backend-config annotation."""
+    comps = _split_computations(hlo_text)
+    # instruction result table (global — names are unique per module)
+    result_bytes: dict[str, int] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                name, type_str, _op = m.groups()
+                result_bytes[name] = shape_bytes(type_str)
+
+    stats = CollectiveStats()
+
+    def line_cost(line) -> tuple[str, int, float, bool] | None:
+        m = _INSTR_RE.match(line)
+        if not m:
+            return None
+        name, type_str, op = m.groups()
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVES or op.endswith("-done"):
+            return None
+        out_b = result_bytes.get(name, shape_bytes(type_str))
+        paren = ""
+        tag = base + "(" if (base + "(") in line else op + "("
+        if tag in line:
+            rest = line[line.index(tag) + len(tag) :]
+            depth = 1
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                paren += ch
+        operand_b = 0
+        for tok in paren.split(","):
+            mm = _OPERAND_RE.match(tok.strip())
+            if mm and mm.group(1) in result_bytes:
+                operand_b += result_bytes[mm.group(1)]
+        if operand_b == 0:
+            operand_b = out_b
+        n = _group_size(line, n_devices)
+        frac = (n - 1) / max(n, 1)
+        if base == "all-reduce":
+            wire = 2.0 * frac * operand_b
+        elif base == "all-gather":
+            wire = frac * out_b
+        elif base == "reduce-scatter":
+            wire = frac * operand_b
+        elif base == "all-to-all":
+            wire = frac * operand_b
+        else:  # collective-permute
+            wire = float(operand_b)
+        is_f32 = "f32[" in m.group(2)
+        return base, operand_b, wire, is_f32
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def comp_cost(comp_name: str) -> tuple:
+        """(op_bytes, wire_bytes, counts) dict-tuples for one computation,
+        recursing into while bodies (×trip) and calls (×1)."""
+        op_b: dict[str, float] = {}
+        wire_b: dict[str, float] = {}
+        counts: dict[str, float] = {}
+        f32_b = {"f32": 0.0}
+        for line in comps.get(comp_name, ()):
+            c = line_cost(line)
+            if c is not None:
+                base, ob, wb, is_f32 = c
+                op_b[base] = op_b.get(base, 0) + ob
+                wire_b[base] = wire_b.get(base, 0) + wb
+                counts[base] = counts.get(base, 0) + 1
+                if is_f32:
+                    f32_b["f32"] += wb
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            op = m.group(3)
+            if op == "while":
+                bm = _WHILE_BODY_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                if bm:
+                    sub = comp_cost(bm.group(1))
+                    for d_dst, d_src in zip((op_b, wire_b, counts, f32_b), sub):
+                        for k, v in d_src.items():
+                            d_dst[k] = d_dst.get(k, 0) + trip * v
+            elif op in ("call", "conditional", "async-start"):
+                cm = _CALLEE_RE.search(line)
+                if cm:
+                    sub = comp_cost(cm.group(1))
+                    for d_dst, d_src in zip((op_b, wire_b, counts, f32_b), sub):
+                        for k, v in d_src.items():
+                            d_dst[k] = d_dst.get(k, 0) + v
+        return (op_b, wire_b, counts, f32_b)
+
+    entry = None
+    for name, lines in comps.items():
+        if name == "__entry__":
+            entry = lines
+    # locate the entry computation's name (shares the list object)
+    entry_name = None
+    for name, lines in comps.items():
+        if name != "__entry__" and lines is entry:
+            entry_name = name
+            break
+    if entry_name is None:
+        entry_name = list(comps)[-1]
+    op_b, wire_b, counts, f32_b = comp_cost(entry_name)
+    stats.op_bytes = {k: int(v) for k, v in op_b.items()}
+    stats.wire_bytes = wire_b
+    stats.op_counts = {k: int(v) for k, v in counts.items()}
+    stats.total_operand_bytes = int(sum(op_b.values()))
+    stats.total_wire_bytes = float(sum(wire_b.values()))
+    stats.f32_wire_bytes = float(f32_b.get("f32", 0.0))
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float  # 6·N·D (or 6·N_active·D)
+    useful_flops_frac: float  # MODEL_FLOPS / (HLO_FLOPs × chips)
+
+    def to_json(self) -> dict:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+def roofline(
+    *,
+    flops_per_chip: float,
+    hbm_bytes_per_chip: float,
+    wire_bytes_per_chip: float,
+    n_chips: int,
+    model_flops_global: float,
+    ici_links: int = 1,
+) -> RooflineTerms:
+    compute_s = flops_per_chip / PEAK_BF16_FLOPS
+    memory_s = hbm_bytes_per_chip / HBM_BW
+    collective_s = wire_bytes_per_chip / (ICI_BW_PER_LINK * ici_links)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    total_hlo_flops = flops_per_chip * n_chips
+    frac = model_flops_global / total_hlo_flops if total_hlo_flops else 0.0
+    return RooflineTerms(
+        flops_per_chip=flops_per_chip,
+        hbm_bytes_per_chip=hbm_bytes_per_chip,
+        wire_bytes_per_chip=wire_bytes_per_chip,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops_global,
+        useful_flops_frac=frac,
+    )
+
+
+def model_flops_for_cell(cfg, shape, n_active_params: int) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for a forward-only cell
+    (prefill), 2·N per token for decode."""
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active_params * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active_params * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active_params * shape.global_batch

@@ -1,0 +1,44 @@
+"""Architecture registry — one module per assigned architecture.
+
+``get_config(name)`` returns the full published config; ``get_smoke(name)``
+returns the reduced same-family config used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from ..models.common import ModelConfig
+
+ARCHS: tuple[str, ...] = (
+    "granite-moe-1b-a400m",
+    "mixtral-8x7b",
+    "chameleon-34b",
+    "qwen3-8b",
+    "gemma3-1b",
+    "minicpm3-4b",
+    "yi-9b",
+    "mamba2-2.7b",
+    "musicgen-medium",
+    "recurrentgemma-9b",
+)
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCHS}
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {', '.join(ARCHS)}")
+    return importlib.import_module(f".{_MODULES[name]}", __package__)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).smoke_config()
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS

@@ -1,0 +1,43 @@
+"""chameleon-34b — 48L d8192 64H (GQA kv=8) d_ff=22016, vocab 65536
+(early-fusion VQ image tokens share the text vocab).  [arXiv:2405.09818]
+
+The modality frontend is a STUB per the assignment: ``input_specs()``
+provides token ids (VQ codes are ordinary vocabulary entries)."""
+
+from ..models.common import LayerSpec, ModelConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-34b",
+        family="vlm",
+        d_model=8192,
+        n_layers=48,
+        vocab_size=65536,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=22016,
+        qk_norm=True,  # chameleon stabilises early fusion with qk-norm
+        stages=uniform_stages(48, LayerSpec("attn", "mlp")),
+        tie_embeddings=False,
+        frontend="vq_image",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="chameleon-smoke",
+        family="vlm",
+        d_model=64,
+        n_layers=2,
+        vocab_size=256,
+        n_heads=8,
+        n_kv_heads=2,
+        head_dim=8,
+        d_ff=128,
+        qk_norm=True,
+        stages=uniform_stages(2, LayerSpec("attn", "mlp")),
+        tie_embeddings=False,
+        frontend="vq_image",
+    )

@@ -1,0 +1,50 @@
+"""gemma3-1b — 26L d1152 4H (GQA kv=1, head_dim 256) d_ff=6912,
+vocab 262144, 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt]"""
+
+from ..models.common import LayerSpec, ModelConfig, patterned_stages
+
+_PATTERN = tuple([LayerSpec("local", "mlp")] * 5 + [LayerSpec("attn", "mlp")])
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b",
+        family="dense",
+        d_model=1152,
+        n_layers=26,
+        vocab_size=262144,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=6912,
+        qk_norm=True,
+        local_window=512,
+        rope_theta=10_000.0,  # local layers
+        global_rope_theta=1_000_000.0,  # global layers
+        stages=patterned_stages(26, _PATTERN),
+        tie_embeddings=True,
+        embed_scale=True,
+        notes="long_500k-admissible: only every 6th layer carries a full-length "
+        "KV cache (kv=1 head); local layers use 512-slot ring caches.",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-smoke",
+        family="dense",
+        d_model=64,
+        n_layers=6,
+        vocab_size=512,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=32,
+        d_ff=128,
+        qk_norm=True,
+        local_window=8,
+        global_rope_theta=1_000_000.0,
+        stages=patterned_stages(6, tuple([LayerSpec("local", "mlp")] * 5 + [LayerSpec("attn", "mlp")])),
+        tie_embeddings=True,
+        embed_scale=True,
+    )

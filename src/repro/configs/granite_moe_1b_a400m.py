@@ -1,0 +1,39 @@
+"""granite-moe-1b-a400m — 24L d1024 16H (GQA kv=8) d_ff=512/expert,
+vocab 49155, MoE 32 experts top-8.  [hf:ibm-granite/granite-3.0-1b-a400m-base]"""
+
+from ..models.common import LayerSpec, MoEConfig, ModelConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        d_model=1024,
+        n_layers=24,
+        vocab_size=49155,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=512,
+        moe=MoEConfig(n_experts=32, top_k=8),
+        stages=uniform_stages(24, LayerSpec("attn", "moe")),
+        tie_embeddings=True,
+        rope_theta=10_000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-smoke",
+        family="moe",
+        d_model=64,
+        n_layers=2,
+        vocab_size=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=32,
+        moe=MoEConfig(n_experts=4, top_k=2),
+        stages=uniform_stages(2, LayerSpec("attn", "moe")),
+        tie_embeddings=True,
+    )

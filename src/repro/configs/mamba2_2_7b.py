@@ -1,0 +1,33 @@
+"""mamba2-2.7b — 64L d2560 attention-free SSD (state-space duality),
+ssm_state=128, vocab 50280.  [arXiv:2405.21060]"""
+
+from ..models.common import LayerSpec, ModelConfig, SSDConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        d_model=2560,
+        n_layers=64,
+        vocab_size=50280,
+        d_ff=0,
+        ssd=SSDConfig(d_state=128, head_dim=64, expand=2, n_groups=1, chunk=256),
+        stages=uniform_stages(64, LayerSpec("ssd", "none")),
+        tie_embeddings=True,
+        notes="attention-free; long_500k runs with O(1) per-layer state.",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke",
+        family="ssm",
+        d_model=64,
+        n_layers=2,
+        vocab_size=128,
+        d_ff=0,
+        ssd=SSDConfig(d_state=16, head_dim=16, expand=2, n_groups=1, chunk=8),
+        stages=uniform_stages(2, LayerSpec("ssd", "none")),
+        tie_embeddings=True,
+    )

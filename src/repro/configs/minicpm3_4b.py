@@ -1,0 +1,44 @@
+"""minicpm3-4b — 62L d2560 40H (MHA, kv=40) d_ff=6400, vocab 73448, MLA.
+[hf:openbmb/MiniCPM3-4B]"""
+
+from ..models.common import LayerSpec, MLAConfig, ModelConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-4b",
+        family="dense",
+        d_model=2560,
+        n_layers=62,
+        vocab_size=73448,
+        n_heads=40,
+        n_kv_heads=40,
+        head_dim=96,  # qk_nope + qk_rope (bookkeeping; MLA dims below rule)
+        d_ff=6400,
+        mla=MLAConfig(
+            q_lora_rank=768,
+            kv_lora_rank=256,
+            qk_nope_dim=64,
+            qk_rope_dim=32,
+            v_head_dim=64,
+        ),
+        stages=uniform_stages(62, LayerSpec("mla", "mlp")),
+        tie_embeddings=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm3-smoke",
+        family="dense",
+        d_model=64,
+        n_layers=2,
+        vocab_size=128,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=24,
+        d_ff=96,
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+        stages=uniform_stages(2, LayerSpec("mla", "mlp")),
+        tie_embeddings=True,
+    )

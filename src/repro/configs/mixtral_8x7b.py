@@ -1,0 +1,43 @@
+"""mixtral-8x7b — 32L d4096 32H (GQA kv=8) d_ff=14336, vocab 32000,
+MoE 8 experts top-2, sliding-window attention (4096).  [arXiv:2401.04088]"""
+
+from ..models.common import LayerSpec, MoEConfig, ModelConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b",
+        family="moe",
+        d_model=4096,
+        n_layers=32,
+        vocab_size=32000,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        local_window=4096,  # SWA
+        moe=MoEConfig(n_experts=8, top_k=2),
+        stages=uniform_stages(32, LayerSpec("local", "moe")),
+        tie_embeddings=False,
+        rope_theta=1_000_000.0,
+        notes="SWA window 4096; treated as full-attention for the long_500k policy "
+        "(published config pairs SWA with a 32k trained span).",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-smoke",
+        family="moe",
+        d_model=64,
+        n_layers=2,
+        vocab_size=128,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=96,
+        local_window=8,
+        moe=MoEConfig(n_experts=4, top_k=2),
+        stages=uniform_stages(2, LayerSpec("local", "moe")),
+        tie_embeddings=False,
+    )

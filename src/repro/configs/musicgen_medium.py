@@ -1,0 +1,48 @@
+"""musicgen-medium — 48L d1536 24H (MHA) d_ff=6144 (GELU, 2-matrix MLP),
+decoder-only over EnCodec tokens: 4 codebooks x 2048 vocab, delay pattern.
+[arXiv:2306.05284]
+
+The EnCodec frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed codebook token ids (B, S, 4)."""
+
+from ..models.common import LayerSpec, ModelConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        d_model=1536,
+        n_layers=48,
+        vocab_size=2048,
+        n_heads=24,
+        n_kv_heads=24,
+        head_dim=64,
+        d_ff=6144,
+        mlp_variant="gelu",
+        n_codebooks=4,
+        codebook_vocab=2048,
+        stages=uniform_stages(48, LayerSpec("attn", "mlp")),
+        tie_embeddings=False,
+        frontend="encodec",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-smoke",
+        family="audio",
+        d_model=64,
+        n_layers=2,
+        vocab_size=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        mlp_variant="gelu",
+        n_codebooks=4,
+        codebook_vocab=64,
+        stages=uniform_stages(2, LayerSpec("attn", "mlp")),
+        tie_embeddings=False,
+        frontend="encodec",
+    )

@@ -1,0 +1,55 @@
+"""recurrentgemma-9b — 38L d4096 16H (MQA kv=1, head_dim 256) d_ff=12288,
+vocab 256000, RG-LRU + local attention in a 2:1 pattern (r, r, local).
+[arXiv:2402.19427]"""
+
+from ..models.common import LayerSpec, ModelConfig, RGLRUConfig, patterned_stages
+
+_PATTERN = (
+    LayerSpec("rglru", "mlp"),
+    LayerSpec("rglru", "mlp"),
+    LayerSpec("local", "mlp"),
+)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        d_model=4096,
+        n_layers=38,
+        vocab_size=256000,
+        n_heads=16,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=12288,
+        local_window=2048,
+        rglru=RGLRUConfig(lru_width=4096, conv_width=4),
+        stages=patterned_stages(38, _PATTERN),
+        tie_embeddings=True,
+        embed_scale=True,
+        notes="long_500k-admissible: RG-LRU state is O(1), local attention "
+        "carries a 2048-slot ring cache; no unbounded cache anywhere.",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-smoke",
+        family="hybrid",
+        d_model=64,
+        n_layers=3,
+        vocab_size=256,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=32,
+        d_ff=128,
+        local_window=8,
+        rglru=RGLRUConfig(lru_width=64, conv_width=4),
+        stages=patterned_stages(3, (
+            LayerSpec("rglru", "mlp"),
+            LayerSpec("rglru", "mlp"),
+            LayerSpec("local", "mlp"),
+        )),
+        tie_embeddings=True,
+        embed_scale=True,
+    )

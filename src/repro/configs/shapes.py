@@ -1,0 +1,68 @@
+"""Assigned input shapes and the (arch × shape) cell policy.
+
+    train_4k     seq 4,096   global_batch 256   lowers ``train_step``
+    prefill_32k  seq 32,768  global_batch 32    lowers ``prefill_step``
+    decode_32k   seq 32,768  global_batch 128   lowers ``serve_step`` (1 new
+                                                token, cache of seq_len)
+    long_500k    seq 524,288 global_batch 1     lowers ``serve_step``; only
+                                                for sub-quadratic archs
+
+The 40-cell grid = 10 archs × 4 shapes; ``live_cells()`` enumerates the 33
+runnable ones (long_500k is skipped for the 7 pure full-attention archs and
+the skip recorded — see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from . import ARCHS, get_config
+from ..models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | decode_long
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode_long"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for one cell."""
+    if shape.kind == "decode_long" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{cfg.name} carries a full-length KV cache on every layer"
+        )
+    return True, ""
+
+
+def live_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            if ok:
+                out.append((arch, sname))
+    return out
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                out.append((arch, sname, why))
+    return out

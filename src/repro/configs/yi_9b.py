@@ -1,0 +1,36 @@
+"""yi-9b — 48L d4096 32H (GQA kv=4) d_ff=11008, vocab 64000, llama arch.
+[arXiv:2403.04652]"""
+
+from ..models.common import LayerSpec, ModelConfig, uniform_stages
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-9b",
+        family="dense",
+        d_model=4096,
+        n_layers=48,
+        vocab_size=64000,
+        n_heads=32,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=11008,
+        stages=uniform_stages(48, LayerSpec("attn", "mlp")),
+        tie_embeddings=False,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-smoke",
+        family="dense",
+        d_model=64,
+        n_layers=2,
+        vocab_size=128,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=16,
+        d_ff=112,
+        stages=uniform_stages(2, LayerSpec("attn", "mlp")),
+        tie_embeddings=False,
+    )

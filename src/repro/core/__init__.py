@@ -1,0 +1,38 @@
+"""repro.core — the paper's contribution: an mpfluid-style parallel I/O
+kernel (lock-free shared-file hyperslab writes, collective buffering,
+topology-carrying shadow-paged snapshots, offline sliding window, and
+time-reversible steering), plus the on-device collective planner."""
+
+from .aggregation import AggregationConfig, CollectiveWriter, WriteRequest, WriteStats
+from .checkpoint import AsyncCheckpointer, CheckpointManager, SaveResult, split_rows
+from .container import CorruptFileError, DatasetMeta, TH5Error, TH5File
+from .hyperslab import Extent, SlabPlan, align_up, exclusive_prefix_sum, plan_bytes, plan_rows, validate_plan
+from .sliding_window import TreeWindow, lod_stride_for_budget, read_lod
+from .steering import BranchManager, LineageEntry
+
+__all__ = [
+    "AggregationConfig",
+    "AsyncCheckpointer",
+    "BranchManager",
+    "CheckpointManager",
+    "CollectiveWriter",
+    "CorruptFileError",
+    "DatasetMeta",
+    "Extent",
+    "LineageEntry",
+    "SaveResult",
+    "SlabPlan",
+    "TH5Error",
+    "TH5File",
+    "TreeWindow",
+    "WriteRequest",
+    "WriteStats",
+    "align_up",
+    "exclusive_prefix_sum",
+    "lod_stride_for_budget",
+    "plan_bytes",
+    "plan_rows",
+    "read_lod",
+    "split_rows",
+    "validate_plan",
+]

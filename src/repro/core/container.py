@@ -1,0 +1,536 @@
+"""TH5 — a self-describing, shadow-paged container file (the HDF5 role, §3).
+
+No h5py exists in this environment, and the brief requires every substrate to
+be built, so TH5 re-implements the slice of HDF5 semantics the paper relies
+on, tuned for the paper's access pattern:
+
+  * **data model**: groups / datasets / attributes in a rooted tree
+    (``/common``, ``/simulation/<step>/...`` — Fig. 4);
+  * **storage model**: each dataset is "a header followed by the actual data
+    in form of a linear array" — here the header lives in a central metadata
+    index and the data is one contiguous aligned extent, so a rank's
+    hyperslab write is a single ``pwrite`` with **no locking**;
+  * **self-description / portability**: dtypes are stored as numpy dtype
+    strings with explicit endianness (``<f4`` etc.); readers byteswap when
+    the host differs — the paper's HDF5 portability argument;
+  * **parallel semantics**: dataset *creation* is collective (a single
+    planner allocates extents — mirrors "group structure as well as every
+    dataset has to be created collectively"), *writes* are independent
+    per-rank ``os.pwrite`` calls into disjoint extents;
+  * **crash consistency / TRS**: the file is *shadow-paged*.  A write
+    session appends data extents and a fresh JSON metadata index, then flips
+    the 512-byte superblock last (CRC-protected).  A crash mid-session
+    leaves the previous superblock → previous index → all previous
+    snapshots intact.  This is what makes the paper's time-reversible
+    steering cheap: every committed generation remains addressable.
+
+Layout::
+
+    [ superblock 512 B ][ pad to block ][ data extents ... ][ index JSON ]
+                                         ^ aligned to block_size (§5.2)
+
+The superblock is rewritten in place on commit; everything else is
+append-only.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .hyperslab import SlabPlan, align_up
+
+MAGIC = b"TH5\x89"
+VERSION = 1
+SUPERBLOCK_SIZE = 512
+_SB_FMT = "<4sIIQQQQdI"  # magic, version, block_size, index_off, index_len, file_end, generation, created, flags
+_SB_FIXED = struct.calcsize(_SB_FMT)
+DEFAULT_BLOCK = 4096
+
+ROOT = "/"
+
+
+class TH5Error(RuntimeError):
+    pass
+
+
+class CorruptFileError(TH5Error):
+    pass
+
+
+def _norm(path: str) -> str:
+    if not path.startswith("/"):
+        path = "/" + path
+    while "//" in path:
+        path = path.replace("//", "/")
+    if len(path) > 1 and path.endswith("/"):
+        path = path[:-1]
+    return path
+
+
+def _parents(path: str) -> list[str]:
+    parts = [p for p in path.split("/") if p]
+    out, cur = ["/"], ""
+    for p in parts[:-1]:
+        cur += "/" + p
+        out.append(cur)
+    return out
+
+
+@dataclass
+class DatasetMeta:
+    """The dataset 'header' — kept in the central index (self-description)."""
+
+    dtype: str  # numpy dtype string with explicit byte order, e.g. "<f4"
+    shape: tuple[int, ...]
+    offset: int  # absolute file offset of the linear data array
+    nbytes: int
+    attrs: dict[str, Any] = field(default_factory=dict)
+    crc32: int | None = None  # optional payload checksum (checkpoints: on)
+    generation: int = 0
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "dtype": self.dtype,
+            "shape": list(self.shape),
+            "offset": self.offset,
+            "nbytes": self.nbytes,
+            "attrs": self.attrs,
+            "crc32": self.crc32,
+            "generation": self.generation,
+        }
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "DatasetMeta":
+        return DatasetMeta(
+            dtype=d["dtype"],
+            shape=tuple(d["shape"]),
+            offset=int(d["offset"]),
+            nbytes=int(d["nbytes"]),
+            attrs=dict(d.get("attrs", {})),
+            crc32=d.get("crc32"),
+            generation=int(d.get("generation", 0)),
+        )
+
+    @property
+    def np_dtype(self) -> np.dtype:
+        try:
+            return np.dtype(self.dtype)
+        except TypeError:
+            import ml_dtypes  # registers bfloat16/float8 names  # noqa: F401
+
+            return np.dtype(self.dtype)
+
+    @property
+    def row_bytes(self) -> int:
+        if len(self.shape) == 0:
+            return self.np_dtype.itemsize
+        per_row = int(np.prod(self.shape[1:], dtype=np.int64)) if len(self.shape) > 1 else 1
+        return per_row * self.np_dtype.itemsize
+
+
+@dataclass
+class _Index:
+    groups: dict[str, dict[str, Any]] = field(default_factory=dict)  # path -> attrs
+    datasets: dict[str, DatasetMeta] = field(default_factory=dict)
+    generation: int = 0
+    lineage: dict[str, Any] = field(default_factory=dict)  # TRS parent info
+
+    def to_bytes(self) -> bytes:
+        doc = {
+            "groups": self.groups,
+            "datasets": {k: v.to_json() for k, v in self.datasets.items()},
+            "generation": self.generation,
+            "lineage": self.lineage,
+        }
+        payload = json.dumps(doc, separators=(",", ":")).encode("utf-8")
+        crc = zlib.crc32(payload) & 0xFFFFFFFF
+        return struct.pack("<I", crc) + payload
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "_Index":
+        if len(raw) < 4:
+            raise CorruptFileError("index truncated")
+        (crc,) = struct.unpack_from("<I", raw, 0)
+        payload = raw[4:]
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+            raise CorruptFileError("index CRC mismatch")
+        doc = json.loads(payload.decode("utf-8"))
+        return _Index(
+            groups={_norm(k): v for k, v in doc.get("groups", {}).items()},
+            datasets={
+                _norm(k): DatasetMeta.from_json(v) for k, v in doc.get("datasets", {}).items()
+            },
+            generation=int(doc.get("generation", 0)),
+            lineage=dict(doc.get("lineage", {})),
+        )
+
+
+def _pack_superblock(
+    block_size: int, index_off: int, index_len: int, file_end: int, generation: int, created: float
+) -> bytes:
+    body = struct.pack(
+        _SB_FMT, MAGIC, VERSION, block_size, index_off, index_len, file_end, generation, created, 0
+    )
+    crc = zlib.crc32(body) & 0xFFFFFFFF
+    blob = body + struct.pack("<I", crc)
+    return blob + b"\x00" * (SUPERBLOCK_SIZE - len(blob))
+
+
+def _unpack_superblock(raw: bytes) -> tuple[int, int, int, int, int, float]:
+    if len(raw) < _SB_FIXED + 4:
+        raise CorruptFileError("superblock truncated")
+    body = raw[:_SB_FIXED]
+    (crc_stored,) = struct.unpack_from("<I", raw, _SB_FIXED)
+    if (zlib.crc32(body) & 0xFFFFFFFF) != crc_stored:
+        raise CorruptFileError("superblock CRC mismatch")
+    magic, version, block_size, index_off, index_len, file_end, generation, created, _flags = (
+        struct.unpack(_SB_FMT, body)
+    )
+    if magic != MAGIC:
+        raise CorruptFileError(f"bad magic {magic!r}")
+    if version != VERSION:
+        raise CorruptFileError(f"unsupported version {version}")
+    return block_size, index_off, index_len, file_end, generation, created
+
+
+class TH5File:
+    """A TH5 container.  Thread-safe for concurrent slab writes (no locks on
+    the data path — extents are disjoint; only allocation takes a mutex,
+    mirroring the collective create / independent write split)."""
+
+    def __init__(self, path: str, fd: int, mode: str, block_size: int, index: _Index, file_end: int, created: float):
+        self.path = path
+        self._fd = fd
+        self.mode = mode
+        self.block_size = block_size
+        self._index = index
+        self._file_end = file_end
+        self._created = created
+        self._alloc_lock = threading.Lock()
+        self._dirty = False
+        self._closed = False
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @classmethod
+    def create(cls, path: str, block_size: int = DEFAULT_BLOCK, lineage: Mapping[str, Any] | None = None) -> "TH5File":
+        fd = os.open(path, os.O_RDWR | os.O_CREAT | os.O_TRUNC, 0o644)
+        created = float(os.fstat(fd).st_ctime)
+        index = _Index(groups={ROOT: {}}, lineage=dict(lineage or {}))
+        file_end = align_up(SUPERBLOCK_SIZE, block_size)
+        f = cls(path, fd, "r+", block_size, index, file_end, created)
+        f._commit()  # generation 0: empty tree, valid superblock from the start
+        return f
+
+    @classmethod
+    def open(cls, path: str, mode: str = "r") -> "TH5File":
+        flags = os.O_RDONLY if mode == "r" else os.O_RDWR
+        fd = os.open(path, flags)
+        try:
+            raw = os.pread(fd, SUPERBLOCK_SIZE, 0)
+            block_size, idx_off, idx_len, file_end, generation, created = _unpack_superblock(raw)
+            idx_raw = os.pread(fd, idx_len, idx_off)
+            if len(idx_raw) != idx_len:
+                raise CorruptFileError("index truncated (short read)")
+            index = _Index.from_bytes(idx_raw)
+            if index.generation != generation:
+                raise CorruptFileError("index/superblock generation mismatch")
+        except Exception:
+            os.close(fd)
+            raise
+        return cls(path, fd, mode, block_size, index, file_end, created)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        if self._dirty and self.mode != "r":
+            self._commit()
+        os.close(self._fd)
+        self._closed = True
+
+    def __enter__(self) -> "TH5File":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def fd(self) -> int:
+        """Raw fd for external slab writers (other threads / processes)."""
+        return self._fd
+
+    @property
+    def generation(self) -> int:
+        return self._index.generation
+
+    @property
+    def lineage(self) -> dict[str, Any]:
+        return dict(self._index.lineage)
+
+    # -- tree ----------------------------------------------------------------
+
+    def create_group(self, path: str, attrs: Mapping[str, Any] | None = None) -> None:
+        self._check_writable()
+        path = _norm(path)
+        for parent in _parents(path):
+            self._index.groups.setdefault(parent, {})
+        g = self._index.groups.setdefault(path, {})
+        if attrs:
+            g.update(attrs)
+        self._dirty = True
+
+    def groups(self) -> list[str]:
+        return sorted(self._index.groups)
+
+    def datasets(self) -> list[str]:
+        return sorted(self._index.datasets)
+
+    def group_attrs(self, path: str) -> dict[str, Any]:
+        path = _norm(path)
+        if path not in self._index.groups:
+            raise KeyError(path)
+        return dict(self._index.groups[path])
+
+    def set_group_attrs(self, path: str, attrs: Mapping[str, Any]) -> None:
+        self._check_writable()
+        path = _norm(path)
+        if path not in self._index.groups:
+            raise KeyError(path)
+        self._index.groups[path].update(attrs)
+        self._dirty = True
+
+    def children(self, path: str) -> list[str]:
+        path = _norm(path)
+        prefix = path if path.endswith("/") else path + "/"
+        out = set()
+        for p in list(self._index.groups) + list(self._index.datasets):
+            if p.startswith(prefix):
+                out.add(prefix + p[len(prefix) :].split("/")[0])
+        return sorted(out)
+
+    def exists(self, path: str) -> bool:
+        path = _norm(path)
+        return path in self._index.groups or path in self._index.datasets
+
+    def drop_subtree(self, path: str) -> None:
+        """Remove a group subtree from the *index* (data extents stay on
+        disk — shadow paging; prior committed generations are unaffected)."""
+        self._check_writable()
+        path = _norm(path)
+        prefix = path + "/"
+        for d in [k for k in self._index.datasets if k == path or k.startswith(prefix)]:
+            del self._index.datasets[d]
+        for g in [k for k in self._index.groups if k == path or k.startswith(prefix)]:
+            del self._index.groups[g]
+        self._dirty = True
+
+    def meta(self, name: str) -> DatasetMeta:
+        name = _norm(name)
+        try:
+            return self._index.datasets[name]
+        except KeyError:
+            raise KeyError(f"no dataset {name!r} in {self.path}") from None
+
+    # -- dataset allocation (the 'collective create') --------------------------
+
+    def create_dataset(
+        self,
+        name: str,
+        shape: Sequence[int],
+        dtype: Any,
+        attrs: Mapping[str, Any] | None = None,
+        align: bool = True,
+    ) -> DatasetMeta:
+        """Allocate a dataset extent.  Collective in the paper's sense: exactly
+        one planner (rank 0 / the host driver) calls this; the returned offsets
+        are then broadcast to all writers."""
+        self._check_writable()
+        name = _norm(name)
+        if name in self._index.datasets:
+            raise TH5Error(f"dataset exists: {name}")
+        dt = np.dtype(dtype)
+        # force explicit byte order in the stored string (portability, §3);
+        # extension dtypes (bfloat16 via ml_dtypes) stringify as opaque
+        # '<V2' — store the registered NAME so readers reconstruct them
+        dt_str = dt.name if dt.str.lstrip("<>=|").startswith("V") else dt.str
+        shape = tuple(int(s) for s in shape)
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
+        with self._alloc_lock:
+            off = align_up(self._file_end, self.block_size) if align else self._file_end
+            self._file_end = off + nbytes
+        meta = DatasetMeta(
+            dtype=dt_str,
+            shape=shape,
+            offset=off,
+            nbytes=nbytes,
+            attrs=dict(attrs or {}),
+            generation=self._index.generation + 1,
+        )
+        for parent in _parents(name):
+            self._index.groups.setdefault(parent, {})
+        self._index.datasets[name] = meta
+        self._dirty = True
+        return meta
+
+    def create_slab_dataset(
+        self, name: str, plan: SlabPlan, dtype: Any, cols: int | None = None, attrs: Mapping[str, Any] | None = None
+    ) -> DatasetMeta:
+        """Create the 2-D row-per-grid dataset for a :class:`SlabPlan`."""
+        dt = np.dtype(dtype)
+        if cols is None:
+            if plan.row_bytes % dt.itemsize:
+                raise TH5Error("row_bytes not a multiple of dtype size")
+            cols = plan.row_bytes // dt.itemsize
+        shape = (plan.total_rows, cols) if cols > 1 else (plan.total_rows,)
+        a = dict(attrs or {})
+        a.setdefault("row_starts", [int(x) for x in plan.row_starts])
+        a.setdefault("row_counts", [int(x) for x in plan.row_counts])
+        return self.create_dataset(name, shape, dt, attrs=a)
+
+    # -- the lock-free data path ----------------------------------------------
+
+    def write_slab(self, name_or_meta: str | DatasetMeta, byte_offset: int, data: np.ndarray | bytes) -> int:
+        """Independent write of one rank's hyperslab.  Thread-safe, lock-free:
+        pwrite at (dataset base + byte_offset).  Returns bytes written."""
+        self._check_writable()
+        meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
+        buf = data.tobytes() if isinstance(data, np.ndarray) else bytes(data)
+        if byte_offset < 0 or byte_offset + len(buf) > meta.nbytes:
+            raise TH5Error(
+                f"slab [{byte_offset}, {byte_offset + len(buf)}) outside dataset of {meta.nbytes} B"
+            )
+        return pwrite_full(self._fd, buf, meta.offset + byte_offset)
+
+    def write_rows(self, name_or_meta: str | DatasetMeta, row_start: int, array: np.ndarray) -> int:
+        meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
+        arr = np.ascontiguousarray(array, dtype=meta.np_dtype)
+        return self.write_slab(meta, row_start * meta.row_bytes, arr)
+
+    def write_full(self, name_or_meta: str | DatasetMeta, array: np.ndarray, checksum: bool = False) -> int:
+        meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
+        arr = np.ascontiguousarray(array, dtype=meta.np_dtype)
+        if arr.nbytes != meta.nbytes:
+            raise TH5Error(f"size mismatch: {arr.nbytes} != {meta.nbytes}")
+        n = self.write_slab(meta, 0, arr)
+        if checksum:
+            meta.crc32 = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+            self._dirty = True
+        return n
+
+    def seal_checksum(self, name: str) -> int:
+        """Compute+store the payload CRC after all slabs landed (checkpoints)."""
+        self._check_writable()
+        meta = self.meta(name)
+        raw = os.pread(self._fd, meta.nbytes, meta.offset)
+        meta.crc32 = zlib.crc32(raw) & 0xFFFFFFFF
+        self._dirty = True
+        return meta.crc32
+
+    # -- reads -----------------------------------------------------------------
+
+    def read(self, name: str, verify: bool = False) -> np.ndarray:
+        meta = self.meta(name)
+        raw = os.pread(self._fd, meta.nbytes, meta.offset)
+        if len(raw) != meta.nbytes:
+            raise CorruptFileError(f"short read on {name}")
+        if verify and meta.crc32 is not None:
+            if (zlib.crc32(raw) & 0xFFFFFFFF) != meta.crc32:
+                raise CorruptFileError(f"payload CRC mismatch on {name}")
+        arr = np.frombuffer(raw, dtype=meta.np_dtype)
+        # self-description: byteswap to native if the file was foreign-endian
+        if arr.dtype.byteorder not in ("|", "=") and not arr.dtype.isnative:
+            arr = arr.astype(arr.dtype.newbyteorder("="))
+        return arr.reshape(meta.shape)
+
+    def read_rows(self, name: str, row_start: int, n_rows: int) -> np.ndarray:
+        """Partial read of contiguous rows — one hyperslab."""
+        meta = self.meta(name)
+        nrows_total = meta.shape[0] if meta.shape else 1
+        if row_start < 0 or row_start + n_rows > nrows_total:
+            raise TH5Error("row range out of bounds")
+        raw = os.pread(self._fd, n_rows * meta.row_bytes, meta.offset + row_start * meta.row_bytes)
+        arr = np.frombuffer(raw, dtype=meta.np_dtype)
+        if not arr.dtype.isnative:
+            arr = arr.astype(arr.dtype.newbyteorder("="))
+        return arr.reshape((n_rows,) + tuple(meta.shape[1:]))
+
+    def read_row_indices(self, name: str, indices: Iterable[int]) -> np.ndarray:
+        """Gather arbitrary rows (sliding-window reads). Coalesces contiguous
+        runs into single preads."""
+        meta = self.meta(name)
+        idx = np.asarray(list(indices), dtype=np.int64)
+        out = np.empty((len(idx),) + tuple(meta.shape[1:]), dtype=meta.np_dtype.newbyteorder("="))
+        if len(idx) == 0:
+            return out
+        order = np.argsort(idx, kind="stable")
+        sorted_idx = idx[order]
+        run_start = 0
+        pos = 0
+        while run_start < len(sorted_idx):
+            run_end = run_start + 1
+            while run_end < len(sorted_idx) and sorted_idx[run_end] == sorted_idx[run_end - 1] + 1:
+                run_end += 1
+            n = run_end - run_start
+            block = self.read_rows(name, int(sorted_idx[run_start]), n)
+            out[order[pos : pos + n]] = block
+            pos += n
+            run_start = run_end
+        return out
+
+    # -- commit (the shadow-page flip) ------------------------------------------
+
+    def commit(self) -> int:
+        """Durably publish the current tree: append index, flip superblock.
+        Returns the new generation."""
+        self._check_writable()
+        return self._commit()
+
+    def _commit(self) -> int:
+        self._index.generation += 1
+        blob = self._index.to_bytes()
+        with self._alloc_lock:
+            idx_off = align_up(self._file_end, self.block_size)
+            self._file_end = idx_off + len(blob)
+        pwrite_full(self._fd, blob, idx_off)
+        os.fsync(self._fd)  # order: data+index durable before the flip
+        sb = _pack_superblock(
+            self.block_size, idx_off, len(blob), self._file_end, self._index.generation, self._created
+        )
+        pwrite_full(self._fd, sb, 0)
+        os.fsync(self._fd)
+        self._dirty = False
+        return self._index.generation
+
+    def _check_writable(self) -> None:
+        if self._closed:
+            raise TH5Error("file closed")
+        if self.mode == "r":
+            raise TH5Error("file opened read-only")
+
+
+def pwrite_full(fd: int, buf: bytes, offset: int) -> int:
+    """pwrite loop (pwrite may be short on some filesystems)."""
+    mv = memoryview(buf)
+    total = 0
+    while total < len(mv):
+        n = os.pwrite(fd, mv[total:], offset + total)
+        if n <= 0:
+            raise OSError("pwrite returned %d" % n)
+        total += n
+    return total
+
+
+def open_slab_writer(path: str) -> int:
+    """Open an existing TH5 file for raw slab writes from a separate process
+    (the multi-process bandwidth benchmarks).  Returns a raw fd; the caller
+    pwrite()s into extents allocated by the planner process and must NOT
+    touch the superblock/index."""
+    return os.open(path, os.O_RDWR)

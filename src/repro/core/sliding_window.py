@@ -1,0 +1,108 @@
+"""Offline sliding window — level-of-detail partial reads (paper §2.3 / §3.1).
+
+Online, the neighbourhood server walks the l-grid tree from the root and
+keeps descending while the selected grids fit the bandwidth budget.  The
+HDF5/TH5 snapshot stores the same tree (``grid_property`` rows, root at row
+0, children via ``subgrid_uid``), so the *identical* traversal runs over a
+file: pick the finest resolution whose grid count fits the budget, restrict
+to grids intersecting the user's window, gather only those rows.
+
+Two front-ends:
+
+  * :class:`TreeWindow` — the CFD/space-tree variant, faithful to the paper
+    (per-row bounding boxes, ``subgrid_uid`` fan-out).
+  * :func:`read_lod` — the LM-checkpoint variant: strided (every k-th row)
+    windowed reads of any 2-D dataset, used by eval/monitoring to inspect a
+    parameter or optimizer moment without loading the full tensor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .container import TH5File
+
+
+def read_lod(
+    f: TH5File,
+    name: str,
+    stride: int = 1,
+    row_window: tuple[int, int] | None = None,
+) -> np.ndarray:
+    """Windowed, decimated rows: rows[lo:hi:stride].  The paper's 'every
+    second, third, fourth ... data point will be dismissed', on a file."""
+    meta = f.meta(name)
+    n_rows = meta.shape[0] if meta.shape else 1
+    lo, hi = row_window if row_window is not None else (0, n_rows)
+    lo, hi = max(0, lo), min(n_rows, hi)
+    idx = range(lo, hi, max(1, stride))
+    return f.read_row_indices(name, idx)
+
+
+def lod_stride_for_budget(n_rows_in_window: int, max_rows: int) -> int:
+    """Smallest stride keeping the transfer under budget (constant-data-rate
+    guarantee of the sliding window)."""
+    if n_rows_in_window <= max_rows:
+        return 1
+    return -(-n_rows_in_window // max_rows)  # ceil division
+
+
+@dataclass
+class TreeWindow:
+    """Space-tree sliding window over snapshot topology datasets.
+
+    ``grid_uid``      (n,)  uint64 UIDs (row index == grid, root at row 0)
+    ``subgrid_uid``   (n, r) uint64 child UIDs per grid (0 == no child)
+    ``bounding_box``  (n, 2*dim) float (min..., max...) physical extents
+    """
+
+    grid_uid: np.ndarray
+    subgrid_uid: np.ndarray
+    bounding_box: np.ndarray
+
+    def __post_init__(self) -> None:
+        self._row_of: dict[int, int] = {int(u): i for i, u in enumerate(self.grid_uid)}
+        self.dim = self.bounding_box.shape[1] // 2
+
+    @classmethod
+    def from_file(cls, f: TH5File, step_group: str) -> "TreeWindow":
+        return cls(
+            grid_uid=f.read(f"{step_group}/topology/grid_property"),
+            subgrid_uid=f.read(f"{step_group}/topology/subgrid_uid"),
+            bounding_box=f.read(f"{step_group}/topology/bounding_box"),
+        )
+
+    def intersects(self, row: int, wmin: np.ndarray, wmax: np.ndarray) -> bool:
+        bb = self.bounding_box[row]
+        gmin, gmax = bb[: self.dim], bb[self.dim :]
+        return bool(np.all(gmin <= wmax) and np.all(gmax >= wmin))
+
+    def children(self, row: int) -> list[int]:
+        kids = self.subgrid_uid[row]
+        return [self._row_of[int(u)] for u in kids if int(u) != 0 and int(u) in self._row_of]
+
+    def select(self, wmin, wmax, max_grids: int) -> list[int]:
+        """Paper traversal: start at root (row 0); per level, replace grids by
+        their children while (a) they intersect the window and (b) the next
+        level still fits ``max_grids``.  Returns row indices at the finest
+        admissible resolution."""
+        wmin = np.asarray(wmin, dtype=float)
+        wmax = np.asarray(wmax, dtype=float)
+        frontier = [0] if self.intersects(0, wmin, wmax) else []
+        while True:
+            nxt: list[int] = []
+            complete = True
+            for row in frontier:
+                kids = [k for k in self.children(row) if self.intersects(k, wmin, wmax)]
+                if not kids:
+                    complete = False
+                    break
+                nxt.extend(kids)
+            if not complete or not nxt or len(nxt) > max_grids:
+                return frontier
+            frontier = nxt
+
+    def gather(self, f: TH5File, dataset: str, rows: list[int]) -> np.ndarray:
+        return f.read_row_indices(dataset, rows)

@@ -1,0 +1,138 @@
+"""Pallas TPU flash attention (causal, optional sliding window).
+
+Online-softmax tiling: grid = (batch·heads, q_blocks, kv_blocks) with the
+kv dimension innermost (sequential on TPU), so the output block plus the
+running (max, denom) statistics live in VMEM scratch across kv iterations.
+Block sizes default to 128×128 — MXU-aligned (128 lanes) and a
+(128·d_head) VMEM working set well under the ~16 MiB budget:
+q/k/v blocks 3·128·128·4 B ≈ 200 KiB + 128×128 f32 scores ≈ 64 KiB.
+
+TARGET is TPU (Mosaic); this container validates via ``interpret=True``
+against ``ref.py`` (``tests/test_kernels_attention.py`` sweeps shapes,
+dtypes, and window sizes).  The XLA-path model uses the same math in
+``models/attention.py``; ``use_pallas=True`` routes through here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # (1, blk_q, d), (1, blk_k, d), (1, blk_k, d)
+    o_ref,  # (1, blk_q, d)
+    m_scr, l_scr, acc_scr,  # VMEM scratch: (blk_q,), (blk_q,), (blk_q, d)
+    *,
+    scale: float,
+    blk_q: int,
+    blk_k: int,
+    window: int,
+    seq_q: int,
+    seq_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    # causal (+ window) mask — also masks column padding when seq_k % blk_k
+    mask = (k_pos <= q_pos) & (k_pos < seq_k) & (q_pos < seq_q)
+    if window > 0:
+        mask &= k_pos > q_pos - window
+
+    # zero padded key rows: OOB block reads are undefined and 0·NaN = NaN
+    # would otherwise leak through the p·v matmul
+    col_valid = (ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_k, 1), 0)) < seq_k
+    q = q_ref[0].astype(jnp.float32)
+    k = jnp.where(col_valid, k_ref[0].astype(jnp.float32), 0.0)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # fully-masked rows (padding, or pre-window) keep m == NEG_INF; guard the
+    # subtractions so they produce 0-weight rows instead of NaN
+    m_safe = jnp.where(m_cur <= NEG_INF / 2, 0.0, m_cur)
+    alpha = jnp.where(m_cur <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    v = jnp.where(col_valid, v_ref[0].astype(jnp.float32), 0.0)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "blk_q", "blk_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (BH, S, D)
+    k: jax.Array,  # (BH, T, D)
+    v: jax.Array,  # (BH, T, D)
+    *,
+    window: int = 0,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal flash attention over flattened (batch·heads) leading dim."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    blk_q = min(blk_q, max(S, 8))
+    blk_k = min(blk_k, max(T, 8))
+    nq = -(-S // blk_q)
+    nk = -(-T // blk_k)
+    scale = 1.0 / np.sqrt(D)
+
+    grid = (BH, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            blk_q=blk_q,
+            blk_k=blk_k,
+            window=window,
+            seq_q=S,
+            seq_k=T,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0) -> jax.Array:
+    """Exact causal attention.  q: (BH, S, D); k/v: (BH, T, D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: d-grid → linear write-buffer pack (paper §3.2).
+
+    "For optimised performance, a one to one mapping of data from the code
+     to the HDF5 file is desirable.  For this purpose, a linear write
+     buffer is initialised on each rank in which the grid data is copied."
+
+On the TPU the copy is the halo-strip + flatten of every resident d-grid
+into the rank's contiguous staging buffer (row == grid — the file layout),
+which then DMAs to the host in one piece.  Grid dimension = d-grids; per
+block: read the (n+2)² halo-padded field, write the n² interior row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(p_ref, o_ref):
+    p = p_ref[0]  # (n+2, n+2)
+    o_ref[0] = p[1:-1, 1:-1].reshape(o_ref.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_grids(p: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """(G, n+2, n+2) halo-padded grids → (G, n·n) linear rows."""
+    G, np2, _ = p.shape
+    n = np2 - 2
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(G,),
+        in_specs=[pl.BlockSpec((1, np2, np2), lambda g: (g, 0, 0))],
+        out_specs=pl.BlockSpec((1, n * n), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, n * n), p.dtype),
+        interpret=interpret,
+    )(p)
+
+
+def pack_grids_ref(p: jax.Array) -> jax.Array:
+    G, np2, _ = p.shape
+    n = np2 - 2
+    return p[:, 1:-1, 1:-1].reshape(G, n * n)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD chunk kernel (mirrors models/ssd math)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, da, dt, b, c, s_in):
+    """x (B,Q,H,P); da/dt (B,Q,H); b/c (B,Q,N); s_in (B,H,P,N) →
+    (y (B,Q,H,P), s_out (B,H,P,N))."""
+    x32 = x.astype(jnp.float32)
+    da = da.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    s_in = s_in.astype(jnp.float32)
+    B, Q, H, P = x.shape
+
+    cum = jnp.cumsum(da, axis=1)  # (B,Q,H)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]  # (B,l,s,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bln,bsn->bls", c32, b32)
+    M = cb[..., None] * L * dt[:, None, :, :]  # (B,l,s,H)
+    y_intra = jnp.einsum("blsh,bshp->blhp", M, x32)
+    y_in = jnp.einsum("bln,bhpn->blhp", c32, s_in) * jnp.exp(cum)[..., None]
+    w = jnp.exp(cum[:, -1:, :] - cum) * dt  # (B,Q,H)
+    s_new = jnp.einsum("bqhp,bqn->bhpn", x32 * w[..., None], b32)
+    s_out = s_in * jnp.exp(cum[:, -1])[..., None, None] + s_new
+    return (y_intra + y_in).astype(x.dtype), s_out

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the stencil kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jacobi_sweep_ref(p, f, h2, omega=1.0):
+    p32 = p.astype(jnp.float32)
+    f32 = f.astype(jnp.float32)
+    new = 0.25 * (
+        p32[:, :-2, 1:-1] + p32[:, 2:, 1:-1] + p32[:, 1:-1, :-2] + p32[:, 1:-1, 2:] - h2 * f32
+    )
+    return ((1.0 - omega) * p32[:, 1:-1, 1:-1] + omega * new).astype(p.dtype)
+
+
+def residual_ref(p, f, h2):
+    p32 = p.astype(jnp.float32)
+    f32 = f.astype(jnp.float32)
+    lap = (
+        p32[:, :-2, 1:-1]
+        + p32[:, 2:, 1:-1]
+        + p32[:, 1:-1, :-2]
+        + p32[:, 1:-1, 2:]
+        - 4.0 * p32[:, 1:-1, 1:-1]
+    ) / h2
+    return (f32 - lap).astype(p.dtype)

@@ -1,0 +1,59 @@
+"""Baseline dry-run sweep driver: every live (arch × shape) cell × both
+production meshes, one subprocess each (isolates compiles, caps memory),
+skipping cells whose JSON already exists.
+
+    PYTHONPATH=src python -m repro.launch.sweep [--mesh pod|multipod|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+from ..configs import ARCHS
+from ..configs.shapes import SHAPES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = [
+        (arch, shape, mesh)
+        for mesh in meshes
+        for arch in ARCHS
+        for shape in SHAPES
+    ]
+    t0 = time.time()
+    done = 0
+    for arch, shape, mesh in cells:
+        name = f"{arch}__{shape}__{mesh}__{args.tag}"
+        path = os.path.join(args.out, name + ".json")
+        if os.path.exists(path):
+            done += 1
+            continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh,
+            "--out", args.out, "--tag", args.tag,
+        ]
+        t1 = time.time()
+        proc = subprocess.run(cmd, capture_output=True, text=True)
+        done += 1
+        tail = (proc.stdout.strip().splitlines() or ["?"])[-1]
+        print(
+            f"[{done}/{len(cells)}] {name}: rc={proc.returncode} "
+            f"({time.time()-t1:.0f}s, total {time.time()-t0:.0f}s) {tail}",
+            flush=True,
+        )
+    print("sweep complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Model configuration covering the 10 assigned architectures.
+
+One ``ModelConfig`` describes any of the families (dense / MoE / MLA / SSM /
+RG-LRU hybrid / VLM / audio backbones).  The layer stack is expressed as
+**stages**: a stage is a repeated pattern of layer specs; the forward pass
+scans over the repeats with stacked parameters, so the lowered HLO stays
+compact (one body per distinct pattern) even for 62-layer models on a
+512-device mesh.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Literal
+
+Mixer = Literal["attn", "local", "mla", "ssd", "rglru"]
+Ffn = Literal["mlp", "moe", "none"]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: Mixer = "attn"
+    ffn: Ffn = "mlp"
+
+
+@dataclass(frozen=True)
+class Stage:
+    repeat: int
+    pattern: tuple[LayerSpec, ...]
+
+    @property
+    def n_layers(self) -> int:
+        return self.repeat * len(self.pattern)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_dim: int = 64
+    qk_rope_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class SSDConfig:
+    """Mamba-2 SSD block geometry."""
+
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    """Griffin/RecurrentGemma recurrent block geometry."""
+
+    lru_width: int = 4096
+    conv_width: int = 4
+    c_exponent: float = 8.0  # a_t = a^(c·r_t)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    n_layers: int
+    vocab_size: int
+    stages: tuple[Stage, ...]
+    # attention geometry (unused for pure-SSM archs)
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    global_rope_theta: float | None = None  # gemma3: local 10k / global 1M
+    local_window: int = 0  # sliding-window size for "local" mixers
+    # family-specific sub-configs
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssd: SSDConfig | None = None
+    rglru: RGLRUConfig | None = None
+    mlp_variant: str = "swiglu"  # "swiglu" (3 mats) | "gelu" (2 mats)
+    # embeddings / heads
+    tie_embeddings: bool = True
+    embed_scale: bool = False  # gemma-style sqrt(d_model) embedding scaling
+    n_codebooks: int = 0  # musicgen: EnCodec codebooks (0 = plain token LM)
+    codebook_vocab: int = 0
+    # numerics / implementation
+    rms_eps: float = 1e-6
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    logit_chunk: int = 1024  # sequence-chunked xent to bound logits memory
+    use_pallas: bool = False  # XLA path for compile; Pallas path for real TPU
+    remat: str = "full"  # "none" | "full" | "dots"
+    # modality stubs ([vlm]/[audio] — frontend provides precomputed tokens)
+    frontend: str = "none"  # none | vq_image | encodec
+    # sub-quadratic flag drives the long_500k applicability policy
+    notes: str = ""
+
+    def __post_init__(self):
+        total = sum(s.n_layers for s in self.stages)
+        if total != self.n_layers:
+            raise ValueError(
+                f"{self.name}: stages cover {total} layers, config says {self.n_layers}"
+            )
+        if self.n_heads and self.n_kv_heads and self.n_heads % self.n_kv_heads:
+            raise ValueError(f"{self.name}: n_heads % n_kv_heads != 0")
+
+    # -- derived -----------------------------------------------------------------
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads if self.n_kv_heads else 0
+
+    def mixer_kinds(self) -> set[str]:
+        return {l.mixer for s in self.stages for l in s.pattern}
+
+    def ffn_kinds(self) -> set[str]:
+        return {l.ffn for s in self.stages for l in s.pattern}
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if no mixer needs an unbounded-length KV cache — the
+        long_500k admissibility rule ('global' attention is allowed: its
+        decode cost is O(S) per token and its cache is explicitly sharded
+        over the sequence axis; what disqualifies an arch is *every* layer
+        carrying a full-length cache)."""
+        kinds = self.mixer_kinds()
+        if kinds <= {"ssd", "rglru", "local"}:
+            return True
+        # hybrid: bounded mixers + a minority of global-attention layers
+        n_global = sum(
+            s.repeat * sum(1 for l in s.pattern if l.mixer in ("attn", "mla"))
+            for s in self.stages
+        )
+        return kinds & {"ssd", "rglru", "local"} != set() and n_global * 4 <= self.n_layers
+
+    def scaled(self, **overrides) -> "ModelConfig":
+        return replace(self, **overrides)
+
+
+def uniform_stages(n_layers: int, spec: LayerSpec) -> tuple[Stage, ...]:
+    return (Stage(repeat=n_layers, pattern=(spec,)),)
+
+
+def patterned_stages(n_layers: int, pattern: tuple[LayerSpec, ...]) -> tuple[Stage, ...]:
+    """Split ``n_layers`` into full pattern repeats + a remainder stage."""
+    p = len(pattern)
+    full, rem = divmod(n_layers, p)
+    stages = []
+    if full:
+        stages.append(Stage(repeat=full, pattern=pattern))
+    if rem:
+        stages.append(Stage(repeat=1, pattern=pattern[:rem]))
+    return tuple(stages)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Analytic parameter count (cross-checked against init in tests)."""
+    D, F = cfg.d_model, cfg.d_ff
+    total = cfg.vocab_size * D if not cfg.n_codebooks else cfg.n_codebooks * cfg.codebook_vocab * D
+    if not cfg.tie_embeddings:
+        total += (cfg.vocab_size if not cfg.n_codebooks else cfg.n_codebooks * cfg.codebook_vocab) * D
+    total += D  # final norm
+    for stage in cfg.stages:
+        per_pattern = 0
+        for l in stage.pattern:
+            per_pattern += D  # ln1
+            if l.mixer in ("attn", "local"):
+                H, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+                per_pattern += D * H * Dh + 2 * D * KV * Dh + H * Dh * D
+                if cfg.qk_norm:
+                    per_pattern += 2 * Dh
+            elif l.mixer == "mla":
+                m = cfg.mla
+                H = cfg.n_heads
+                qk = m.qk_nope_dim + m.qk_rope_dim
+                per_pattern += D * m.q_lora_rank + m.q_lora_rank + m.q_lora_rank * H * qk
+                per_pattern += D * (m.kv_lora_rank + m.qk_rope_dim) + m.kv_lora_rank
+                per_pattern += m.kv_lora_rank * H * (m.qk_nope_dim + m.v_head_dim)
+                per_pattern += H * m.v_head_dim * D
+            elif l.mixer == "ssd":
+                s = cfg.ssd
+                d_in = s.expand * D
+                H = d_in // s.head_dim
+                conv_ch = d_in + 2 * s.n_groups * s.d_state
+                per_pattern += D * (2 * d_in + 2 * s.n_groups * s.d_state + H)
+                per_pattern += s.conv_width * conv_ch + conv_ch
+                per_pattern += 3 * H  # A_log, D, dt_bias
+                per_pattern += d_in  # gated norm
+                per_pattern += d_in * D
+            elif l.mixer == "rglru":
+                r = cfg.rglru
+                W = r.lru_width
+                per_pattern += 2 * D * W  # x / gate branches
+                per_pattern += r.conv_width * W + W  # conv + bias
+                per_pattern += 2 * W * W + 2 * W + W  # gate projections + Λ
+                per_pattern += W * D  # out
+            if l.ffn == "mlp":
+                n_mats = 2 if cfg.mlp_variant == "gelu" else 3
+                per_pattern += D + n_mats * D * F
+            elif l.ffn == "moe":  # experts are SwiGLU in both assigned MoE archs
+                e = cfg.moe
+                per_pattern += D + D * e.n_experts + e.n_experts * 3 * D * F
+        total += stage.repeat * per_pattern
+    return total
+
+
+def active_params_per_token(cfg: ModelConfig) -> int:
+    """For the MoE roofline term MODEL_FLOPS = 6·N_active·D."""
+    if not cfg.moe:
+        return count_params(cfg)
+    full = count_params(cfg)
+    e = cfg.moe
+    expert_params = sum(
+        stage.repeat * sum(1 for l in stage.pattern if l.ffn == "moe")
+        for stage in cfg.stages
+    ) * e.n_experts * 3 * cfg.d_model * cfg.d_ff
+    active_expert = expert_params * e.top_k // e.n_experts
+    return full - expert_params + active_expert

@@ -1,0 +1,125 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+All functions are pure (params passed explicitly) and dtype-disciplined:
+params live in ``param_dtype`` (f32 master), compute runs in
+``compute_dtype`` (bf16 on TPU), norms/softmax accumulate in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms(d: int, dtype) -> jax.Array:
+    # stored as offset-from-one (gemma convention) → zeros init
+    return jnp.zeros((d,), dtype=dtype)
+
+
+# -- RoPE -------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), dtype=jnp.float32)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, variant: str = "swiglu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out,
+    }
+    if variant == "swiglu":
+        p["w_gate"] = jax.random.normal(k1, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def mlp_axes(variant: str = "swiglu") -> dict:
+    p = {
+        "w_up": ("embed_fsdp", "ff"),
+        "w_down": ("ff", "embed_fsdp"),
+    }
+    if variant == "swiglu":
+        p["w_gate"] = ("embed_fsdp", "ff")
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(compute_dtype))
+    if "w_gate" in p:  # SwiGLU
+        h = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(compute_dtype))
+        h = jax.nn.silu(h) * u
+    else:  # GELU (musicgen-style)
+        h = jax.nn.gelu(u)
+    h = constrain(h, ("batch", "seq", "act_ff"))
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(compute_dtype))
+
+
+# -- embeddings ---------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d_model: int, dtype) -> jax.Array:
+    return jax.random.normal(key, (vocab, d_model), dtype) * (1.0 / np.sqrt(d_model))
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array, compute_dtype, scale: bool) -> jax.Array:
+    x = jnp.take(embed, tokens, axis=0).astype(compute_dtype)
+    if scale:
+        x = x * jnp.asarray(np.sqrt(embed.shape[-1]), dtype=compute_dtype)
+    return x
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None) -> jax.Array:
+    """Depthwise causal conv along the sequence axis.
+
+    x: (B, S, C); w: (K, C) depthwise taps; left-pad K-1 → output (B, S, C).
+    Used by the SSD and RG-LRU blocks.
+    """
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is 4 — unrolled taps beat a conv op for depthwise
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv1d_step(tail: jax.Array, x_t: jax.Array, w: jax.Array, b: jax.Array | None):
+    """Single-token causal conv update for decode.
+
+    tail: (B, K-1, C) previous inputs; x_t: (B, C).  Returns (y_t, new_tail).
+    """
+    window = jnp.concatenate([tail, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:, :]

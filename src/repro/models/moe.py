@@ -1,0 +1,139 @@
+"""Mixture-of-Experts layer: top-k routing, grouped sort-based dispatch, EP.
+
+Dispatch avoids the GShard (tokens × experts × capacity) one-hot — at our
+shapes (1M tokens × 32 experts × 20k capacity) it would be petabytes.
+Tokens are split into **G groups** (G = the batch-shard count from the
+active sharding rules, so each group is device-local), sorted by expert
+*within their group*, and scattered into per-group per-expert capacity
+buffers (G, E, C_g, D).  The leading group dim makes this a batched
+scatter that GSPMD shards cleanly over the data axis — the ungrouped
+variant materialised an unsharded (E·C, D) buffer, audited at 16–22
+GiB/chip on the MoE train cells.
+
+Slot planning inside a group is the paper's reduce + exscan pattern:
+
+    counts  = bincount(expert_id)                 # the global reduction
+    starts  = exclusive_prefix_sum(counts)        # the exscan
+    rank_in_expert = position_in_sorted_order - starts[expert_id]
+
+applied to expert slots instead of file extents.  Tokens whose rank
+exceeds the group capacity are dropped (weight 0) — Switch/GShard
+semantics.  Expert buffers shard E → ``model`` when E divides the TP
+width (EP; granite 32/16), else per-expert ff-TP (mixtral: 8 experts,
+ff 16-way).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import batch_shard_count, constrain
+from .common import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    e = cfg.moe
+    D, F, E = cfg.d_model, cfg.d_ff, e.n_experts
+    ks = jax.random.split(key, 4)
+    s_in, s_out = 1.0 / np.sqrt(D), 1.0 / np.sqrt(F)
+    return {
+        "router": jax.random.normal(ks[0], (D, E), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (E, D, F), dtype) * s_in,
+        "w_up": jax.random.normal(ks[2], (E, D, F), dtype) * s_in,
+        "w_down": jax.random.normal(ks[3], (E, F, D), dtype) * s_out,
+    }
+
+
+def moe_axes() -> dict:
+    return {
+        "router": ("embed_fsdp", None),
+        "w_gate": ("experts", "embed_fsdp", "expert_ff"),
+        "w_up": ("experts", "embed_fsdp", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "embed_fsdp"),
+    }
+
+
+def moe_capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    e = cfg.moe
+    c = int(np.ceil(e.top_k * tokens_per_group * e.capacity_factor / e.n_experts))
+    return max(8, -(-c // 8) * 8)  # pad to 8 for clean tiling
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, D) → (y, aux) with load-balancing aux loss."""
+    e = cfg.moe
+    B, S, D = x.shape
+    cdt = x.dtype
+    N = B * S
+    E, K = e.n_experts, e.top_k
+    G = batch_shard_count()
+    while N % G:
+        G //= 2
+    n_g = N // G  # tokens per (device-local) group
+    C = moe_capacity(n_g, cfg)
+
+    xt = x.reshape(G, n_g, D)
+    xt = constrain(xt, ("tokens", None, None))
+    logits = jnp.einsum("gnd,de->gne", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, n_g, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (G, n_g, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- per-group sort-based slotting (reduce + exscan over expert ids) ----
+    e_flat = expert_idx.reshape(G, n_g * K)
+    counts = jax.vmap(lambda ef: jnp.bincount(ef, length=E))(e_flat)  # (G, E)
+    starts = jnp.concatenate(
+        [jnp.zeros((G, 1), counts.dtype), jnp.cumsum(counts, axis=1)[:, :-1]], axis=1
+    )
+    order = jnp.argsort(e_flat, axis=1, stable=True)  # (G, n_g·K)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    ranks_sorted = (
+        jnp.arange(n_g * K, dtype=jnp.int32)[None]
+        - jnp.take_along_axis(starts, e_sorted, axis=1).astype(jnp.int32)
+    )
+    rank = jax.vmap(lambda o, rs: jnp.zeros((n_g * K,), jnp.int32).at[o].set(rs))(
+        order, ranks_sorted
+    )
+    keep = rank < C
+    slot = jnp.where(keep, e_flat * C + rank, E * C)  # dropped → overflow row
+
+    # ---- batched scatter into (G, E·C+1, D) group buffers ----
+    w_flat = (gate_vals.reshape(G, n_g * K) * keep).astype(cdt)
+    token_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(n_g, dtype=jnp.int32), K)[None], (G, n_g * K)
+    )
+    gathered = jnp.take_along_axis(xt, token_of[..., None], axis=1) * keep[..., None].astype(cdt)
+    gathered = constrain(gathered, ("tokens", None, None))
+    buf = jnp.zeros((G, E * C + 1, D), cdt)
+    buf = jax.vmap(lambda b, s, g: b.at[s].add(g))(buf, slot, gathered)
+    expert_in = buf[:, : E * C].reshape(G, E, C, D)
+    expert_in = constrain(expert_in, ("tokens", "moe_e", "moe_c", None))
+
+    # ---- expert FFN (SwiGLU), batched over groups × experts ----
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"].astype(cdt))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(cdt))
+    h = jax.nn.silu(h) * u
+    h = constrain(h, ("tokens", "moe_e", "moe_c", "moe_f"))
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(cdt))
+    out = constrain(out, ("tokens", "moe_e", "moe_c", None))
+
+    # ---- gather + combine ----
+    out_flat = jnp.concatenate(
+        [out.reshape(G, E * C, D), jnp.zeros((G, 1, D), cdt)], axis=1
+    )
+    back = jnp.take_along_axis(out_flat, slot[..., None], axis=1) * w_flat[..., None]
+    back = constrain(back, ("tokens", None, None))
+    y = jnp.zeros((G, n_g, D), cdt)
+    y = jax.vmap(lambda yy, t, b: yy.at[t].add(b))(y, token_of, back)
+    y = constrain(y, ("tokens", None, None))
+
+    # ---- aux: Switch load-balance loss + routing stats ----
+    density = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0].reshape(-1), E, dtype=jnp.float32), axis=0
+    )
+    mean_prob = jnp.mean(probs.reshape(-1, E), axis=0)
+    aux_loss = e.aux_loss_weight * E * jnp.sum(density * mean_prob)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y.reshape(B, S, D), {"aux_loss": aux_loss, "dropped_frac": dropped}

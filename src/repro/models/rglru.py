@@ -1,0 +1,144 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(W_r u_t + b_r)              (recurrence gate)
+    i_t = σ(W_i u_t + b_i)              (input gate)
+    log a_t = −c · softplus(Λ) · r_t    (per-channel learned decay)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ u_t)
+
+wrapped in the Griffin recurrent block: dual input projections (signal +
+GeLU gate), a width-4 causal depthwise conv on the signal branch, and an
+output projection.  The length-S recurrence is evaluated with
+``lax.associative_scan`` (log-depth, parallel over the sequence — the
+TPU-friendly formulation of a diagonal linear recurrence); decode is the
+O(1) step.  State = (conv tail, h) — fixed size, which is what makes the
+arch long_500k-admissible.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from .common import ModelConfig
+from .layers import causal_conv1d, conv1d_step
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    r = cfg.rglru
+    D, W = cfg.d_model, r.lru_width
+    ks = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(D)
+    sw = 1.0 / np.sqrt(W)
+    # Λ init so that a ∈ [0.9, 0.999] at r=1 (griffin appendix)
+    u = np.random.RandomState(2).uniform(0.9**2, 0.999**2, W)
+    lam = np.log(np.expm1(-np.log(u) / (2 * r.c_exponent)))
+    return {
+        "w_x": jax.random.normal(ks[0], (D, W), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (D, W), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (r.conv_width, W), dtype) * 0.1,
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_r": jax.random.normal(ks[3], (W, W), dtype) * sw,
+        "b_r": jnp.zeros((W,), jnp.float32),
+        "w_i": jax.random.normal(ks[4], (W, W), dtype) * sw,
+        "b_i": jnp.zeros((W,), jnp.float32),
+        "lam": jnp.asarray(lam, jnp.float32),
+        "w_out": jax.random.normal(jax.random.fold_in(key, 9), (W, D), dtype) * sw,
+    }
+
+
+def rglru_axes() -> dict:
+    return {
+        "w_x": ("embed_fsdp", "lru"),
+        "w_gate": ("embed_fsdp", "lru"),
+        "conv_w": (None, "lru"),
+        "conv_b": ("lru",),
+        "w_r": ("embed_fsdp", "lru"),
+        "b_r": ("lru",),
+        "w_i": ("embed_fsdp", "lru"),
+        "b_i": ("lru",),
+        "lam": ("lru",),
+        "w_out": ("lru", "embed_fsdp"),
+    }
+
+
+def _gates(p, u, c_exp):
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_r"].astype(u.dtype)).astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_i"].astype(u.dtype)).astype(jnp.float32) + p["b_i"])
+    log_a = -c_exp * jax.nn.softplus(p["lam"]) * r  # (..., W) ≤ 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * i * u.astype(jnp.float32)
+    return a, gated_in
+
+
+def apply_rglru(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: dict | None = None,
+    update_cache: bool = False,
+):
+    """cache = {"conv": (B, K-1, W), "h": (B, W) f32}."""
+    r = cfg.rglru
+    B, S, D = x.shape
+    cdt = x.dtype
+
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(cdt)))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(cdt))
+    u = constrain(u, ("batch", "seq", "act_ff"))
+    new_cache = cache
+
+    if cache is None or S > 1:
+        u = causal_conv1d(u, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+        a, gated_in = _gates(p, u, r.c_exponent)  # (B,S,W) f32
+
+        h0 = cache["h"] if cache is not None else jnp.zeros((B, u.shape[-1]), jnp.float32)
+        # fold h0 into the first token: h_1 = a_1 h_0 + b_1
+        gated_in = gated_in.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_sc, h = jax.lax.associative_scan(combine, (a, gated_in), axis=1)
+        if cache is not None and update_cache:
+            tail = jnp.einsum("bsd,dw->bsw", x[:, S - (r.conv_width - 1) :], p["w_x"].astype(cdt))
+            new_cache = {"conv": tail.astype(cache["conv"].dtype), "h": h[:, -1]}
+        h = h.astype(cdt)
+    else:
+        u1, tail = conv1d_step(
+            cache["conv"].astype(cdt), u[:, 0], p["conv_w"].astype(cdt), p["conv_b"].astype(cdt)
+        )
+        a, gated_in = _gates(p, u1, r.c_exponent)  # (B,W)
+        h1 = a * cache["h"] + gated_in
+        new_cache = {"conv": tail.astype(cache["conv"].dtype), "h": h1}
+        h = h1[:, None].astype(cdt)
+
+    y = h * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(cdt))
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    r = cfg.rglru
+    return {
+        "conv": jnp.zeros((batch, r.conv_width - 1, r.lru_width), dtype),
+        "h": jnp.zeros((batch, r.lru_width), jnp.float32),
+    }
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    r = cfg.rglru
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, r.conv_width - 1, r.lru_width), dtype),
+        "h": jax.ShapeDtypeStruct((batch, r.lru_width), jnp.float32),
+    }
+
+
+def rglru_cache_axes() -> dict:
+    return {"conv": ("batch", None, "act_ff"), "h": ("batch", "act_ff")}

@@ -1,0 +1,238 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of ``Q`` tokens; within a chunk the recurrence is computed as a
+masked (decay-weighted) attention-like matmul, states are passed *between*
+chunks by a sequential ``lax.scan`` (S/Q steps).  This keeps everything on
+the MXU with O(S·Q) work and O(Q²) per-chunk memory instead of a length-S
+scalar scan.  Decode is the O(1) recurrent update on the (H, P, N) state.
+
+The ``repro.kernels.ssd`` Pallas kernel implements the same chunk body with
+explicit VMEM tiling; this jnp version is the oracle and the XLA dry-run
+path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import constrain
+from .common import ModelConfig
+from .layers import causal_conv1d, conv1d_step
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssd
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, H, conv_ch
+
+
+def init_ssd(key, cfg: ModelConfig, dtype) -> dict:
+    s, d_in, H, conv_ch = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+    sc = 1.0 / np.sqrt(D)
+    dt = np.exp(
+        np.random.RandomState(0).uniform(np.log(s.dt_min), np.log(s.dt_max), H)
+    ).astype(np.float32)
+    dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": jax.random.normal(
+            ks[0], (D, 2 * d_in + 2 * s.n_groups * s.d_state + H), dtype
+        )
+        * sc,
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_ch), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.asarray(np.log(np.random.RandomState(1).uniform(1, 16, H)), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": jax.random.normal(ks[4], (d_in, D), dtype) * (1.0 / np.sqrt(d_in)),
+    }
+
+
+def ssd_axes(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("embed_fsdp", "ssd_inner"),
+        "conv_w": (None, "ssd_inner"),
+        "conv_b": ("ssd_inner",),
+        "A_log": None,
+        "D": None,
+        "dt_bias": None,
+        "norm": ("ssd_inner",),
+        "out_proj": ("ssd_inner", "embed_fsdp"),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    s, d_in, H, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xs, Bm, Cm, dt = jnp.split(proj, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xs, Bm, Cm, dt
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = sum_{j < k <= i} x[..., k]  (−inf above diag)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, init_state=None):
+    """Chunk-scanned SSD core.
+
+    x:  (B, S, H, P)    dt: (B, S, H)     A: (H,) negative
+    Bm: (B, S, G, N)    Cm: (B, S, G, N)
+    Returns y (B, S, H, P), final_state (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(S, 256)
+    assert S % Q == 0, f"S={S} not divisible by chunk {Q}"
+    NC = S // Q
+    rep = H // G
+
+    xc = x.reshape(Bsz, NC, Q, H, P)
+    dtc = dt.reshape(Bsz, NC, Q, H)
+    Bc = Bm.reshape(Bsz, NC, Q, G, N)
+    Cc = Cm.reshape(Bsz, NC, Q, G, N)
+    dA = dtc * A  # (B,NC,Q,H) negative decays
+
+    # move NC to the front for the scan
+    xc, dtc, Bc, Cc, dA = (jnp.moveaxis(t, 1, 0) for t in (xc, dtc, Bc, Cc, dA))
+
+    state0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+
+    def chunk_body(state, inp):
+        xq, dtq, bq, cq, daq = inp  # (B,Q,H,P) (B,Q,H) (B,Q,G,N) (B,Q,G,N) (B,Q,H)
+        cum = jnp.cumsum(daq, axis=1)  # (B,Q,H)
+        # intra-chunk: decay-masked attention
+        L = jnp.exp(_segsum(jnp.moveaxis(daq, 1, 2)))  # (B,H,Q,Q)
+        cb = jnp.einsum("blgn,bsgn->bgls", cq, bq)  # (B,G,Q,Q)
+        cb = jnp.repeat(cb, rep, axis=1)  # (B,H,Q,Q)
+        M = cb * L * jnp.moveaxis(dtq, 1, 2)[:, :, None, :]  # weight dt on source
+        y_intra = jnp.einsum("bhls,bshp->blhp", M.astype(xq.dtype), xq)
+        # contribution of the incoming state
+        state_decay = jnp.exp(cum)  # (B,Q,H)
+        cq_h = jnp.repeat(cq, rep, axis=2) if G != H else cq
+        y_inter = jnp.einsum(
+            "blhn,bhpn->blhp", (cq_h * state_decay[..., None]).astype(jnp.float32), state
+        ).astype(xq.dtype)
+        # chunk state: decay-to-end weighted outer products
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        bq_h = jnp.repeat(bq, rep, axis=2) if G != H else bq
+        contrib = jnp.einsum(
+            "bqhn,bqhp->bhpn",
+            (bq_h * (dtq * decay_to_end)[..., None]).astype(jnp.float32),
+            xq.astype(jnp.float32),
+        )
+        state_next = state * jnp.exp(cum[:, -1])[..., None, None] + contrib
+        return state_next, y_intra + y_inter
+
+    final_state, ys = jax.lax.scan(chunk_body, state0, (xc, dtc, Bc, Cc, dA))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y, final_state
+
+
+def apply_ssd(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: dict | None = None,
+    update_cache: bool = False,
+):
+    """Full mamba2 block.  cache = {"conv": (B,K-1,conv_ch), "state": (B,H,P,N)}."""
+    s, d_in, H, conv_ch = _dims(cfg)
+    Bsz, S, D = x.shape
+    cdt = x.dtype
+    P = s.head_dim
+    G, N = s.n_groups, s.d_state
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cdt))
+    z, xs, Bm, Cm, dt_raw = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B,S,conv_ch)
+
+    A = -jnp.exp(p["A_log"])  # (H,)
+    new_cache = cache
+
+    if cache is None or S > 1:
+        conv_out = jax.nn.silu(causal_conv1d(conv_in, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt)))
+        xs, Bm, Cm = (
+            conv_out[..., :d_in],
+            conv_out[..., d_in : d_in + G * N],
+            conv_out[..., d_in + G * N :],
+        )
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+        xh = xs.reshape(Bsz, S, H, P)
+        xh = constrain(xh, ("batch", "seq", "act_heads", None))
+        y, final_state = ssd_chunked(
+            xh, dt, A, Bm.reshape(Bsz, S, G, N), Cm.reshape(Bsz, S, G, N)
+        )
+        y = y + xh * p["D"][:, None].astype(cdt)
+        if cache is not None and update_cache:
+            tail = conv_in[:, S - (s.conv_width - 1) :, :]
+            new_cache = {"conv": tail.astype(cache["conv"].dtype), "state": final_state}
+    else:
+        # O(1) decode step
+        conv_t, tail = conv1d_step(
+            cache["conv"].astype(cdt), conv_in[:, 0], p["conv_w"].astype(cdt), p["conv_b"].astype(cdt)
+        )
+        conv_t = jax.nn.silu(conv_t)
+        xs1 = conv_t[..., :d_in].reshape(Bsz, H, P)
+        B1 = conv_t[..., d_in : d_in + G * N].reshape(Bsz, G, N)
+        C1 = conv_t[..., d_in + G * N :].reshape(Bsz, G, N)
+        dt1 = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+        rep = H // G
+        B1h = jnp.repeat(B1, rep, axis=1)
+        C1h = jnp.repeat(C1, rep, axis=1)
+        decay = jnp.exp(dt1 * A)  # (B,H)
+        state = cache["state"] * decay[..., None, None] + jnp.einsum(
+            "bhn,bhp,bh->bhpn", B1h.astype(jnp.float32), xs1.astype(jnp.float32), dt1
+        )
+        y1 = jnp.einsum("bhn,bhpn->bhp", C1h.astype(jnp.float32), state).astype(cdt)
+        y1 = y1 + xs1 * p["D"][:, None].astype(cdt)
+        y = y1[:, None].reshape(Bsz, 1, H, P)
+        new_cache = {"conv": tail.astype(cache["conv"].dtype), "state": state}
+
+    # gated RMSNorm (mamba2) + out projection
+    yf = y.reshape(Bsz, S, d_in)
+    zf = jax.nn.silu(z)
+    y32 = yf.astype(jnp.float32) * zf.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    yn = (y32 * jax.lax.rsqrt(var + cfg.rms_eps) * (1.0 + p["norm"].astype(jnp.float32))).astype(cdt)
+    out = jnp.einsum("bse,ed->bsd", yn, p["out_proj"].astype(cdt))
+    return out, new_cache
+
+
+def init_ssd_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    s, d_in, H, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssd_cache_specs(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    s, d_in, H, conv_ch = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jax.ShapeDtypeStruct((batch, H, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssd_cache_axes() -> dict:
+    return {
+        "conv": ("batch", None, "ssd_inner"),
+        "state": ("batch", "act_heads", None, None),
+    }

@@ -1,0 +1,64 @@
+"""Serving steps: prefill (build cache, return last-token logits) and
+decode (one new token against the cache).  Cache buffers are donated so
+decode runs in place."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..distributed import sharding
+from ..models import transformer
+from ..models.common import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None = None, rules: dict | None = None):
+    if mesh is not None and rules is None:
+        rules = sharding.prefill_rules(mesh, cfg)
+
+    def prefill_step(params, tokens, cache):
+        ctx = sharding.use_rules(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            x, new_cache, _ = transformer.hidden_states(
+                params, cfg, tokens, cache=cache, update_cache=True
+            )
+            last = transformer.logits(params, cfg, x[:, -1:])[:, 0]
+            return last, new_cache
+
+    if mesh is None:
+        return prefill_step, None, None, None
+    pspecs = sharding.spec_tree(rules, transformer.param_axes(cfg))
+    tok_spec = sharding.resolve_spec(("batch", None, None), rules)
+    cache_specs = sharding.spec_tree(rules, transformer.cache_axes(cfg))
+    return prefill_step, pspecs, tok_spec, cache_specs
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh | None = None, rules: dict | None = None):
+    """One decode step: tokens (B,1) + cache → (logits (B,V...), new cache)."""
+    if mesh is not None and rules is None:
+        rules = sharding.decode_rules(mesh, cfg)
+
+    def serve_step(params, tokens, cache):
+        ctx = sharding.use_rules(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            x, new_cache, _ = transformer.hidden_states(
+                params, cfg, tokens, cache=cache, update_cache=True
+            )
+            lg = transformer.logits(params, cfg, x)[:, 0]
+            return lg, new_cache
+
+    if mesh is None:
+        return serve_step, None, None, None
+    pspecs = sharding.spec_tree(rules, transformer.param_axes(cfg))
+    tok_spec = sharding.resolve_spec(("batch", None, None), rules)
+    cache_specs = sharding.spec_tree(rules, transformer.cache_axes(cfg))
+    return serve_step, pspecs, tok_spec, cache_specs
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

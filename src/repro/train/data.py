@@ -1,0 +1,77 @@
+"""Deterministic, checkpointable synthetic data pipeline.
+
+Batches are a pure function of (seed, step) — ``batch(step)`` folds the
+step into the PRNG key — so the *entire* pipeline state is two integers
+carried inside the train-state snapshot: resume is exact, elastic restarts
+re-deal shards trivially, and no host-side iterator state can be lost in a
+crash (the data-pipeline half of fault tolerance).
+
+The stream mixes (a) Zipf-distributed unigrams, (b) short induction
+patterns (A B … A → B) so losses genuinely fall during the example runs,
+and (c) per-sequence offsets so batches are not degenerate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    batch: int = 8
+    seq_len: int = 128
+    zipf_a: float = 1.2
+    pattern_frac: float = 0.5  # fraction of positions driven by induction
+
+
+class TokenStream:
+    """Stateless-by-construction token stream."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig):
+        self.cfg = cfg
+        self.dcfg = dcfg
+        vocab = cfg.codebook_vocab if cfg.n_codebooks else cfg.vocab_size
+        self.vocab = vocab
+        ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+        probs = ranks ** (-dcfg.zipf_a)
+        self.logits = jnp.log(probs / probs.sum())
+        self._sample = jax.jit(self._make_sampler())
+
+    def _make_sampler(self):
+        d = self.dcfg
+        cfg = self.cfg
+        nq = max(cfg.n_codebooks, 1)
+
+        def sample(key):
+            B, S = d.batch, d.seq_len + 1
+            kz, kp, ko = jax.random.split(key, 3)
+            base = jax.random.categorical(kz, self.logits, shape=(B, S, nq))
+            # induction: second half repeats the first half (shifted pattern)
+            period = jnp.maximum(S // 4, 2)
+            idx = jnp.arange(S)
+            src = jnp.where(idx >= period, idx - period, idx)
+            repeated = base[:, src]
+            use_pattern = jax.random.bernoulli(kp, d.pattern_frac, (B, 1, 1))
+            toks = jnp.where(use_pattern, repeated, base)
+            offset = jax.random.randint(ko, (B, 1, 1), 0, 17)
+            toks = (toks + offset) % self.vocab
+            if cfg.n_codebooks == 0:
+                toks = toks[..., 0]
+            return toks.astype(jnp.int32)
+
+        return sample
+
+    def batch(self, step: int) -> dict:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.dcfg.seed), step)
+        toks = self._sample(key)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def state(self, step: int) -> dict:
+        """What goes in the checkpoint — (seed, step) is the whole state."""
+        return {"data_seed": self.dcfg.seed, "data_step": step}

@@ -1,0 +1,59 @@
+"""Sequence-chunked softmax cross-entropy.
+
+Full logits for (B=256, S=4096, V=262144) would be ~0.5 PB in f32 — the
+loss therefore scans the sequence in chunks, materialising only
+(B, chunk, V) at a time (sharded batch → data, vocab → model), with f32
+log-softmax and an optional z-loss for logit drift control.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from ..models.common import ModelConfig
+
+
+def _chunk_nll(x_chunk, labels_chunk, w, z_weight: float):
+    """x: (B,C,D); labels: (B,C) (or (B,C,nq)); w: (V,D) (or (nq,Vc,D))."""
+    if w.ndim == 3:  # codebook heads
+        logits = jnp.einsum("bcd,qvd->bcqv", x_chunk, w.astype(x_chunk.dtype))
+    else:
+        logits = jnp.einsum("bcd,vd->bcv", x_chunk, w.astype(x_chunk.dtype))
+        logits = constrain(logits, ("batch", "seq", "act_vocab"))
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels_chunk[..., None], axis=-1)[..., 0]
+    nll = (lse - picked).sum()
+    zloss = z_weight * jnp.square(lse).sum() if z_weight else 0.0
+    return nll + zloss
+
+
+def chunked_xent(
+    x: jax.Array,
+    labels: jax.Array,
+    head_w: jax.Array,
+    cfg: ModelConfig,
+    z_weight: float = 0.0,
+) -> jax.Array:
+    """Mean per-token (per-codebook) NLL.  x: (B,S,D)."""
+    B, S, D = x.shape
+    C = min(cfg.logit_chunk, S)
+    if S % C:
+        C = S  # fall back to a single chunk for odd smoke shapes
+    n = S // C
+    denom = labels.size
+
+    if n == 1:
+        return _chunk_nll(x, labels, head_w, z_weight) / denom
+
+    xs = x.reshape(B, n, C, D).swapaxes(0, 1)  # (n,B,C,D)
+    ls = labels.reshape((B, n, C) + labels.shape[2:]).swapaxes(0, 1)
+
+    def body(tot, inp):
+        xc, lc = inp
+        return tot + _chunk_nll(xc, lc, head_w, z_weight), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / denom

@@ -1,0 +1,33 @@
+"""Helper: run a python snippet in a subprocess with N forced host devices.
+
+Per the brief, the main test process must see exactly ONE jax device
+(``xla_force_host_platform_device_count`` is only set inside
+``launch/dryrun.py``), so every multi-device test runs in a child process.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=REPO,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+        )
+    return proc.stdout

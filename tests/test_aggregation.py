@@ -1,0 +1,146 @@
+"""Collective buffering: coalescing correctness + syscall reduction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.aggregation import (
+    AggregationConfig,
+    CollectiveWriter,
+    WriteRequest,
+    assign_aggregators,
+    coalesce_requests,
+    nd_slab_requests,
+)
+from repro.core.container import TH5File
+from repro.core.hyperslab import plan_rows
+
+
+def test_assign_aggregators_contiguous():
+    amap = assign_aggregators(8, 2)
+    np.testing.assert_array_equal(amap, [0, 0, 0, 0, 1, 1, 1, 1])
+    amap = assign_aggregators(5, 2)
+    np.testing.assert_array_equal(amap, [0, 0, 0, 1, 1])
+    # more aggregators than ranks degrades gracefully
+    assert assign_aggregators(2, 16).max() <= 1
+
+
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=256), min_size=1, max_size=40),
+    gap_at=st.integers(min_value=0, max_value=39),
+)
+@settings(max_examples=60, deadline=None)
+def test_coalesce_preserves_bytes(sizes, gap_at):
+    """Coalesced runs must cover exactly the same (offset, byte) pairs."""
+    reqs, off = [], 0
+    rng = np.random.default_rng(0)
+    for i, s in enumerate(sizes):
+        if i == gap_at:
+            off += 13  # inject a hole → forces a run break
+        reqs.append(WriteRequest(off, rng.integers(0, 255, s).astype(np.uint8)))
+        off += s
+    runs = coalesce_requests(reqs, buffer_bytes=1 << 20)
+    # rebuild the byte map from both representations
+    def bytemap(rs):
+        m = {}
+        for r in rs:
+            for j, b in enumerate(r.payload()):
+                m[r.offset + j] = b
+        return m
+
+    assert bytemap(runs) == bytemap(reqs)
+    # adjacency actually coalesces: #runs <= #holes + 1
+    assert len(runs) <= 2
+
+
+def test_coalesce_respects_buffer_cap():
+    reqs = [WriteRequest(i * 100, np.zeros(100, np.uint8)) for i in range(10)]
+    runs = coalesce_requests(reqs, buffer_bytes=250)
+    assert all(r.nbytes <= 250 for r in runs)
+    assert sum(r.nbytes for r in runs) == 1000
+
+
+def test_collective_vs_independent_same_file_content(tmp_path):
+    p1, p2 = str(tmp_path / "a.th5"), str(tmp_path / "b.th5")
+    counts = [7, 0, 13, 5]
+    rng = np.random.default_rng(1)
+    payload = [rng.integers(0, 255, (c, 24)).astype(np.uint8) for c in counts]
+
+    def write(path, independent):
+        with TH5File.create(path) as f:
+            plan = plan_rows(counts, 24)
+            meta = f.create_slab_dataset("/x", plan, "<u1", cols=24)
+            reqs = [
+                [WriteRequest(meta.offset + plan.extents[r].offset, payload[r])]
+                if counts[r]
+                else []
+                for r in range(len(counts))
+            ]
+            w = CollectiveWriter(f.fd, AggregationConfig(n_aggregators=2))
+            stats = w.write_independent(reqs) if independent else w.write_collective(reqs)
+            f.commit()
+            return stats
+
+    s_col = write(p1, independent=False)
+    s_ind = write(p2, independent=True)
+    with TH5File.open(p1) as f1, TH5File.open(p2) as f2:
+        np.testing.assert_array_equal(f1.read("/x"), f2.read("/x"))
+        np.testing.assert_array_equal(f1.read("/x"), np.concatenate(payload))
+    # aggregation must reduce syscalls: contiguous ranks coalesce into <= 2 runs
+    assert s_col.n_syscalls <= 2
+    assert s_ind.n_syscalls == 3  # one per non-empty rank
+    assert s_col.bytes_written == s_ind.bytes_written == 25 * 24
+
+
+def test_nd_slab_dim0_shard_is_single_run():
+    reqs = nd_slab_requests(0, (16, 8), 4, (slice(4, 8), slice(0, 8)), np.ones((4, 8), np.float32))
+    assert len(reqs) == 1
+    assert reqs[0].offset == 4 * 8 * 4
+    assert reqs[0].nbytes == 4 * 8 * 4
+
+
+def test_nd_slab_inner_shard_one_run_per_row():
+    arr = np.arange(16 * 4, dtype=np.float32).reshape(16, 4)
+    reqs = nd_slab_requests(1000, (16, 8), 4, (slice(0, 16), slice(4, 8)), arr)
+    assert len(reqs) == 16
+    assert reqs[0].offset == 1000 + 4 * 4
+    assert reqs[1].offset == 1000 + (8 + 4) * 4
+    assert all(r.nbytes == 16 for r in reqs)
+
+
+@given(
+    dims=st.tuples(
+        st.integers(min_value=1, max_value=6),
+        st.integers(min_value=1, max_value=6),
+        st.integers(min_value=1, max_value=6),
+    ),
+    data=st.data(),
+)
+@settings(max_examples=60, deadline=None)
+def test_nd_slab_reassembles_exactly(dims, data):
+    """Property: scattering a shard's runs into a buffer reproduces the
+    numpy assignment semantics for any hyperrectangle."""
+    slices = []
+    for d in dims:
+        a = data.draw(st.integers(min_value=0, max_value=d - 1))
+        b = data.draw(st.integers(min_value=a + 1, max_value=d))
+        slices.append(slice(a, b))
+    shard_shape = tuple(s.stop - s.start for s in slices)
+    shard = np.random.default_rng(0).integers(0, 100, shard_shape).astype(np.int32)
+    reqs = nd_slab_requests(0, dims, 4, tuple(slices), shard)
+    flat = np.zeros(int(np.prod(dims)) * 4, dtype=np.uint8)
+    for r in reqs:
+        pl = r.payload()
+        flat[r.offset : r.offset + len(pl)] = np.frombuffer(pl, np.uint8)
+    got = flat.view(np.int32).reshape(dims)
+    want = np.zeros(dims, np.int32)
+    want[tuple(slices)] = shard
+    np.testing.assert_array_equal(got, want)
+
+
+def test_aggregation_config_validation():
+    with pytest.raises(ValueError):
+        AggregationConfig(n_aggregators=0)
+    with pytest.raises(ValueError):
+        AggregationConfig(buffer_bytes=0)

@@ -1,0 +1,88 @@
+"""Property tests for the hyperslab planner — the lock-free invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hyperslab
+from repro.core.hyperslab import (
+    Extent,
+    align_up,
+    exclusive_prefix_sum,
+    plan_bytes,
+    plan_rows,
+    validate_plan,
+)
+
+counts_strategy = st.lists(st.integers(min_value=0, max_value=10_000), min_size=1, max_size=256)
+
+
+@given(counts=counts_strategy, row_bytes=st.integers(min_value=1, max_value=65536))
+@settings(max_examples=200, deadline=None)
+def test_plan_rows_invariants(counts, row_bytes):
+    plan = plan_rows(counts, row_bytes)
+    validate_plan(plan)  # exact cover + disjointness + ordering
+    # rank ordering and paper's row-index semantics
+    assert plan.total_rows == sum(counts)
+    for r, c in enumerate(counts):
+        lo, hi = plan.row_range(r)
+        assert hi - lo == c
+        ext = plan.extent_for(r)
+        assert ext.offset == lo * row_bytes
+        assert ext.nbytes == c * row_bytes
+    # root grid (first grid of rank 0) is always row 0
+    assert plan.row_range(0)[0] == 0
+
+
+@given(counts=counts_strategy)
+@settings(max_examples=200, deadline=None)
+def test_exscan_matches_numpy(counts):
+    got = exclusive_prefix_sum(np.array(counts))
+    want = np.concatenate([[0], np.cumsum(counts)[:-1]]) if len(counts) > 1 else np.array([0])
+    np.testing.assert_array_equal(got, want)
+
+
+@given(nbytes=st.lists(st.integers(min_value=0, max_value=1 << 20), min_size=1, max_size=128))
+@settings(max_examples=100, deadline=None)
+def test_plan_bytes_invariants(nbytes):
+    plan = plan_bytes(nbytes)
+    validate_plan(plan)
+    assert plan.total_bytes == sum(nbytes)
+
+
+@given(
+    offset=st.integers(min_value=0, max_value=1 << 40),
+    alignment=st.sampled_from([1, 2, 512, 4096, 65536, 1 << 20, 3]),
+)
+def test_align_up(offset, alignment):
+    a = align_up(offset, alignment)
+    assert a >= offset
+    assert a % alignment == 0 if alignment > 1 else a == offset
+    assert a - offset < max(alignment, 1)
+
+
+def test_extent_end():
+    assert Extent(0, 100, 28).end == 128
+
+
+def test_plan_rejects_bad_input():
+    with pytest.raises(ValueError):
+        plan_rows([-1], 8)
+    with pytest.raises(ValueError):
+        plan_rows([1], 0)
+    with pytest.raises(ValueError):
+        plan_rows(np.zeros((2, 2)), 8)
+
+
+def test_validate_catches_overlap():
+    plan = plan_rows([2, 3], 16)
+    bad = hyperslab.SlabPlan(
+        total_rows=plan.total_rows,
+        row_bytes=plan.row_bytes,
+        row_starts=plan.row_starts,
+        row_counts=plan.row_counts,
+        extents=(Extent(0, 0, 48), Extent(1, 32, 48)),
+    )
+    with pytest.raises(AssertionError):
+        validate_plan(bad)

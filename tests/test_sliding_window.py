@@ -1,0 +1,110 @@
+"""Offline sliding window: LOD stride reads + space-tree traversal."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import uid
+from repro.core.container import TH5File
+from repro.core.sliding_window import TreeWindow, lod_stride_for_budget, read_lod
+
+
+def test_read_lod_stride(tmp_path):
+    p = str(tmp_path / "x.th5")
+    with TH5File.create(p) as f:
+        d = f.create_dataset("/x", (100, 4), "<i4")
+        f.write_full(d, np.arange(400).reshape(100, 4))
+        f.commit()
+    with TH5File.open(p) as f:
+        got = read_lod(f, "/x", stride=10)
+        np.testing.assert_array_equal(got, np.arange(400).reshape(100, 4)[::10])
+        got = read_lod(f, "/x", stride=3, row_window=(10, 30))
+        np.testing.assert_array_equal(got, np.arange(400).reshape(100, 4)[10:30:3])
+
+
+@given(n=st.integers(min_value=0, max_value=10_000), budget=st.integers(min_value=1, max_value=500))
+@settings(max_examples=100, deadline=None)
+def test_lod_budget_property(n, budget):
+    """Stride is the minimal one meeting the budget (constant data rate)."""
+    s = lod_stride_for_budget(n, budget)
+    selected = len(range(0, n, s)) if n else 0
+    assert selected <= budget
+    if s > 1:
+        assert len(range(0, n, s - 1)) > budget
+
+
+def _quadtree(depth=3, fanout=4):
+    """Build a uniform 2-D quadtree topology: returns (uids, subgrids, boxes)."""
+    uids, subs, boxes = [], [], []
+    next_local = [0]
+
+    def add(level, x0, y0, size):
+        u = uid.pack(0, next_local[0], depth=level, morton=0)
+        next_local[0] += 1
+        row = len(uids)
+        uids.append(u)
+        subs.append([0] * fanout)
+        boxes.append([x0, y0, x0 + size, y0 + size])
+        if level < depth:
+            h = size / 2
+            kids = [
+                add(level + 1, x0 + dx * h, y0 + dy * h, h)
+                for dy in (0, 1)
+                for dx in (0, 1)
+            ]
+            subs[row] = [uids[k] for k in kids]
+        return row
+
+    add(0, 0.0, 0.0, 1.0)
+    return (
+        np.array(uids, dtype=np.uint64),
+        np.array(subs, dtype=np.uint64),
+        np.array(boxes, dtype=np.float64)[:, [0, 1, 2, 3]],
+    )
+
+
+def _mk_window():
+    uids, subs, boxes = _quadtree(depth=3)
+    # bounding_box layout: (min_x, min_y, max_x, max_y)
+    return TreeWindow(grid_uid=uids, subgrid_uid=subs, bounding_box=boxes)
+
+
+def test_tree_window_full_domain_lod():
+    tw = _mk_window()
+    # budget 1 → root only (coarsest LOD)
+    assert tw.select([0, 0], [1, 1], max_grids=1) == [0]
+    # budget 4 → level 1 (4 grids)
+    sel = tw.select([0, 0], [1, 1], max_grids=4)
+    assert len(sel) == 4
+    # huge budget → finest level (4^3 = 64 leaves)
+    sel = tw.select([0, 0], [1, 1], max_grids=10_000)
+    assert len(sel) == 64
+    assert all(len(tw.children(r)) == 0 for r in sel)
+
+
+def test_tree_window_zoom_reveals_detail():
+    """Smaller window → same budget buys finer resolution (the paper's
+    'zooming into the data')."""
+    tw = _mk_window()
+    full = tw.select([0, 0], [1, 1], max_grids=16)
+    corner = tw.select([0, 0], [0.2, 0.2], max_grids=16)
+    depth_of = lambda rows: max(uid.unpack(int(tw.grid_uid[r]))[2] for r in rows)
+    assert depth_of(corner) > depth_of(full)
+    # all selected grids intersect the window
+    for r in corner:
+        assert tw.intersects(r, np.array([0, 0]), np.array([0.2, 0.2]))
+
+
+def test_tree_window_gather_rows(tmp_path):
+    tw = _mk_window()
+    p = str(tmp_path / "w.th5")
+    n = len(tw.grid_uid)
+    with TH5File.create(p) as f:
+        d = f.create_dataset("/cells", (n, 8), "<f4")
+        f.write_full(d, np.arange(n * 8, dtype=np.float32).reshape(n, 8))
+        f.commit()
+    with TH5File.open(p) as f:
+        rows = tw.select([0, 0], [1, 1], max_grids=4)
+        got = tw.gather(f, "/cells", rows)
+        want = np.arange(n * 8, dtype=np.float32).reshape(n, 8)[rows]
+        np.testing.assert_array_equal(got, want)

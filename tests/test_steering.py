@@ -1,0 +1,91 @@
+"""Time-Reversible Steering: branch lineage, overlays, reads through chain."""
+
+import numpy as np
+import pytest
+
+from repro.core.checkpoint import CheckpointManager
+from repro.core.steering import BranchManager
+
+
+def _mk(tmp_path, name, common=None):
+    return CheckpointManager(str(tmp_path / name), common=common or {})
+
+
+def test_branch_and_restore_through_parent(tmp_path):
+    root = _mk(tmp_path, "root.th5", common={"lamp_T": 324.66})
+    for s in (10, 20, 30):
+        root.save(s, {"T": np.full(4, float(s), np.float32)})
+    bm = BranchManager(root)
+
+    # roll back to t=20, raise lamp temperature by 50 K (the paper's scenario)
+    child = bm.branch(20, str(tmp_path / "branch.th5"), overlay={"lamp_T": 374.66})
+    assert child.effective_config()["lamp_T"] == 374.66
+    # parent snapshots ≤ 20 are visible, 30 is not (it is the abandoned future)
+    assert child.available_steps() == [10, 20]
+    step, st = child.restore(20)
+    assert step == 20
+    np.testing.assert_array_equal(st["T"], np.full(4, 20.0, np.float32))
+
+    # continue the branch
+    child.manager.save(25, {"T": np.full(4, 25.0, np.float32)})
+    child.manager.save(35, {"T": np.full(4, 35.0, np.float32)})
+    assert child.available_steps() == [10, 20, 25, 35]
+    _, st35 = child.restore(35)
+    np.testing.assert_array_equal(st35["T"], np.full(4, 35.0, np.float32))
+    root.close()
+    child.manager.close()
+
+
+def test_two_level_lineage_visibility(tmp_path):
+    root = _mk(tmp_path, "root.th5")
+    for s in (1, 2, 3, 4):
+        root.save(s, {"x": np.full(2, float(s))})
+    b1 = BranchManager(root).branch(3, str(tmp_path / "b1.th5"), overlay={"lr": 0.1})
+    b1.manager.save(4, {"x": np.full(2, 40.0)})  # rewrites step 4 in the branch
+    b1.manager.save(5, {"x": np.full(2, 50.0)})
+    b2 = b1.branch(4, str(tmp_path / "b2.th5"), overlay={"lr": 0.01})
+
+    # b2 sees: root steps <= 3, b1's steps <= 4 (not 5)
+    assert b2.available_steps() == [1, 2, 3, 4]
+    _, s4 = b2.restore(4)
+    np.testing.assert_array_equal(s4["x"], np.full(2, 40.0))  # b1's version wins
+    _, s2 = b2.restore(2)
+    np.testing.assert_array_equal(s2["x"], np.full(2, 2.0))  # from root
+    # overlays compose root→leaf
+    assert b2.effective_config()["lr"] == 0.01
+    lineage = b2.lineage()
+    assert [e.branch_step for e in lineage] == [None, 3, 4]
+    root.close()
+    b1.manager.close()
+    b2.manager.close()
+
+
+def test_branch_at_missing_step_rejected(tmp_path):
+    root = _mk(tmp_path, "root.th5")
+    root.save(1, {"x": np.zeros(2)})
+    with pytest.raises(KeyError):
+        BranchManager(root).branch(99, str(tmp_path / "bad.th5"))
+    root.close()
+
+
+def test_restore_missing_step_raises(tmp_path):
+    root = _mk(tmp_path, "root.th5")
+    root.save(1, {"x": np.zeros(2)})
+    bm = BranchManager(root)
+    with pytest.raises(KeyError):
+        bm.restore(7)
+    root.close()
+
+
+def test_branch_is_cheap_no_data_copy(tmp_path):
+    """Rollback must be metadata-only: branch file stays tiny even when the
+    parent holds megabytes (paper: reload 'in rapid fashion')."""
+    import os
+
+    root = _mk(tmp_path, "root.th5")
+    root.save(1, {"x": np.zeros((512, 1024), np.float32)})  # 2 MiB
+    bm = BranchManager(root).branch(1, str(tmp_path / "b.th5"))
+    bm.manager.file.commit()
+    assert os.path.getsize(str(tmp_path / "b.th5")) < 64 * 1024
+    root.close()
+    bm.manager.close()

@@ -1,0 +1,71 @@
+"""UID pack/unpack + Morton code properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import uid
+
+
+@given(
+    rank=st.integers(min_value=0, max_value=uid.RANK_MAX),
+    local=st.integers(min_value=0, max_value=uid.LOCAL_MAX),
+    depth=st.integers(min_value=0, max_value=uid.DEPTH_MAX),
+    morton=st.integers(min_value=0, max_value=uid.MORTON_MAX),
+)
+@settings(max_examples=200)
+def test_pack_unpack_roundtrip(rank, local, depth, morton):
+    u = uid.pack(rank, local, depth, morton)
+    assert 0 <= u < 2**64
+    assert uid.unpack(u) == (rank, local, depth, morton)
+    assert uid.rank_of(u) == rank
+
+
+def test_pack_bounds():
+    with pytest.raises(ValueError):
+        uid.pack(uid.RANK_MAX + 1, 0, 0, 0)
+    with pytest.raises(ValueError):
+        uid.pack(0, 0, uid.DEPTH_MAX + 1, 0)
+
+
+@given(
+    rank=st.lists(st.integers(min_value=0, max_value=uid.RANK_MAX), min_size=1, max_size=64),
+)
+@settings(max_examples=50)
+def test_pack_array_matches_scalar(rank):
+    n = len(rank)
+    rng = np.random.default_rng(0)
+    locals_ = rng.integers(0, uid.LOCAL_MAX, n)
+    depths = rng.integers(0, uid.DEPTH_MAX, n)
+    mortons = rng.integers(0, uid.MORTON_MAX, n)
+    arr = uid.pack_array(np.array(rank), locals_, depths, mortons)
+    for i in range(n):
+        assert int(arr[i]) == uid.pack(rank[i], int(locals_[i]), int(depths[i]), int(mortons[i]))
+    r2, l2, d2, m2 = uid.unpack_array(arr)
+    np.testing.assert_array_equal(r2.astype(np.int64), rank)
+    np.testing.assert_array_equal(l2, locals_)
+    np.testing.assert_array_equal(d2, depths)
+    np.testing.assert_array_equal(m2, mortons)
+
+
+@given(
+    i=st.integers(min_value=0, max_value=1023),
+    j=st.integers(min_value=0, max_value=1023),
+    k=st.integers(min_value=0, max_value=1023),
+)
+@settings(max_examples=200)
+def test_morton_roundtrip(i, j, k):
+    code = uid.morton3(i, j, k)
+    ii, jj, kk = uid.morton3_inverse(code)
+    assert (int(ii), int(jj), int(kk)) == (i, j, k)
+
+
+def test_morton_locality():
+    """Adjacent cells differ in few high bits — SFC neighbour preservation."""
+    c000 = int(uid.morton3(0, 0, 0))
+    c100 = int(uid.morton3(1, 0, 0))
+    assert c100 == 1  # x is the lowest interleaved bit
+    assert int(uid.morton3(0, 1, 0)) == 2
+    assert int(uid.morton3(0, 0, 1)) == 4
+    assert c000 == 0
