@@ -3,14 +3,23 @@ kernel (lock-free shared-file hyperslab writes, collective buffering,
 topology-carrying shadow-paged snapshots, offline sliding window, and
 time-reversible steering), plus the on-device collective planner."""
 
-from .aggregation import AggregationConfig, CollectiveWriter, WriteRequest, WriteStats
+from .aggregation import (
+    COPY_COUNTER,
+    AggregationConfig,
+    CollectiveWriter,
+    WriteRequest,
+    WriteStats,
+    nd_slab_requests,
+)
 from .checkpoint import AsyncCheckpointer, CheckpointManager, SaveResult, split_rows
-from .container import CorruptFileError, DatasetMeta, TH5Error, TH5File
+from .container import READ_COUNTER, CorruptFileError, DatasetMeta, TH5Error, TH5File
 from .hyperslab import Extent, SlabPlan, align_up, exclusive_prefix_sum, plan_bytes, plan_rows, validate_plan
-from .sliding_window import TreeWindow, lod_stride_for_budget, read_lod
+from .sliding_window import TreeWindow, WindowPrefetcher, iter_lod_windows, lod_stride_for_budget, read_lod
 from .steering import BranchManager, LineageEntry
 
 __all__ = [
+    "COPY_COUNTER",
+    "READ_COUNTER",
     "AggregationConfig",
     "AsyncCheckpointer",
     "BranchManager",
@@ -25,11 +34,14 @@ __all__ = [
     "TH5Error",
     "TH5File",
     "TreeWindow",
+    "WindowPrefetcher",
     "WriteRequest",
     "WriteStats",
     "align_up",
     "exclusive_prefix_sum",
+    "iter_lod_windows",
     "lod_stride_for_budget",
+    "nd_slab_requests",
     "plan_bytes",
     "plan_rows",
     "read_lod",

@@ -13,10 +13,15 @@ TPU adaptation: every TPU host owns the PCIe/NIC path for its local devices;
 axes onto aggregator shards (see ``collective_io.gather_to_aggregators``)
 and (b) the host-side coalescing implemented here: N logical ranks hand
 their disjoint extents to A aggregators; each aggregator merges adjacent
-extents into maximal contiguous runs and issues few, large ``pwrite`` calls
+extents into maximal contiguous runs and issues few, large ``pwritev`` calls
 instead of many small ones.  Because the hyperslab planner orders extents by
 rank, a contiguous rank-group's extents always coalesce into exactly one run
 per dataset — the best case the paper engineered for.
+
+The hot path is **zero-copy**: requests carry array *views* (stride-aware
+slices of the caller's buffer) and ``pwritev`` vectors straight out of them;
+``COPY_COUNTER`` accounts for every payload byte that is ever duplicated so
+benchmarks can assert copies-per-byte == 0 on the coalesced path.
 
 Everything is lock-free: extents are disjoint by construction
 (``hyperslab.validate_plan``), so concurrent aggregator threads never
@@ -28,29 +33,78 @@ from __future__ import annotations
 import os
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Sequence
 
 import numpy as np
 
-from .container import pwrite_full
+from .container import IOV_MAX, _advance, pwrite_full
+
+
+class CopyCounter:
+    """Process-wide payload-copy accounting (thread-safe).
+
+    Every time a request payload is materialised as a new bytes object (or a
+    non-contiguous run is compacted) the copy is recorded here.  The
+    benchmarks snapshot around a write to compute copies-per-byte; the
+    zero-copy coalesced path must report a delta of exactly zero.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.n_copies = 0
+        self.bytes_copied = 0
+
+    def add(self, nbytes: int) -> None:
+        with self._lock:
+            self.n_copies += 1
+            self.bytes_copied += int(nbytes)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.n_copies = 0
+            self.bytes_copied = 0
+
+    def snapshot(self) -> tuple[int, int]:
+        with self._lock:
+            return self.n_copies, self.bytes_copied
+
+
+COPY_COUNTER = CopyCounter()
+
+_IOV_MAX = IOV_MAX  # re-exported; monkeypatched by the short-write tests
 
 
 @dataclass(frozen=True)
 class WriteRequest:
-    """One rank's contribution: absolute file offset + payload."""
+    """One rank's contribution: absolute file offset + payload.
+
+    ``data`` may be bytes, an ndarray *view* into the caller's buffer, or a
+    memoryview — the vectored writer never copies any of them as long as the
+    underlying memory is contiguous.
+    """
 
     offset: int
-    data: bytes | np.ndarray
+    data: bytes | np.ndarray | memoryview
 
     def payload(self) -> bytes:
+        """Materialise the payload as bytes.  This is always a copy for
+        array/memoryview payloads — kept for tests/analysis; the write path
+        uses :func:`_as_view` instead."""
         d = self.data
-        return d.tobytes() if isinstance(d, np.ndarray) else bytes(d)
+        if isinstance(d, np.ndarray):
+            COPY_COUNTER.add(d.nbytes)
+            return d.tobytes()
+        if isinstance(d, memoryview):
+            COPY_COUNTER.add(d.nbytes)
+            return bytes(d)
+        return bytes(d)
 
     @property
     def nbytes(self) -> int:
-        return self.data.nbytes if isinstance(self.data, np.ndarray) else len(self.data)
+        d = self.data
+        return d.nbytes if isinstance(d, (np.ndarray, memoryview)) else len(d)
 
 
 @dataclass
@@ -61,10 +115,20 @@ class WriteStats:
     wall_s: float = 0.0
     n_aggregators: int = 0
     coalesced_runs: int = 0
+    n_copies: int = 0
+    bytes_copied: int = 0
 
     @property
     def bandwidth_bps(self) -> float:
         return self.bytes_written / self.wall_s if self.wall_s > 0 else float("inf")
+
+    @property
+    def copies_per_byte(self) -> float:
+        return self.bytes_copied / self.bytes_written if self.bytes_written else 0.0
+
+    @property
+    def syscalls_per_mb(self) -> float:
+        return self.n_syscalls / (self.bytes_written / 1e6) if self.bytes_written else 0.0
 
 
 @dataclass(frozen=True)
@@ -77,6 +141,7 @@ class AggregationConfig:
     n_aggregators: int = 4
     coalesce: bool = True
     buffer_bytes: int = 16 << 20
+    file_domains: bool = True
 
     def __post_init__(self) -> None:
         if self.n_aggregators < 1:
@@ -92,6 +157,35 @@ def assign_aggregators(n_ranks: int, n_aggregators: int) -> np.ndarray:
     n_aggregators = min(n_aggregators, max(n_ranks, 1))
     group = -(-n_ranks // n_aggregators)  # ceil
     return np.arange(n_ranks) // group
+
+
+def assign_file_domains(
+    reqs: Sequence[WriteRequest], n_aggregators: int
+) -> list[list[WriteRequest]]:
+    """MPI-IO-style file domains: each aggregator owns one contiguous byte
+    band of the file, so runs coalesce maximally regardless of which rank a
+    request came from.  Rank bucketing (``assign_aggregators``) fragments
+    inner-dim (TP-style) shardings — every rank's per-row slivers stay
+    separated by the other ranks' columns; domain bucketing stitches them
+    back into whole-row runs.  Requests are sorted by offset and split at
+    request boundaries into ≤ ``n_aggregators`` balanced-byte domains."""
+    ordered = sorted(reqs, key=lambda r: r.offset)
+    total = sum(r.nbytes for r in ordered)
+    if not ordered or total == 0:
+        return [list(ordered)] if ordered else []
+    per_domain = -(-total // n_aggregators)  # ceil
+    domains: list[list[WriteRequest]] = []
+    cur: list[WriteRequest] = []
+    cur_bytes = 0
+    for r in ordered:
+        if cur and cur_bytes + r.nbytes > per_domain and len(domains) < n_aggregators - 1:
+            domains.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(r)
+        cur_bytes += r.nbytes
+    if cur:
+        domains.append(cur)
+    return domains
 
 
 def coalesce_runs(
@@ -128,40 +222,32 @@ def coalesce_requests(reqs: Sequence[WriteRequest], buffer_bytes: int) -> list[W
     ]
 
 
-_IOV_MAX = 1024  # conservative portable IOV_MAX
-
-
-def _as_view(r: WriteRequest) -> memoryview:
+def _as_view(r: WriteRequest, counter: CopyCounter | None = None) -> memoryview:
     d = r.data
     if isinstance(d, np.ndarray):
-        d = np.ascontiguousarray(d)
+        if d.size == 0:
+            return memoryview(b"")  # cast('B') rejects zeros in shape
+        if not d.flags.c_contiguous:
+            COPY_COUNTER.add(d.nbytes)  # compaction copy — only stride-broken runs
+            if counter is not None:
+                counter.add(d.nbytes)
+            d = np.ascontiguousarray(d)
         try:
             return memoryview(d).cast("B")
         except (ValueError, TypeError):
             # ml_dtypes (bfloat16 etc.) lack buffer-protocol support:
             # reinterpret as bytes — no copy, same layout
             return memoryview(d.view(np.uint8)).cast("B")
-    return memoryview(d)
+    mv = memoryview(d)
+    return mv if mv.format == "B" and mv.ndim == 1 else mv.cast("B")
 
 
-def _advance(bufs: list[memoryview], skip: int) -> list[memoryview]:
-    """Drop the first ``skip`` bytes from a buffer list (short-write resume)."""
-    if skip == 0:
-        return bufs
-    out = []
-    for b in bufs:
-        if skip >= len(b):
-            skip -= len(b)
-            continue
-        out.append(b[skip:] if skip else b)
-        skip = 0
-    return out
-
-
-def pwritev_run(fd: int, offset: int, reqs: list[WriteRequest]) -> tuple[int, int]:
+def pwritev_run(
+    fd: int, offset: int, reqs: list[WriteRequest], counter: CopyCounter | None = None
+) -> tuple[int, int]:
     """Write one coalesced run with vectored I/O (no payload copies).
     Returns (bytes_written, syscalls)."""
-    bufs = [_as_view(r) for r in reqs]
+    bufs = [_as_view(r, counter) for r in reqs]
     total, calls = 0, 0
     for i in range(0, len(bufs), _IOV_MAX):
         chunk = bufs[i : i + _IOV_MAX]
@@ -180,6 +266,12 @@ def pwritev_run(fd: int, offset: int, reqs: list[WriteRequest]) -> tuple[int, in
 class CollectiveWriter:
     """Executes a set of per-rank write requests with collective buffering.
 
+    The aggregator worker pool is **persistent**: created once on first use
+    and reused across steps (the paper's fixed aggregator set), so the
+    steady-state write path pays no thread spawn/teardown.  Use as a context
+    manager or call :meth:`close` to release the threads; an unclosed writer
+    releases them on garbage collection.
+
     ``independent`` mode (aggregation off) issues one pwrite per request from
     a pool as wide as the rank count — the paper's contended baseline.
     """
@@ -187,6 +279,45 @@ class CollectiveWriter:
     def __init__(self, fd: int, config: AggregationConfig | None = None):
         self.fd = fd
         self.config = config or AggregationConfig()
+        self._pool: ThreadPoolExecutor | None = None
+        self._pool_width = 0
+        self._submit_pool: ThreadPoolExecutor | None = None
+
+    # -- persistent worker pool ------------------------------------------------
+
+    def _get_pool(self, width: int) -> ThreadPoolExecutor:
+        if self._pool is None or self._pool_width < width:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+            self._pool = ThreadPoolExecutor(max_workers=width, thread_name_prefix="aggregator")
+            self._pool_width = width
+        return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+            self._pool_width = 0
+        if self._submit_pool is not None:
+            self._submit_pool.shutdown(wait=True)
+            self._submit_pool = None
+
+    def __enter__(self) -> "CollectiveWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # best-effort thread release
+        try:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+            if self._submit_pool is not None:
+                self._submit_pool.shutdown(wait=False)
+        except Exception:
+            pass
+
+    # -- write paths -----------------------------------------------------------
 
     def write_collective(self, requests_per_rank: Sequence[Sequence[WriteRequest]]) -> WriteStats:
         cfg = self.config
@@ -195,24 +326,34 @@ class CollectiveWriter:
             n_requests=sum(len(r) for r in requests_per_rank),
             n_aggregators=min(cfg.n_aggregators, max(n_ranks, 1)),
         )
-        amap = assign_aggregators(n_ranks, cfg.n_aggregators)
-        buckets: dict[int, list[WriteRequest]] = {}
-        for rank, reqs in enumerate(requests_per_rank):
-            buckets.setdefault(int(amap[rank]), []).extend(reqs)
+        if cfg.file_domains:
+            flat = [r for reqs in requests_per_rank for r in reqs]
+            buckets = assign_file_domains(flat, min(cfg.n_aggregators, max(n_ranks, 1)))
+        else:
+            amap = assign_aggregators(n_ranks, cfg.n_aggregators)
+            by_agg: dict[int, list[WriteRequest]] = {}
+            for rank, reqs in enumerate(requests_per_rank):
+                by_agg.setdefault(int(amap[rank]), []).extend(reqs)
+            buckets = list(by_agg.values())
+        stats.n_aggregators = len(buckets)
 
         lock = threading.Lock()
+        # per-call counter: attribute only THIS write's compaction copies to
+        # its stats (a concurrent caller may be planning step n+1 against the
+        # global COPY_COUNTER while this write drains — see submit_collective)
+        local_copies = CopyCounter()
 
         def run_aggregator(reqs: list[WriteRequest]) -> None:
             wrote, calls, n_runs = 0, 0, 0
             if cfg.coalesce:
                 for off, run in coalesce_runs(reqs, cfg.buffer_bytes):
-                    b, c = pwritev_run(self.fd, off, run)
+                    b, c = pwritev_run(self.fd, off, run, local_copies)
                     wrote += b
                     calls += c
                     n_runs += 1
             else:
                 for r in reqs:
-                    wrote += pwrite_full(self.fd, r.payload(), r.offset)
+                    wrote += pwrite_full(self.fd, _as_view(r, local_copies), r.offset)
                     calls += 1
                     n_runs += 1
             with lock:
@@ -222,14 +363,30 @@ class CollectiveWriter:
 
         t0 = time.perf_counter()
         if len(buckets) == 1:
-            run_aggregator(next(iter(buckets.values())))
-        else:
-            with ThreadPoolExecutor(max_workers=len(buckets)) as pool:
-                futs = [pool.submit(run_aggregator, reqs) for reqs in buckets.values()]
-                for f in futs:
-                    f.result()
+            run_aggregator(buckets[0])
+        elif buckets:
+            pool = self._get_pool(len(buckets))
+            futs = [pool.submit(run_aggregator, reqs) for reqs in buckets]
+            for f in futs:
+                f.result()
         stats.wall_s = time.perf_counter() - t0
+        stats.n_copies, stats.bytes_copied = local_copies.snapshot()
         return stats
+
+    def submit_collective(
+        self, requests_per_rank: Sequence[Sequence[WriteRequest]]
+    ) -> "Future[WriteStats]":
+        """Asynchronous :meth:`write_collective` — the double-buffer half of
+        the paper's §5.2 'asynchronous I/O'.  The caller packs/stages step
+        n+1 while the returned future drains step n to disk.  The caller must
+        keep the request payloads alive (and unmodified) until the future
+        resolves; a dedicated submission thread avoids deadlocking the
+        aggregator pool."""
+        if self._submit_pool is None:
+            self._submit_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="aggregator-submit"
+            )
+        return self._submit_pool.submit(self.write_collective, requests_per_rank)
 
     def write_independent(self, requests_per_rank: Sequence[Sequence[WriteRequest]]) -> WriteStats:
         """No aggregation: every rank writes its own (possibly tiny) extents.
@@ -237,11 +394,12 @@ class CollectiveWriter:
         n_ranks = len(requests_per_rank)
         stats = WriteStats(n_requests=sum(len(r) for r in requests_per_rank), n_aggregators=n_ranks)
         lock = threading.Lock()
+        local_copies = CopyCounter()
 
         def run_rank(reqs: Sequence[WriteRequest]) -> None:
             wrote, calls = 0, 0
             for r in reqs:
-                wrote += pwrite_full(self.fd, r.payload(), r.offset)
+                wrote += pwrite_full(self.fd, _as_view(r, local_copies), r.offset)
                 calls += 1
             with lock:
                 stats.n_syscalls += calls
@@ -253,7 +411,18 @@ class CollectiveWriter:
             for f in futs:
                 f.result()
         stats.wall_s = time.perf_counter() - t0
+        stats.n_copies, stats.bytes_copied = local_copies.snapshot()
         return stats
+
+
+def _run_payload(sub: np.ndarray) -> np.ndarray | bytes:
+    """Zero-copy when the run is contiguous in the caller's buffer; only a
+    stride-broken run (layout mismatch) is compacted, and that copy is
+    accounted."""
+    if sub.flags.c_contiguous:
+        return sub
+    COPY_COUNTER.add(sub.nbytes)
+    return sub.tobytes()
 
 
 def nd_slab_requests(
@@ -267,9 +436,14 @@ def nd_slab_requests(
     dataset) into contiguous byte runs — what HDF5 does under the hood for a
     hyperslab write.  A dim-0-contiguous shard yields exactly one request;
     TP-style inner-dim shards yield one request per outer row, which is where
-    aggregation coalesces across ranks."""
+    aggregation coalesces across ranks.
+
+    Requests carry stride-aware *views* of ``array`` — no payload bytes are
+    copied as long as each run is contiguous in the source buffer (true for
+    any C-contiguous shard, and for inner-dim slices of a larger array whose
+    rows are individually contiguous)."""
     global_shape = tuple(int(s) for s in global_shape)
-    arr = np.ascontiguousarray(array)
+    arr = np.asarray(array)
     starts = [s.start or 0 for s in index]
     stops = [s.stop if s.stop is not None else dim for s, dim in zip(index, global_shape)]
     shard_shape = tuple(b - a for a, b in zip(starts, stops))
@@ -286,20 +460,31 @@ def nd_slab_requests(
     for d in range(ndim - 2, -1, -1):
         strides[d] = strides[d + 1] * global_shape[d + 1]
     if suffix == 0:
-        return [WriteRequest(base_offset, arr.tobytes())]
-    run_elems = int(np.prod(shard_shape[suffix - 1 :], dtype=np.int64)) if suffix >= 1 else arr.size
-    run_bytes = run_elems * itemsize
+        return [WriteRequest(base_offset, _run_payload(arr))]
     outer_dims = shard_shape[: suffix - 1]
-    flat = arr.reshape((-1, run_elems))
-    reqs: list[WriteRequest] = []
+    base = base_offset + int(sum(starts[d] * int(strides[d]) for d in range(ndim))) * itemsize
     if not outer_dims:
-        off = int(sum(starts[d] * strides[d] for d in range(ndim))) * itemsize
-        return [WriteRequest(base_offset + off, flat[0].tobytes())]
-    for i, idx in enumerate(np.ndindex(*outer_dims)):
-        coords = [starts[d] + idx[d] for d in range(suffix - 1)] + [starts[suffix - 1]] + [
-            starts[d] for d in range(suffix, ndim)
+        return [WriteRequest(base, _run_payload(arr))]
+    # vectorised affine offsets: off(idx) = base + Σ idx[d]·strides[d]·itemsize
+    offs = np.zeros(outer_dims, dtype=np.int64)
+    for d in range(len(outer_dims)):
+        shape = [1] * len(outer_dims)
+        shape[d] = outer_dims[d]
+        offs += (np.arange(outer_dims[d], dtype=np.int64) * int(strides[d])).reshape(shape)
+    off_list = (offs.reshape(-1) * itemsize + base).tolist()
+    run_elems = int(np.prod(shard_shape[suffix - 1 :], dtype=np.int64))
+    run_bytes = run_elems * itemsize
+    if arr.flags.c_contiguous:
+        # one byte view over the whole shard; every run is a zero-copy slice
+        try:
+            mv = memoryview(arr).cast("B")
+        except (ValueError, TypeError):
+            mv = memoryview(arr.view(np.uint8)).cast("B")
+        return [
+            WriteRequest(off, mv[i * run_bytes : (i + 1) * run_bytes])
+            for i, off in enumerate(off_list)
         ]
-        off = int(sum(c * int(strides[d]) for d, c in enumerate(coords))) * itemsize
-        reqs.append(WriteRequest(base_offset + off, flat[i].tobytes()))
-        assert len(flat[i].tobytes()) == run_bytes
-    return reqs
+    return [
+        WriteRequest(off, _run_payload(arr[idx]))
+        for off, idx in zip(off_list, np.ndindex(*outer_dims))
+    ]

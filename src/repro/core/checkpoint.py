@@ -86,6 +86,44 @@ class CheckpointManager:
             self.file = TH5File.open(path, mode="r+")
         self.path = path
         self._io_lock = threading.Lock()  # serialises *sessions*, not slabs
+        # static-topology fast path: row-split plans depend only on
+        # (n_rows, row_bytes, n_ranks), so steady-state steps skip the
+        # reduce+exscan + validation entirely
+        self._plan_cache: dict[tuple[int, int, int], Any] = {}
+        self._plan_hits = 0
+        self._plan_misses = 0
+        # persistent collective writers (one per aggregation config) so the
+        # aggregator thread pool survives across steps
+        self._writers: dict[AggregationConfig, CollectiveWriter] = {}
+
+    def _plan_for(self, n_rows: int, row_bytes: int, n_ranks: int):
+        key = (n_rows, row_bytes, n_ranks)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            plan = plan_rows(split_rows(n_rows, n_ranks), row_bytes)
+            validate_plan(plan)  # lock-free safety invariant
+            self._plan_cache[key] = plan
+            self._plan_misses += 1
+        else:
+            self._plan_hits += 1
+        return plan
+
+    def plan_cache_info(self) -> dict[str, int]:
+        return {
+            "hits": self._plan_hits,
+            "misses": self._plan_misses,
+            "entries": len(self._plan_cache),
+        }
+
+    def _writer_for(self, aggregation: AggregationConfig | None) -> CollectiveWriter:
+        cfg = aggregation or AggregationConfig()
+        w = self._writers.get(cfg)
+        if w is None or w.fd != self.file.fd:
+            if w is not None:
+                w.close()
+            w = CollectiveWriter(self.file.fd, cfg)
+            self._writers[cfg] = w
+        return w
 
     # -- introspection ---------------------------------------------------------
 
@@ -157,9 +195,7 @@ class CheckpointManager:
                 name = f"{group}/state/{path}"
                 meta = self.file.create_dataset(name, arr.shape, arr.dtype)
                 n_rows = arr.shape[0] if arr.ndim else 1
-                counts = split_rows(n_rows, n_ranks)
-                plan = plan_rows(counts, meta.row_bytes)
-                validate_plan(plan)  # lock-free safety invariant
+                plan = self._plan_for(n_rows, meta.row_bytes, n_ranks)
                 metas[path], plans[path] = meta, plan
                 total_bytes += arr.nbytes
 
@@ -174,7 +210,7 @@ class CheckpointManager:
                         reqs[r].append(
                             WriteRequest(meta.offset + plan.extents[r].offset, flat[lo:hi])
                         )
-            writer = CollectiveWriter(self.file.fd, aggregation or AggregationConfig())
+            writer = self._writer_for(aggregation)
             stats = (
                 writer.write_independent(reqs) if independent else writer.write_collective(reqs)
             )
@@ -261,8 +297,7 @@ class CheckpointManager:
         group = _step_group(step)
         meta = self.file.meta(f"{group}/state/{leaf_path}")
         n_rows = meta.shape[0] if meta.shape else 1
-        counts = split_rows(n_rows, n_ranks)
-        plan = plan_rows(counts, meta.row_bytes)
+        plan = self._plan_for(n_rows, meta.row_bytes, n_ranks)
         lo, hi = plan.row_range(rank)
         return self.file.read_rows(f"{group}/state/{leaf_path}", lo, hi - lo)
 
@@ -291,6 +326,9 @@ class CheckpointManager:
         return gp, bb, list(order)
 
     def close(self) -> None:
+        for w in self._writers.values():
+            w.close()
+        self._writers.clear()
         self.file.close()
 
     def __enter__(self) -> "CheckpointManager":
@@ -306,18 +344,29 @@ class AsyncCheckpointer:
 
     ``save`` stages device arrays to host synchronously (cheap, and required
     before the step buffer is donated/overwritten) and runs the pwrite +
-    commit on a background thread.  At most one snapshot is in flight;
-    a second save joins the previous one first (bounded staging memory)."""
+    commit on a background thread.  At most one snapshot is in flight.
 
-    def __init__(self, manager: CheckpointManager):
+    **Double-buffered mode** (default, paper §5.2 "asynchronous I/O"): the
+    device→host staging of step *n+1* overlaps the disk write of step *n* —
+    two staging buffers are alive at the peak (the in-flight one and the one
+    being filled).  ``double_buffer=False`` restores the seed behaviour of
+    joining the in-flight write *before* staging (single buffer, no
+    stage/write overlap)."""
+
+    def __init__(self, manager: CheckpointManager, *, double_buffer: bool = True):
         self.manager = manager
+        self.double_buffer = double_buffer
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
         self._last_result: SaveResult | None = None
 
     def save(self, step: int, state: Any, **kw) -> None:
-        self.wait()
-        staged = _stage_to_host(state)
+        if self.double_buffer:
+            staged = _stage_to_host(state)  # overlaps the in-flight write
+            self.wait()
+        else:
+            self.wait()
+            staged = _stage_to_host(state)
 
         def run() -> None:
             try:

@@ -23,7 +23,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map
+try:  # newer jax: public alias + check_vma kwarg
+    shard_map = jax.shard_map
+    _SM_NOCHECK = {"check_vma": False}
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
+
+    _SM_NOCHECK = {"check_rep": False}
 
 
 def collective_plan(mesh: Mesh, axis: str, counts: np.ndarray) -> tuple[int, np.ndarray]:
@@ -42,7 +48,7 @@ def collective_plan(mesh: Mesh, axis: str, counts: np.ndarray) -> tuple[int, np.
         mesh=mesh,
         in_specs=P(axis),
         out_specs=(P(), P(axis)),
-        check_vma=False,
+        **_SM_NOCHECK,
     )
     def plan(c):
         # c: (1,) — this shard's grid count
@@ -80,7 +86,7 @@ def gather_to_aggregators(
         mesh=mesh,
         in_specs=P(axis),
         out_specs=P(axis),
-        check_vma=False,
+        **_SM_NOCHECK,
     )
     def gather(block):
         # Gather the whole axis, then slice this shard's group window.  On a
@@ -98,16 +104,23 @@ def gather_to_aggregators(
         return gather(x)
 
 
+@jax.jit
+def _pack_linear(bufs: tuple[jax.Array, ...]) -> jax.Array:
+    return jnp.concatenate(
+        [
+            b.reshape(-1).view(jnp.uint8)
+            if b.dtype == jnp.uint8
+            else b.reshape(-1).astype(b.dtype).view(jnp.uint8)
+            for b in bufs
+        ]
+    )
+
+
 def device_pack_linear(buffers: list[jax.Array]) -> jax.Array:
     """Concatenate a rank's tensors into its linear write buffer (the paper's
     'one to one mapping of data from the code to the HDF5 file ... a linear
-    write buffer is initialised on each rank').  jit-compiled so the pack is
-    one fused kernel on device before D2H."""
-
-    @jax.jit
-    def pack(bufs):
-        return jnp.concatenate([b.reshape(-1).view(jnp.uint8) if b.dtype == jnp.uint8
-                                else b.reshape(-1).astype(b.dtype).view(jnp.uint8)
-                                for b in bufs])
-
-    return pack(buffers)
+    write buffer is initialised on each rank').  The jitted pack lives at
+    module level so jax's own cache (keyed on treedef + shapes/dtypes) makes
+    repeat calls with a static topology trace-free — one fused device kernel
+    per distinct buffer signature, not per step."""
+    return _pack_linear(tuple(buffers))

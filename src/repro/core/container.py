@@ -47,6 +47,8 @@ import numpy as np
 
 from .hyperslab import SlabPlan, align_up
 
+IOV_MAX = 1024  # conservative portable IOV_MAX (per preadv/pwritev call)
+
 MAGIC = b"TH5\x89"
 VERSION = 1
 SUPERBLOCK_SIZE = 512
@@ -63,6 +65,81 @@ class TH5Error(RuntimeError):
 
 class CorruptFileError(TH5Error):
     pass
+
+
+class ReadCounter:
+    """Process-wide read-syscall accounting (thread-safe) — the read-side
+    mirror of ``aggregation.COPY_COUNTER``; benchmarks snapshot around a
+    gather to compute syscalls-per-byte."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.n_syscalls = 0
+        self.bytes_read = 0
+
+    def add(self, nbytes: int, syscalls: int) -> None:
+        with self._lock:
+            self.n_syscalls += int(syscalls)
+            self.bytes_read += int(nbytes)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.n_syscalls = 0
+            self.bytes_read = 0
+
+    def snapshot(self) -> tuple[int, int]:
+        with self._lock:
+            return self.n_syscalls, self.bytes_read
+
+
+READ_COUNTER = ReadCounter()
+
+
+def _advance(bufs: list[memoryview], skip: int) -> list[memoryview]:
+    """Drop the first ``skip`` bytes from a buffer list (short-I/O resume)."""
+    if skip == 0:
+        return bufs
+    out = []
+    for b in bufs:
+        if skip >= len(b):
+            skip -= len(b)
+            continue
+        out.append(b[skip:] if skip else b)
+        skip = 0
+    return out
+
+
+def _byte_view(a: np.ndarray) -> memoryview:
+    """Writable flat byte view of a contiguous array (buffer-protocol dance
+    for extension dtypes like bfloat16)."""
+    if a.size == 0:
+        return memoryview(b"")  # cast('B') rejects zeros in shape
+    try:
+        return memoryview(a).cast("B")
+    except (ValueError, TypeError):
+        return memoryview(a.view(np.uint8)).cast("B")
+
+
+def preadv_full(fd: int, views: Sequence[memoryview], offset: int) -> tuple[int, int]:
+    """Vectored scatter-read of one contiguous file range into many
+    destination buffers (``os.preadv``), resuming short reads and chunking at
+    IOV_MAX.  Returns (bytes_read, syscalls); raises on EOF mid-range."""
+    total, calls = 0, 0
+    for i in range(0, len(views), IOV_MAX):
+        chunk = list(views[i : i + IOV_MAX])
+        want = sum(len(v) for v in chunk)
+        got = 0
+        while got < want:  # preadv may be short
+            n = os.preadv(fd, _advance(chunk, got), offset + total + got)
+            calls += 1
+            if n <= 0:
+                raise CorruptFileError(
+                    f"preadv hit EOF at offset {offset + total + got} "
+                    f"({want - got} bytes missing)"
+                )
+            got += n
+        total += want
+    return total, calls
 
 
 def _norm(path: str) -> str:
@@ -436,42 +513,92 @@ class TH5File:
 
     # -- reads -----------------------------------------------------------------
 
+    @staticmethod
+    def _is_native(dt: np.dtype) -> bool:
+        return dt.byteorder in ("|", "=") or dt.isnative
+
     def read(self, name: str, verify: bool = False) -> np.ndarray:
         meta = self.meta(name)
+        dt = meta.np_dtype
+        if self._is_native(dt):
+            # vectored read straight into the result array — no intermediate
+            # bytes object between the page cache and the caller's buffer
+            out = np.empty(meta.shape, dtype=dt)
+            try:
+                n, calls = preadv_full(self._fd, [_byte_view(out)], meta.offset)
+            except CorruptFileError:
+                raise CorruptFileError(f"short read on {name}") from None
+            READ_COUNTER.add(n, calls)
+            if verify and meta.crc32 is not None:
+                if (zlib.crc32(_byte_view(out)) & 0xFFFFFFFF) != meta.crc32:
+                    raise CorruptFileError(f"payload CRC mismatch on {name}")
+            return out
+        # foreign-endian fallback: read raw, byteswap to native
         raw = os.pread(self._fd, meta.nbytes, meta.offset)
+        READ_COUNTER.add(len(raw), 1)
         if len(raw) != meta.nbytes:
             raise CorruptFileError(f"short read on {name}")
         if verify and meta.crc32 is not None:
             if (zlib.crc32(raw) & 0xFFFFFFFF) != meta.crc32:
                 raise CorruptFileError(f"payload CRC mismatch on {name}")
-        arr = np.frombuffer(raw, dtype=meta.np_dtype)
-        # self-description: byteswap to native if the file was foreign-endian
-        if arr.dtype.byteorder not in ("|", "=") and not arr.dtype.isnative:
-            arr = arr.astype(arr.dtype.newbyteorder("="))
+        arr = np.frombuffer(raw, dtype=dt)
+        arr = arr.astype(arr.dtype.newbyteorder("="))
         return arr.reshape(meta.shape)
+
+    def read_rows_into(
+        self, name_or_meta: str | DatasetMeta, row_start: int, n_rows: int, out: np.ndarray
+    ) -> int:
+        """Vectored read of contiguous rows into a preallocated buffer
+        (``os.preadv`` — zero intermediate copies).  Returns bytes read."""
+        meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
+        nrows_total = meta.shape[0] if meta.shape else 1
+        if row_start < 0 or row_start + n_rows > nrows_total:
+            raise TH5Error("row range out of bounds")
+        want = n_rows * meta.row_bytes
+        if out.nbytes != want:
+            raise TH5Error(f"out buffer is {out.nbytes} B, need {want}")
+        if not out.flags.c_contiguous or not out.flags.writeable:
+            raise TH5Error("out buffer must be C-contiguous and writable")
+        n, calls = preadv_full(
+            self._fd, [_byte_view(out)], meta.offset + row_start * meta.row_bytes
+        )
+        READ_COUNTER.add(n, calls)
+        return n
 
     def read_rows(self, name: str, row_start: int, n_rows: int) -> np.ndarray:
         """Partial read of contiguous rows — one hyperslab."""
         meta = self.meta(name)
+        dt = meta.np_dtype
+        if self._is_native(dt):
+            out = np.empty((n_rows,) + tuple(meta.shape[1:]), dtype=dt)
+            self.read_rows_into(meta, row_start, n_rows, out)
+            return out
         nrows_total = meta.shape[0] if meta.shape else 1
         if row_start < 0 or row_start + n_rows > nrows_total:
             raise TH5Error("row range out of bounds")
         raw = os.pread(self._fd, n_rows * meta.row_bytes, meta.offset + row_start * meta.row_bytes)
-        arr = np.frombuffer(raw, dtype=meta.np_dtype)
-        if not arr.dtype.isnative:
-            arr = arr.astype(arr.dtype.newbyteorder("="))
+        READ_COUNTER.add(len(raw), 1)
+        arr = np.frombuffer(raw, dtype=dt)
+        arr = arr.astype(arr.dtype.newbyteorder("="))
         return arr.reshape((n_rows,) + tuple(meta.shape[1:]))
 
     def read_row_indices(self, name: str, indices: Iterable[int]) -> np.ndarray:
-        """Gather arbitrary rows (sliding-window reads). Coalesces contiguous
-        runs into single preads."""
+        """Gather arbitrary rows (sliding-window reads) with vectored
+        scatter-reads: contiguous row runs in the file become ONE ``preadv``
+        that lands each row directly in its (possibly non-adjacent) slot of
+        the output array — one syscall per run, zero staging copies."""
         meta = self.meta(name)
         idx = np.asarray(list(indices), dtype=np.int64)
-        out = np.empty((len(idx),) + tuple(meta.shape[1:]), dtype=meta.np_dtype.newbyteorder("="))
+        dt = meta.np_dtype
+        out = np.empty((len(idx),) + tuple(meta.shape[1:]), dtype=dt.newbyteorder("="))
         if len(idx) == 0:
             return out
+        nrows_total = meta.shape[0] if meta.shape else 1
+        if idx.min() < 0 or idx.max() >= nrows_total:
+            raise TH5Error("row range out of bounds")
         order = np.argsort(idx, kind="stable")
         sorted_idx = idx[order]
+        scatter = self._is_native(dt)
         run_start = 0
         pos = 0
         while run_start < len(sorted_idx):
@@ -479,8 +606,14 @@ class TH5File:
             while run_end < len(sorted_idx) and sorted_idx[run_end] == sorted_idx[run_end - 1] + 1:
                 run_end += 1
             n = run_end - run_start
-            block = self.read_rows(name, int(sorted_idx[run_start]), n)
-            out[order[pos : pos + n]] = block
+            if scatter:
+                views = [_byte_view(out[j : j + 1]) for j in order[pos : pos + n]]
+                got, calls = preadv_full(
+                    self._fd, views, meta.offset + int(sorted_idx[run_start]) * meta.row_bytes
+                )
+                READ_COUNTER.add(got, calls)
+            else:
+                out[order[pos : pos + n]] = self.read_rows(name, int(sorted_idx[run_start]), n)
             pos += n
             run_start = run_end
         return out

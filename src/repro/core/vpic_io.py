@@ -91,8 +91,8 @@ def write_vpic_step(
                 data = rng.integers(0, 2**31 - 1, n).astype(dtype)
             reqs[r].append(WriteRequest(meta.offset + plan.extents[r].offset, data))
 
-    writer = CollectiveWriter(f.fd, aggregation or AggregationConfig())
-    stats = writer.write_independent(reqs) if independent else writer.write_collective(reqs)
+    with CollectiveWriter(f.fd, aggregation or AggregationConfig()) as writer:
+        stats = writer.write_independent(reqs) if independent else writer.write_collective(reqs)
     f.commit()
     return VpicResult(
         n_particles=int(counts.sum()),

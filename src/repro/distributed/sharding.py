@@ -87,7 +87,13 @@ def resolve_spec(logical_axes: tuple, rules: Mapping[str, Any]) -> P:
         if isinstance(entry, (tuple, list)):
             kept = tuple(a for a in entry if a not in used)
             used.update(kept)
-            entries.append(kept if kept else None)
+            # a 1-tuple rule is just a wrapped single axis — unwrap it, since
+            # older jax PartitionSpec equality does not normalise ('x',) to
+            # 'x'; genuine multi-axis rules keep their tuple grouping
+            if len(entry) == 1 and kept:
+                entries.append(kept[0])
+            else:
+                entries.append(kept if kept else None)
         else:
             if entry in used:
                 entries.append(None)

@@ -5,8 +5,7 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core.container import (
     SUPERBLOCK_SIZE,

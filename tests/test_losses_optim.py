@@ -4,8 +4,7 @@ behaviour, schedules, Adafactor, master-weight mixed precision."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.configs import get_smoke
 from repro.models.common import ModelConfig

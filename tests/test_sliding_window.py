@@ -1,8 +1,7 @@
 """Offline sliding window: LOD stride reads + space-tree traversal."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._hyp import given, settings, st
 
 from repro.core import uid
 from repro.core.container import TH5File
