@@ -14,7 +14,10 @@ Every run also measures **copies-per-byte** and **syscalls-per-byte**
 bandwidth limiter) and persists everything to ``BENCH_io.json`` so the
 perf trajectory is tracked across PRs.  The ``tp_sharded`` section pits the
 zero-copy ``nd_slab_requests`` pipeline against the seed's per-row
-``tobytes()`` implementation (kept verbatim below as the baseline)."""
+``tobytes()`` implementation (kept verbatim below as the baseline); the
+``compression`` section runs the chunked filter pipeline per codec and
+tracks compression ratio, effective (post-compression) bandwidth,
+encode/write overlap, and the LOD chunk-cache hit rate."""
 
 from __future__ import annotations
 
@@ -28,6 +31,7 @@ import numpy as np
 from repro.core.aggregation import (
     COPY_COUNTER,
     AggregationConfig,
+    ChunkPipeline,
     CollectiveWriter,
     WriteRequest,
     nd_slab_requests,
@@ -213,8 +217,68 @@ def scatter_read(path: str, *, n_rows: int = 8192, cols: int = 256, stride: int 
     }
 
 
+# -- chunked + compressed trajectory benchmark ---------------------------------
+
+
+CODECS = ("none", "zlib", "int8-blockq")
+
+
+def compression_write(
+    path: str,
+    codec: str,
+    *,
+    rows: int = 8192,
+    cols: int = 1024,
+    chunk_rows: int = 512,
+    n_aggregators: int = 8,
+) -> dict:
+    """One chunked field snapshot through the overlapped filter pipeline
+    (Jin-style: chunk k+1 encodes in the aggregator pool while chunk k
+    drains to disk), then an LOD sliding-window replay to measure the
+    chunk-cache hit rate."""
+    rng = np.random.default_rng(7)
+    # quantised-field proxy: few distinct f32 words, like sensor-resolution
+    # simulation output — compressible by zlib, ideal for int8-blockq
+    field = (rng.integers(0, 1024, (rows, cols)) / 1024.0).astype(np.float32)
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/fields/u", (rows, cols), "<f4", chunk_rows, codec)
+        COPY_COUNTER.reset()
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=n_aggregators)) as pipe:
+            fs = pipe.write(meta, field)
+        os.fsync(f.fd)
+        f.commit()
+
+        t0 = time.perf_counter()
+        full = f.read("/fields/u")
+        read_wall = time.perf_counter() - t0
+        if codec != "int8-blockq":  # lossless: spot-check the round trip
+            np.testing.assert_array_equal(full[:: rows // 16], field[:: rows // 16])
+
+        # sliding-window LOD replay, two passes: pass 2 should hit the cache
+        windows = [range(lo, min(lo + rows // 8, rows), 4) for lo in range(0, rows, rows // 8)]
+        for _ in range(2):
+            for w in windows:
+                f.read_row_indices("/fields/u", w)
+        cache = f.chunk_cache.stats()
+        n_copies, bytes_copied = COPY_COUNTER.snapshot()
+    return {
+        "codec": codec,
+        "raw_mb": round(fs.raw_bytes / 1e6, 1),
+        "stored_mb": round(fs.stored_bytes / 1e6, 1),
+        "ratio": round(fs.ratio, 3),
+        "effective_MBps": round(fs.effective_bandwidth_bps / 1e6, 1),
+        "overlap_ratio": round(fs.overlap_ratio, 3),
+        "read_MBps": round(field.nbytes / read_wall / 1e6, 1),
+        "cache_hit_rate": round(cache["hit_rate"], 3),
+        "copies_per_byte": bytes_copied / fs.raw_bytes if fs.raw_bytes else 0.0,
+        "n_chunks": fs.n_chunks,
+        "chunk_rows": chunk_rows,
+    }
+
+
 def run(sizes_mb=(64, 192), ranks=(4, 16, 32, 64, 128), n_aggregators=8, repeats=3,
-        tp_ranks=32, json_path=BENCH_JSON, out=print):
+        tp_ranks=32, json_path=BENCH_JSON, out=print, codecs=CODECS,
+        compression_rows=8192):
     rows = []
     with tempfile.TemporaryDirectory() as d:
         for size_mb in sizes_mb:
@@ -266,6 +330,18 @@ def run(sizes_mb=(64, 192), ranks=(4, 16, 32, 64, 128), n_aggregators=8, repeats
         sr = scatter_read(os.path.join(d, "scatter.th5"))
         out(f"scatter_read,bw={sr['bw_MBps']:.0f}MB/s,syscalls_per_mb={sr['syscalls_per_mb']:.2f}")
 
+        # chunked + compressed filter-pipeline trajectory
+        comp = []
+        for codec in codecs:
+            c = compression_write(
+                os.path.join(d, f"comp_{codec}.th5"), codec,
+                rows=compression_rows, n_aggregators=n_aggregators,
+            )
+            comp.append(c)
+            out(f"compression,codec={codec},ratio={c['ratio']:.2f},"
+                f"effective={c['effective_MBps']:.0f}MB/s,overlap={c['overlap_ratio']:.2f},"
+                f"cache_hit_rate={c['cache_hit_rate']:.2f}")
+
     if json_path:
         doc = {}
         if os.path.exists(json_path):
@@ -275,11 +351,12 @@ def run(sizes_mb=(64, 192), ranks=(4, 16, 32, 64, 128), n_aggregators=8, repeats
             except (OSError, ValueError):
                 doc = {}
         doc.update({
-            "schema": 1,
+            "schema": 2,
             "generated_unix": time.time(),
             "fig8": rows,
             "tp_sharded": tp,
             "scatter_read": sr,
+            "compression": comp,
         })
         with open(json_path, "w") as fh:
             json.dump(doc, fh, indent=2, sort_keys=True)
@@ -294,8 +371,12 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale CI smoke run (seconds, not minutes)")
     ap.add_argument("--json", default=BENCH_JSON, help="output JSON path ('' disables)")
+    ap.add_argument("--codec", choices=CODECS, default=None,
+                    help="restrict the compression section to one codec (CI runs zlib)")
     a = ap.parse_args()
+    codecs = (a.codec,) if a.codec else CODECS
     if a.smoke:
-        run(sizes_mb=(2,), ranks=(4, 32), repeats=1, json_path=a.json or None)
+        run(sizes_mb=(2,), ranks=(4, 32), repeats=1, json_path=a.json or None,
+            codecs=codecs, compression_rows=2048)
     else:
-        run(json_path=a.json or None)
+        run(json_path=a.json or None, codecs=codecs)

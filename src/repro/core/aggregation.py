@@ -26,6 +26,14 @@ benchmarks can assert copies-per-byte == 0 on the coalesced path.
 Everything is lock-free: extents are disjoint by construction
 (``hyperslab.validate_plan``), so concurrent aggregator threads never
 overlap — the paper's "safe to disable the file locking".
+
+Since format v2 the aggregators also run the **filter pipeline** for chunked
+datasets (:class:`ChunkPipeline`): chunk encoding happens *in the aggregator
+pool, overlapped with the file writes* — compression of chunk k+1 proceeds
+while chunk k drains to disk (the Jin et al. deeply-integrated-compression
+pipeline), and the file-domain bucketing below is size-aware, so
+variable-length post-filter chunks balance across aggregators exactly like
+fixed-size slabs.  See ``docs/ARCHITECTURE.md`` for the full stage map.
 """
 
 from __future__ import annotations
@@ -33,13 +41,16 @@ from __future__ import annotations
 import os
 import threading
 import time
+import zlib
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Sequence
 
 import numpy as np
 
-from .container import IOV_MAX, _advance, pwrite_full
+from .codecs import CODEC_NONE, encode_chunk, get_codec
+from .container import IOV_MAX, DatasetMeta, TH5Error, TH5File, _advance, _byte_view, pwrite_full
 
 
 class CopyCounter:
@@ -168,7 +179,11 @@ def assign_file_domains(
     inner-dim (TP-style) shardings — every rank's per-row slivers stay
     separated by the other ranks' columns; domain bucketing stitches them
     back into whole-row runs.  Requests are sorted by offset and split at
-    request boundaries into ≤ ``n_aggregators`` balanced-byte domains."""
+    request boundaries into ≤ ``n_aggregators`` balanced-byte domains.
+    Balancing is by *bytes*, not request count, so the variable-length
+    post-filter chunks a :class:`ChunkPipeline` produces (a 10:1-compressed
+    chunk next to an incompressible raw one) spread as evenly as fixed-size
+    slabs."""
     ordered = sorted(reqs, key=lambda r: r.offset)
     total = sum(r.nbytes for r in ordered)
     if not ordered or total == 0:
@@ -488,3 +503,211 @@ def nd_slab_requests(
         WriteRequest(off, _run_payload(arr[idx]))
         for off, idx in zip(off_list, np.ndindex(*outer_dims))
     ]
+
+
+# -- the overlapped filter (codec) pipeline ------------------------------------
+
+
+@dataclass
+class FilterStats:
+    """Accounting for one chunked-dataset write through the filter pipeline.
+
+    ``encode_s`` is summed across codec workers and ``write_s`` across drain
+    pwrites, so ``overlap_ratio = (encode_s + write_s) / wall_s`` exceeds 1.0
+    exactly when encoding genuinely overlapped the disk writes (the Jin-style
+    pipeline working as intended).
+    """
+
+    n_chunks: int = 0
+    raw_bytes: int = 0
+    stored_bytes: int = 0
+    encode_s: float = 0.0  # summed codec-worker time (parallel wall)
+    write_s: float = 0.0  # summed drain-side write time
+    wall_s: float = 0.0
+    n_syscalls: int = 0
+
+    @property
+    def ratio(self) -> float:
+        """Compression ratio raw:stored (1.0 = incompressible / none)."""
+        return self.raw_bytes / self.stored_bytes if self.stored_bytes else 1.0
+
+    @property
+    def effective_bandwidth_bps(self) -> float:
+        """Raw (pre-filter) bytes per second of wall time — the number an
+        application sees: logical bytes checkpointed per second."""
+        return self.raw_bytes / self.wall_s if self.wall_s > 0 else float("inf")
+
+    @property
+    def overlap_ratio(self) -> float:
+        return (self.encode_s + self.write_s) / self.wall_s if self.wall_s > 0 else 0.0
+
+    def merge(self, other: "FilterStats") -> "FilterStats":
+        self.n_chunks += other.n_chunks
+        self.raw_bytes += other.raw_bytes
+        self.stored_bytes += other.stored_bytes
+        self.encode_s += other.encode_s
+        self.write_s += other.write_s
+        self.wall_s += other.wall_s
+        self.n_syscalls += other.n_syscalls
+        return self
+
+
+class ChunkPipeline:
+    """Overlapped chunk filter pipeline (Jin et al.: compression deeply
+    integrated with the parallel write, not bolted on).
+
+    The persistent codec pool (the aggregators wearing their filter hat)
+    encodes chunks ahead while the drain loop appends each finished chunk's
+    variable-length payload to the file — compression of chunk k+1 runs
+    while chunk k drains to disk.  zlib/CRC/numpy all release the GIL, so
+    the overlap is real thread parallelism.
+
+    The ``none`` codec takes a separate zero-copy route: chunk extents are
+    allocated up front (sizes are known), the per-chunk ``WriteRequest``
+    views are bucketed into size-aware file domains, and the pool issues
+    vectored ``pwritev`` per domain — ``COPY_COUNTER`` stays at zero, the
+    PR-1 invariant.
+    """
+
+    def __init__(self, f: TH5File, config: AggregationConfig | None = None):
+        self.file = f
+        self.config = config or AggregationConfig()
+        self._pool: ThreadPoolExecutor | None = None
+
+    def _get_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=max(2, self.config.n_aggregators),
+                thread_name_prefix="chunk-codec",
+            )
+        return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self) -> "ChunkPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # best-effort thread release
+        try:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+        except Exception:
+            pass
+
+    def write(self, name_or_meta: str | DatasetMeta, array: np.ndarray) -> FilterStats:
+        f = self.file
+        meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else f.meta(name_or_meta)
+        if meta.chunks is None:
+            raise TH5Error("ChunkPipeline.write needs a chunked dataset")
+        arr = np.asarray(array)
+        if tuple(arr.shape) != tuple(meta.shape):
+            raise TH5Error(f"shape mismatch: {arr.shape} != {meta.shape}")
+        if arr.dtype != meta.np_dtype:
+            arr = arr.astype(meta.np_dtype)
+        if not arr.flags.c_contiguous:
+            COPY_COUNTER.add(arr.nbytes)  # compaction copy, accounted like _as_view
+            arr = np.ascontiguousarray(arr)
+        codec = get_codec(meta.codec)
+        stats = FilterStats()
+        t_start = time.perf_counter()
+        first = len(meta.chunks)  # resume-safe: skip already-written chunks
+        chunk_ranges = [meta.chunk_row_range(ci) for ci in range(first, meta.n_chunks_expected)]
+        if not chunk_ranges:
+            stats.wall_s = time.perf_counter() - t_start
+            return stats
+        if codec.codec_id == CODEC_NONE:
+            self._write_none(meta, arr, chunk_ranges, stats)
+        else:
+            pool = self._get_pool()
+
+            def enc(lo: int, hi: int):
+                t0 = time.perf_counter()
+                out = encode_chunk(codec, arr[lo:hi])
+                return out, time.perf_counter() - t0
+
+            # bounded in-flight window: keep the codec workers busy without
+            # staging the whole encoded dataset ahead of a disk-bound drain —
+            # peak held payloads stay O(window × chunk size)
+            window = 2 * max(2, self.config.n_aggregators)
+            pending = deque(
+                pool.submit(enc, lo, hi) for lo, hi in chunk_ranges[:window]
+            )
+            next_up = window
+            while pending:  # in-order drain; later encodes overlap these writes
+                fut = pending.popleft()
+                if next_up < len(chunk_ranges):  # refill before blocking
+                    pending.append(pool.submit(enc, *chunk_ranges[next_up]))
+                    next_up += 1
+                (payload, raw_n, raw_crc, stored_crc, cid), dt = fut.result()
+                stats.encode_s += dt
+                t0 = time.perf_counter()
+                f.append_chunk(
+                    meta,
+                    payload,
+                    raw_nbytes=raw_n,
+                    raw_crc32=raw_crc,
+                    stored_crc32=stored_crc,
+                    codec_id=cid,
+                )
+                stats.write_s += time.perf_counter() - t0
+                stats.n_syscalls += 1
+                stats.n_chunks += 1
+                stats.raw_bytes += raw_n
+                stats.stored_bytes += payload.nbytes if isinstance(payload, memoryview) else len(payload)
+        stats.wall_s = time.perf_counter() - t_start
+        return stats
+
+    def _write_none(self, meta, arr, chunk_ranges, stats: FilterStats) -> None:
+        """Zero-copy raw-chunk route: allocate every extent up front, bucket
+        the view-carrying requests into file domains, drain with vectored
+        writes from the pool."""
+        f = self.file
+        rb = meta.row_bytes
+        reqs: list[WriteRequest] = []
+        t0 = time.perf_counter()
+        for lo, hi in chunk_ranges:
+            chunk = arr[lo:hi]
+            view = _byte_view(chunk)
+            crc = zlib.crc32(view) & 0xFFFFFFFF
+            rec = f.alloc_chunk(
+                meta,
+                (hi - lo) * rb,
+                raw_nbytes=(hi - lo) * rb,
+                raw_crc32=crc,
+                stored_crc32=crc,
+                codec_id=CODEC_NONE,
+            )
+            reqs.append(WriteRequest(rec.offset, chunk))
+            stats.n_chunks += 1
+            stats.raw_bytes += rec.raw_nbytes
+            stats.stored_bytes += rec.nbytes
+        stats.encode_s += time.perf_counter() - t0  # CRC framing pass
+        cfg = self.config
+        domains = assign_file_domains(reqs, cfg.n_aggregators) if cfg.file_domains else [reqs]
+        lock = threading.Lock()
+
+        def drain(domain: list[WriteRequest]) -> None:
+            t1 = time.perf_counter()
+            wrote = calls = 0
+            for off, run in coalesce_runs(domain, cfg.buffer_bytes):
+                b, c = pwritev_run(f.fd, off, run)
+                wrote += b
+                calls += c
+            dt = time.perf_counter() - t1
+            with lock:
+                stats.n_syscalls += calls
+                stats.write_s += dt
+
+        if len(domains) <= 1:
+            for d in domains:
+                drain(d)
+        else:
+            pool = self._get_pool()
+            for fut in [pool.submit(drain, d) for d in domains]:
+                fut.result()

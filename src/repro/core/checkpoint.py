@@ -19,17 +19,25 @@ addressable → offline sliding window + time-reversible steering.
 
 from __future__ import annotations
 
+import fnmatch
 import json
 import os
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
 from . import tree_ser, uid
-from .aggregation import AggregationConfig, CollectiveWriter, WriteRequest, WriteStats
+from .aggregation import (
+    AggregationConfig,
+    ChunkPipeline,
+    CollectiveWriter,
+    FilterStats,
+    WriteRequest,
+    WriteStats,
+)
 from .container import CorruptFileError, TH5File
 from .hyperslab import plan_rows, validate_plan
 
@@ -48,6 +56,54 @@ def split_rows(n_rows: int, n_ranks: int) -> np.ndarray:
     return np.array([base + (1 if r < rem else 0) for r in range(n_ranks)], dtype=np.int64)
 
 
+@dataclass(frozen=True)
+class CodecPolicy:
+    """Per-dataset filter policy for snapshots (paper workload reality: not
+    every tensor tolerates loss).
+
+    ``rules`` are ``(fnmatch pattern on the leaf path, codec spec)`` pairs,
+    first match wins; unmatched leaves use ``default``.  The canonical split
+    is *lossless for optimizer state, lossy for field snapshots*::
+
+        CodecPolicy(default="zlib", rules=(("fields/*", "int8-blockq"),))
+
+    Guard rails: leaves below ``min_chunk_bytes`` (or 0-d) stay on the
+    contiguous zero-copy path, and a lossy codec on a non-float leaf falls
+    back to ``lossless_fallback`` (quantising step counters corrupts them).
+    ``chunk_rows=None`` sizes chunks to ~``target_chunk_bytes`` each.
+    """
+
+    default: str = "none"
+    rules: tuple[tuple[str, str], ...] = ()
+    chunk_rows: int | None = None
+    target_chunk_bytes: int = 1 << 20
+    min_chunk_bytes: int = 1 << 16
+    lossless_fallback: str = "zlib"
+
+    def codec_for(self, leaf_path: str) -> str:
+        for pattern, codec in self.rules:
+            if fnmatch.fnmatchcase(leaf_path, pattern):
+                return codec
+        return self.default
+
+    def resolve(self, leaf_path: str, arr: np.ndarray) -> str:
+        """The codec actually used for this leaf, after the guard rails."""
+        codec = self.codec_for(leaf_path)
+        if codec == "none":
+            return "none"
+        if arr.ndim == 0 or not arr.shape or arr.nbytes < self.min_chunk_bytes:
+            return "none"
+        is_float = arr.dtype.kind == "f" or arr.dtype.name.startswith(("bfloat16", "float8"))
+        if codec.partition(":")[0] == "int8-blockq" and not is_float:
+            return self.lossless_fallback
+        return codec
+
+    def chunk_rows_for(self, n_rows: int, row_bytes: int) -> int:
+        if self.chunk_rows is not None:
+            return max(1, min(int(self.chunk_rows), max(n_rows, 1)))
+        return max(1, min(n_rows, self.target_chunk_bytes // max(row_bytes, 1)))
+
+
 @dataclass
 class SaveResult:
     step: int
@@ -56,10 +112,15 @@ class SaveResult:
     wall_s: float
     write_stats: WriteStats
     n_leaves: int
+    filter_stats: FilterStats = field(default_factory=FilterStats)
 
     @property
     def bandwidth_bps(self) -> float:
         return self.bytes_data / self.wall_s if self.wall_s else float("inf")
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.filter_stats.ratio
 
 
 class CheckpointManager:
@@ -95,6 +156,9 @@ class CheckpointManager:
         # persistent collective writers (one per aggregation config) so the
         # aggregator thread pool survives across steps
         self._writers: dict[AggregationConfig, CollectiveWriter] = {}
+        # persistent filter pipelines (chunked/compressed leaves) — same
+        # lifetime policy as the writers
+        self._pipelines: dict[AggregationConfig, ChunkPipeline] = {}
 
     def _plan_for(self, n_rows: int, row_bytes: int, n_ranks: int):
         key = (n_rows, row_bytes, n_ranks)
@@ -124,6 +188,16 @@ class CheckpointManager:
             w = CollectiveWriter(self.file.fd, cfg)
             self._writers[cfg] = w
         return w
+
+    def _pipeline_for(self, aggregation: AggregationConfig | None) -> ChunkPipeline:
+        cfg = aggregation or AggregationConfig()
+        p = self._pipelines.get(cfg)
+        if p is None or p.file is not self.file:
+            if p is not None:
+                p.close()
+            p = ChunkPipeline(self.file, cfg)
+            self._pipelines[cfg] = p
+        return p
 
     # -- introspection ---------------------------------------------------------
 
@@ -157,12 +231,18 @@ class CheckpointManager:
         extra_datasets: Mapping[str, np.ndarray] | None = None,
         topology_override: tuple | None = None,
         overwrite: bool = False,
+        codec_policy: CodecPolicy | None = None,
     ) -> SaveResult:
         """Snapshot ``state`` as ``/simulation/step_<step>``.
 
         ``n_ranks`` models the SPMD writer count: every leaf's rows are split
         contiguously over ranks (reduce+exscan plan) and written as disjoint
         hyperslabs through the collective-buffering writer.
+
+        ``codec_policy`` routes selected leaves through the chunked filter
+        pipeline instead (compressed, variable-length chunks written by the
+        aggregators overlapped with encoding); leaves resolved to ``none``
+        keep the zero-copy contiguous path.
         """
         t0 = time.perf_counter()
         skeleton, leaves = tree_ser.flatten_state(state)
@@ -188,13 +268,26 @@ class CheckpointManager:
             # ---- collective creation: one planner allocates all extents ----
             metas: dict[str, Any] = {}
             plans: dict[str, Any] = {}
+            chunked: dict[str, str] = {}  # leaf path -> resolved codec
             total_bytes = 0
             for path, arr in leaves.items():
                 arr = np.asarray(arr, order="C")  # NB: ascontiguousarray would 0-d → (1,)
                 leaves[path] = arr
                 name = f"{group}/state/{path}"
-                meta = self.file.create_dataset(name, arr.shape, arr.dtype)
+                codec = codec_policy.resolve(path, arr) if codec_policy else "none"
                 n_rows = arr.shape[0] if arr.ndim else 1
+                row_bytes = arr.nbytes // max(n_rows, 1)
+                if codec != "none":
+                    meta = self.file.create_chunked_dataset(
+                        name,
+                        arr.shape,
+                        arr.dtype,
+                        chunk_rows=codec_policy.chunk_rows_for(n_rows, row_bytes),
+                        codec=codec,
+                    )
+                    chunked[path] = codec
+                else:
+                    meta = self.file.create_dataset(name, arr.shape, arr.dtype)
                 plan = self._plan_for(n_rows, meta.row_bytes, n_ranks)
                 metas[path], plans[path] = meta, plan
                 total_bytes += arr.nbytes
@@ -202,6 +295,8 @@ class CheckpointManager:
             # ---- independent writes into disjoint extents ----
             reqs: list[list[WriteRequest]] = [[] for _ in range(n_ranks)]
             for path, arr in leaves.items():
+                if path in chunked:
+                    continue  # filtered leaves go through the chunk pipeline
                 meta, plan = metas[path], plans[path]
                 flat = arr.reshape((plan.total_rows if arr.ndim else 1, -1))
                 for r in range(n_ranks):
@@ -214,6 +309,13 @@ class CheckpointManager:
             stats = (
                 writer.write_independent(reqs) if independent else writer.write_collective(reqs)
             )
+
+            # ---- chunked leaves: encode in the aggregators, overlapped ----
+            fstats = FilterStats()
+            if chunked:
+                pipe = self._pipeline_for(aggregation)
+                for path in chunked:
+                    fstats.merge(pipe.write(metas[path], leaves[path]))
 
             # ---- topology datasets (paper Fig. 4) ----
             if topology_override is not None:
@@ -235,7 +337,8 @@ class CheckpointManager:
 
             if checksum:
                 for path in leaves:
-                    self.file.seal_checksum(f"{group}/state/{path}")
+                    if path not in chunked:  # chunked leaves carry per-chunk CRCs
+                        self.file.seal_checksum(f"{group}/state/{path}")
             gen = self.file.commit()  # shadow flip: snapshot becomes durable
         return SaveResult(
             step=step,
@@ -244,6 +347,7 @@ class CheckpointManager:
             wall_s=time.perf_counter() - t0,
             write_stats=stats,
             n_leaves=len(leaves),
+            filter_stats=fstats,
         )
 
     def _write_topology(self, group: str, metas: dict, plans: dict, n_ranks: int) -> None:
@@ -329,6 +433,9 @@ class CheckpointManager:
         for w in self._writers.values():
             w.close()
         self._writers.clear()
+        for p in self._pipelines.values():
+            p.close()
+        self._pipelines.clear()
         self.file.close()
 
     def __enter__(self) -> "CheckpointManager":

@@ -11,6 +11,14 @@ mesh axis is split into aggregator groups and each group's data is gathered
 onto every member (on real hardware only the aggregator host copies it off
 the device; the others drop it — XLA DCE removes the dead gather output on
 non-aggregator shards when the result is consumed conditionally).
+
+The host-side half it feeds is the zero-copy vectored pipeline in
+``core.aggregation``: the gathered block becomes stride-aware view requests
+(``nd_slab_requests``, no payload copies), bucketed into MPI-IO-style file
+domains and drained with ``pwritev`` — or, for chunked datasets, pushed
+through the overlapped filter pipeline (``ChunkPipeline``).
+``device_pack_linear`` below is the device-side staging step of that path.
+Full stage map: ``docs/ARCHITECTURE.md``; on-disk layout: ``docs/FORMAT.md``.
 """
 
 from __future__ import annotations

@@ -8,8 +8,14 @@ on, tuned for the paper's access pattern:
     (``/common``, ``/simulation/<step>/...`` — Fig. 4);
   * **storage model**: each dataset is "a header followed by the actual data
     in form of a linear array" — here the header lives in a central metadata
-    index and the data is one contiguous aligned extent, so a rank's
-    hyperslab write is a single ``pwrite`` with **no locking**;
+    index and the data is either one contiguous aligned extent (a rank's
+    hyperslab write is a single ``pwrite`` with **no locking**) or, since
+    format v2, a **chunked layout**: fixed row-count chunks run through a
+    filter codec (``codecs`` — none/zlib/int8-blockq) and land as
+    variable-length extents tracked by per-chunk index records
+    (offset / stored nbytes / raw nbytes / CRCs / codec id), the HDF5
+    chunk-B-tree role.  Partial reads decompress only intersecting chunks
+    through a small LRU cache (:class:`ChunkCache`);
   * **self-description / portability**: dtypes are stored as numpy dtype
     strings with explicit endianness (``<f4`` etc.); readers byteswap when
     the host differs — the paper's HDF5 portability argument;
@@ -31,6 +37,10 @@ Layout::
 
 The superblock is rewritten in place on commit; everything else is
 append-only.
+
+The authoritative byte-level format specification (superblock, index JSON,
+chunk records, codec ids, commit protocol) is ``docs/FORMAT.md``; the write
+/ read data-flow map is ``docs/ARCHITECTURE.md``.
 """
 
 from __future__ import annotations
@@ -40,18 +50,23 @@ import os
 import struct
 import threading
 import zlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Mapping, Sequence
 
 import numpy as np
 
+from . import codecs as _codecs
+from .codecs import CODEC_NONE, codec_by_id, get_codec
 from .hyperslab import SlabPlan, align_up
 
 IOV_MAX = 1024  # conservative portable IOV_MAX (per preadv/pwritev call)
 
 MAGIC = b"TH5\x89"
-VERSION = 1
+VERSION = 2  # v2 = v1 + chunked datasets (index-level only; superblock unchanged)
+MIN_READ_VERSION = 1  # v1 files are a strict subset (no chunk records)
 SUPERBLOCK_SIZE = 512
+DEFAULT_CHUNK_CACHE_BYTES = 32 << 20
 _SB_FMT = "<4sIIQQQQdI"  # magic, version, block_size, index_off, index_len, file_end, generation, created, flags
 _SB_FIXED = struct.calcsize(_SB_FMT)
 DEFAULT_BLOCK = 4096
@@ -109,15 +124,7 @@ def _advance(bufs: list[memoryview], skip: int) -> list[memoryview]:
     return out
 
 
-def _byte_view(a: np.ndarray) -> memoryview:
-    """Writable flat byte view of a contiguous array (buffer-protocol dance
-    for extension dtypes like bfloat16)."""
-    if a.size == 0:
-        return memoryview(b"")  # cast('B') rejects zeros in shape
-    try:
-        return memoryview(a).cast("B")
-    except (ValueError, TypeError):
-        return memoryview(a.view(np.uint8)).cast("B")
+_byte_view = _codecs._byte_view  # writable flat byte view of a contiguous array
 
 
 def preadv_full(fd: int, views: Sequence[memoryview], offset: int) -> tuple[int, int]:
@@ -162,19 +169,53 @@ def _parents(path: str) -> list[str]:
 
 
 @dataclass
+class ChunkRecord:
+    """One chunk-index entry of a chunked dataset (format v2).
+
+    Serialised compactly as the 6-tuple
+    ``[offset, nbytes, raw_nbytes, raw_crc32, stored_crc32, codec_id]`` —
+    byte layout and semantics are specified in ``docs/FORMAT.md``.
+    """
+
+    offset: int  # absolute file offset of the stored (post-filter) payload
+    nbytes: int  # stored payload size — variable per chunk after filtering
+    raw_nbytes: int  # pre-filter size (== chunk rows × row_bytes)
+    raw_crc32: int  # CRC32 of the pre-filter bytes (verified for lossless codecs)
+    stored_crc32: int  # CRC32 of the stored payload (verified for every codec)
+    codec_id: int  # per-chunk: encoders fall back to 0 on incompressible data
+
+    def to_json(self) -> list[int]:
+        return [
+            self.offset,
+            self.nbytes,
+            self.raw_nbytes,
+            self.raw_crc32,
+            self.stored_crc32,
+            self.codec_id,
+        ]
+
+    @staticmethod
+    def from_json(v: Sequence[int]) -> "ChunkRecord":
+        return ChunkRecord(*(int(x) for x in v))
+
+
+@dataclass
 class DatasetMeta:
     """The dataset 'header' — kept in the central index (self-description)."""
 
     dtype: str  # numpy dtype string with explicit byte order, e.g. "<f4"
     shape: tuple[int, ...]
-    offset: int  # absolute file offset of the linear data array
-    nbytes: int
+    offset: int  # absolute file offset of the linear data array (0 if chunked)
+    nbytes: int  # logical (pre-filter) payload size
     attrs: dict[str, Any] = field(default_factory=dict)
     crc32: int | None = None  # optional payload checksum (checkpoints: on)
     generation: int = 0
+    codec: str = "none"  # filter spec the dataset was created with
+    chunk_rows: int | None = None  # rows per chunk; None = contiguous layout
+    chunks: list[ChunkRecord] | None = None  # chunk index, in chunk order
 
     def to_json(self) -> dict[str, Any]:
-        return {
+        doc = {
             "dtype": self.dtype,
             "shape": list(self.shape),
             "offset": self.offset,
@@ -183,9 +224,15 @@ class DatasetMeta:
             "crc32": self.crc32,
             "generation": self.generation,
         }
+        if self.chunk_rows is not None:  # v1 JSON stays byte-identical otherwise
+            doc["codec"] = self.codec
+            doc["chunk_rows"] = self.chunk_rows
+            doc["chunks"] = [c.to_json() for c in (self.chunks or [])]
+        return doc
 
     @staticmethod
     def from_json(d: Mapping[str, Any]) -> "DatasetMeta":
+        chunk_rows = d.get("chunk_rows")
         return DatasetMeta(
             dtype=d["dtype"],
             shape=tuple(d["shape"]),
@@ -194,7 +241,41 @@ class DatasetMeta:
             attrs=dict(d.get("attrs", {})),
             crc32=d.get("crc32"),
             generation=int(d.get("generation", 0)),
+            codec=str(d.get("codec", "none")),
+            chunk_rows=int(chunk_rows) if chunk_rows is not None else None,
+            chunks=(
+                [ChunkRecord.from_json(v) for v in d.get("chunks", [])]
+                if chunk_rows is not None
+                else None
+            ),
         )
+
+    @property
+    def is_chunked(self) -> bool:
+        return self.chunk_rows is not None
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.shape[0]) if self.shape else 1
+
+    @property
+    def n_chunks_expected(self) -> int:
+        if self.chunk_rows is None:
+            return 0
+        return -(-self.n_rows // self.chunk_rows) if self.n_rows else 0
+
+    @property
+    def stored_nbytes(self) -> int:
+        """Bytes on disk (post-filter) — equals ``nbytes`` when contiguous."""
+        if self.chunks is None:
+            return self.nbytes
+        return sum(c.nbytes for c in self.chunks)
+
+    def chunk_row_range(self, ci: int) -> tuple[int, int]:
+        if self.chunk_rows is None:
+            raise TH5Error("not a chunked dataset")
+        lo = ci * self.chunk_rows
+        return lo, min(lo + self.chunk_rows, self.n_rows)
 
     @property
     def np_dtype(self) -> np.dtype:
@@ -240,7 +321,7 @@ class _Index:
         if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
             raise CorruptFileError("index CRC mismatch")
         doc = json.loads(payload.decode("utf-8"))
-        return _Index(
+        idx = _Index(
             groups={_norm(k): v for k, v in doc.get("groups", {}).items()},
             datasets={
                 _norm(k): DatasetMeta.from_json(v) for k, v in doc.get("datasets", {}).items()
@@ -248,6 +329,9 @@ class _Index:
             generation=int(doc.get("generation", 0)),
             lineage=dict(doc.get("lineage", {})),
         )
+        for k, m in idx.datasets.items():
+            m.path = k  # runtime-only back-pointer (chunk-cache keys); not serialised
+        return idx
 
 
 def _pack_superblock(
@@ -273,9 +357,82 @@ def _unpack_superblock(raw: bytes) -> tuple[int, int, int, int, int, float]:
     )
     if magic != MAGIC:
         raise CorruptFileError(f"bad magic {magic!r}")
-    if version != VERSION:
+    if not (MIN_READ_VERSION <= version <= VERSION):
         raise CorruptFileError(f"unsupported version {version}")
     return block_size, index_off, index_len, file_end, generation, created
+
+
+class ChunkCache:
+    """Small LRU cache of *decoded* chunks (thread-safe).
+
+    Keyed by ``(dataset_path, chunk_index)``; holds the native-dtype row
+    arrays produced by the filter pipeline so sliding-window / LOD playback
+    over a compressed dataset decompresses each chunk once, not once per
+    window.  Contiguous-row reads of ``none``-codec chunks bypass the cache
+    entirely — they scatter straight into the caller's buffer (zero-copy)
+    and the page cache already holds the bytes.
+    """
+
+    def __init__(self, capacity_bytes: int = DEFAULT_CHUNK_CACHE_BYTES):
+        self.capacity_bytes = int(capacity_bytes)
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[tuple[str, int], np.ndarray]" = OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: tuple[str, int]) -> np.ndarray | None:
+        with self._lock:
+            arr = self._entries.get(key)
+            if arr is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return arr
+
+    def put(self, key: tuple[str, int], arr: np.ndarray) -> None:
+        if arr.nbytes > self.capacity_bytes:
+            return
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= old.nbytes
+            self._entries[key] = arr
+            self._bytes += arr.nbytes
+            while self._bytes > self.capacity_bytes and self._entries:
+                _, victim = self._entries.popitem(last=False)
+                self._bytes -= victim.nbytes
+                self.evictions += 1
+
+    def invalidate(self, path_prefix: str) -> None:
+        """Drop cached chunks of datasets at/under ``path_prefix``."""
+        with self._lock:
+            doomed = [
+                k
+                for k in self._entries
+                if k[0] == path_prefix or k[0].startswith(path_prefix + "/")
+            ]
+            for k in doomed:
+                self._bytes -= self._entries.pop(k).nbytes
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0
+
+    def stats(self) -> dict[str, int | float]:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "entries": len(self._entries),
+                "bytes": self._bytes,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
 
 
 class TH5File:
@@ -294,6 +451,7 @@ class TH5File:
         self._alloc_lock = threading.Lock()
         self._dirty = False
         self._closed = False
+        self.chunk_cache = ChunkCache()
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -407,6 +565,7 @@ class TH5File:
             del self._index.datasets[d]
         for g in [k for k in self._index.groups if k == path or k.startswith(prefix)]:
             del self._index.groups[g]
+        self.chunk_cache.invalidate(path)  # a rewrite must never serve stale chunks
         self._dirty = True
 
     def meta(self, name: str) -> DatasetMeta:
@@ -416,7 +575,28 @@ class TH5File:
         except KeyError:
             raise KeyError(f"no dataset {name!r} in {self.path}") from None
 
+    def _name_of(self, meta: DatasetMeta) -> str:
+        """Dataset path for chunk-cache keys when callers pass a meta.
+        O(1): every indexed meta carries a runtime ``path`` back-pointer
+        (set at create / index load); the scan is a last-resort fallback."""
+        path = getattr(meta, "path", None)
+        if path is not None:
+            return path
+        for k, v in self._index.datasets.items():
+            if v is meta:
+                return k
+        return f"<anon@{id(meta):x}>"
+
     # -- dataset allocation (the 'collective create') --------------------------
+
+    def alloc_extent(self, nbytes: int, align: bool = False) -> int:
+        """Claim ``nbytes`` of append-only file space (the only lock on the
+        write path).  Chunked writers call this per post-filter chunk, so
+        consecutive appends from one pipeline are contiguous on disk."""
+        with self._alloc_lock:
+            off = align_up(self._file_end, self.block_size) if align else self._file_end
+            self._file_end = off + nbytes
+        return off
 
     def create_dataset(
         self,
@@ -440,9 +620,7 @@ class TH5File:
         dt_str = dt.name if dt.str.lstrip("<>=|").startswith("V") else dt.str
         shape = tuple(int(s) for s in shape)
         nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize if shape else dt.itemsize
-        with self._alloc_lock:
-            off = align_up(self._file_end, self.block_size) if align else self._file_end
-            self._file_end = off + nbytes
+        off = self.alloc_extent(nbytes, align=align)
         meta = DatasetMeta(
             dtype=dt_str,
             shape=shape,
@@ -453,6 +631,7 @@ class TH5File:
         )
         for parent in _parents(name):
             self._index.groups.setdefault(parent, {})
+        meta.path = name  # runtime-only back-pointer; not serialised
         self._index.datasets[name] = meta
         self._dirty = True
         return meta
@@ -472,6 +651,136 @@ class TH5File:
         a.setdefault("row_counts", [int(x) for x in plan.row_counts])
         return self.create_dataset(name, shape, dt, attrs=a)
 
+    # -- chunked datasets (format v2) ------------------------------------------
+
+    def create_chunked_dataset(
+        self,
+        name: str,
+        shape: Sequence[int],
+        dtype: Any,
+        chunk_rows: int,
+        codec: str = "zlib",
+        attrs: Mapping[str, Any] | None = None,
+    ) -> DatasetMeta:
+        """Create a chunked dataset: no extent is allocated up front — chunk
+        extents are variable-length (post-filter) and appended as written,
+        each tracked by a :class:`ChunkRecord` in the index."""
+        self._check_writable()
+        name = _norm(name)
+        if name in self._index.datasets:
+            raise TH5Error(f"dataset exists: {name}")
+        shape = tuple(int(s) for s in shape)
+        if not shape:
+            raise TH5Error("chunked datasets need at least one dimension")
+        chunk_rows = int(chunk_rows)
+        if chunk_rows < 1:
+            raise TH5Error("chunk_rows must be >= 1")
+        get_codec(codec)  # validate the spec early
+        dt = np.dtype(dtype)
+        dt_str = dt.name if dt.str.lstrip("<>=|").startswith("V") else dt.str
+        nbytes = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        meta = DatasetMeta(
+            dtype=dt_str,
+            shape=shape,
+            offset=0,
+            nbytes=nbytes,
+            attrs=dict(attrs or {}),
+            generation=self._index.generation + 1,
+            codec=str(codec),
+            chunk_rows=chunk_rows,
+            chunks=[],
+        )
+        for parent in _parents(name):
+            self._index.groups.setdefault(parent, {})
+        meta.path = name  # runtime-only back-pointer; not serialised
+        self._index.datasets[name] = meta
+        self._dirty = True
+        return meta
+
+    def alloc_chunk(
+        self,
+        meta: DatasetMeta,
+        nbytes: int,
+        *,
+        raw_nbytes: int,
+        raw_crc32: int,
+        stored_crc32: int,
+        codec_id: int,
+    ) -> ChunkRecord:
+        """Allocate + record the next chunk extent WITHOUT writing the
+        payload — the overlapped pipeline (``aggregation.ChunkPipeline``)
+        issues its own vectored writes against the returned offsets."""
+        self._check_writable()
+        if meta.chunks is None:
+            raise TH5Error("not a chunked dataset")
+        if len(meta.chunks) >= meta.n_chunks_expected:
+            raise TH5Error("dataset already fully written")
+        rec = ChunkRecord(
+            offset=self.alloc_extent(nbytes),
+            nbytes=int(nbytes),
+            raw_nbytes=int(raw_nbytes),
+            raw_crc32=int(raw_crc32),
+            stored_crc32=int(stored_crc32),
+            codec_id=int(codec_id),
+        )
+        meta.chunks.append(rec)
+        self._dirty = True
+        return rec
+
+    def append_chunk(
+        self,
+        name_or_meta: str | DatasetMeta,
+        payload: bytes | memoryview,
+        *,
+        raw_nbytes: int,
+        raw_crc32: int,
+        stored_crc32: int,
+        codec_id: int,
+    ) -> ChunkRecord:
+        """Write the next chunk's stored payload (``payload`` must be bytes
+        or a flat byte view) and record it in the chunk index."""
+        meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
+        n = payload.nbytes if isinstance(payload, memoryview) else len(payload)
+        rec = self.alloc_chunk(
+            meta,
+            n,
+            raw_nbytes=raw_nbytes,
+            raw_crc32=raw_crc32,
+            stored_crc32=stored_crc32,
+            codec_id=codec_id,
+        )
+        pwrite_full(self._fd, payload, rec.offset)
+        return rec
+
+    def write_chunked(self, name_or_meta: str | DatasetMeta, array: np.ndarray) -> int:
+        """Synchronous whole-array chunked write (encode → append, one chunk
+        at a time).  The overlapped encode-while-writing variant is
+        ``aggregation.ChunkPipeline.write``; both produce identical files.
+        Returns raw (pre-filter) bytes consumed."""
+        meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
+        if meta.chunks is None:
+            raise TH5Error("not a chunked dataset")
+        arr = np.ascontiguousarray(array, dtype=meta.np_dtype)
+        if arr.shape != meta.shape:
+            raise TH5Error(f"shape mismatch: {arr.shape} != {meta.shape}")
+        codec = get_codec(meta.codec)
+        if meta.chunks and len(meta.chunks) >= meta.n_chunks_expected:
+            raise TH5Error("dataset already fully written")
+        total = 0
+        for ci in range(len(meta.chunks), meta.n_chunks_expected):
+            lo, hi = meta.chunk_row_range(ci)
+            payload, raw_n, raw_crc, stored_crc, cid = _codecs.encode_chunk(codec, arr[lo:hi])
+            self.append_chunk(
+                meta,
+                payload,
+                raw_nbytes=raw_n,
+                raw_crc32=raw_crc,
+                stored_crc32=stored_crc,
+                codec_id=cid,
+            )
+            total += raw_n
+        return total
+
     # -- the lock-free data path ----------------------------------------------
 
     def write_slab(self, name_or_meta: str | DatasetMeta, byte_offset: int, data: np.ndarray | bytes) -> int:
@@ -479,6 +788,8 @@ class TH5File:
         pwrite at (dataset base + byte_offset).  Returns bytes written."""
         self._check_writable()
         meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
+        if meta.is_chunked:
+            raise TH5Error("write_slab on a chunked dataset — use write_chunked / ChunkPipeline")
         buf = data.tobytes() if isinstance(data, np.ndarray) else bytes(data)
         if byte_offset < 0 or byte_offset + len(buf) > meta.nbytes:
             raise TH5Error(
@@ -506,6 +817,8 @@ class TH5File:
         """Compute+store the payload CRC after all slabs landed (checkpoints)."""
         self._check_writable()
         meta = self.meta(name)
+        if meta.is_chunked:
+            raise TH5Error("chunked datasets carry per-chunk CRCs; seal_checksum is contiguous-only")
         raw = os.pread(self._fd, meta.nbytes, meta.offset)
         meta.crc32 = zlib.crc32(raw) & 0xFFFFFFFF
         self._dirty = True
@@ -517,9 +830,84 @@ class TH5File:
     def _is_native(dt: np.dtype) -> bool:
         return dt.byteorder in ("|", "=") or dt.isnative
 
+    def _decode_chunk(
+        self, name: str, meta: DatasetMeta, ci: int, verify: bool = False
+    ) -> np.ndarray:
+        """Read + decode chunk ``ci`` through the LRU cache.  Returns the
+        chunk's rows as a native-dtype array; callers must not mutate it.
+
+        ``verify=True`` bypasses cache *hits*: a cached decode may have been
+        populated by an unverified read (LOD playback never verifies), and a
+        verified read must never launder corrupt bytes through it."""
+        key = (name, ci)
+        if not verify:
+            hit = self.chunk_cache.get(key)
+            if hit is not None:
+                return hit
+        if meta.chunks is None or ci >= len(meta.chunks):
+            raise CorruptFileError(f"chunk {ci} of {name} missing (incomplete write)")
+        rec = meta.chunks[ci]
+        blob = os.pread(self._fd, rec.nbytes, rec.offset)
+        READ_COUNTER.add(len(blob), 1)
+        if len(blob) != rec.nbytes:
+            raise CorruptFileError(f"short read on chunk {ci} of {name}")
+        if verify and (zlib.crc32(blob) & 0xFFFFFFFF) != rec.stored_crc32:
+            raise CorruptFileError(f"stored CRC mismatch on chunk {ci} of {name}")
+        codec = codec_by_id(rec.codec_id)
+        dt = meta.np_dtype
+        n_elems = rec.raw_nbytes // dt.itemsize
+        flat = codec.decode(blob, dt, n_elems)
+        if verify and codec.lossless:
+            if (zlib.crc32(_byte_view(np.ascontiguousarray(flat))) & 0xFFFFFFFF) != rec.raw_crc32:
+                raise CorruptFileError(f"payload CRC mismatch on chunk {ci} of {name}")
+        lo, hi = meta.chunk_row_range(ci)
+        out = flat.reshape((hi - lo,) + tuple(meta.shape[1:]))
+        self.chunk_cache.put(key, out)
+        return out
+
+    def _gather_rows_chunked(
+        self,
+        name: str,
+        meta: DatasetMeta,
+        row_start: int,
+        n_rows: int,
+        out: np.ndarray,
+        verify: bool = False,
+    ) -> int:
+        """Fill ``out`` with rows [row_start, row_start+n_rows) of a chunked
+        dataset, decoding ONLY the intersecting chunks.  ``none``-codec
+        chunks scatter-read straight into the destination rows (zero
+        intermediate copies, like the contiguous path)."""
+        if n_rows == 0:
+            return 0
+        dt = meta.np_dtype
+        rb = meta.row_bytes
+        cr = meta.chunk_rows or 1
+        out2 = out.reshape((n_rows, -1))  # view (out is C-contiguous); rows stay addressable
+        for ci in range(row_start // cr, (row_start + n_rows - 1) // cr + 1):
+            clo, chi = meta.chunk_row_range(ci)
+            s, e = max(row_start, clo), min(row_start + n_rows, chi)
+            dst = out2[s - row_start : e - row_start]
+            rec = meta.chunks[ci] if meta.chunks is not None and ci < len(meta.chunks) else None
+            if rec is None:
+                raise CorruptFileError(f"chunk {ci} of {name} missing (incomplete write)")
+            if rec.codec_id == CODEC_NONE and self._is_native(dt) and not verify:
+                # raw chunk: vectored read directly into the result rows
+                n, calls = preadv_full(self._fd, [_byte_view(dst)], rec.offset + (s - clo) * rb)
+                READ_COUNTER.add(n, calls)
+            else:
+                src = self._decode_chunk(name, meta, ci, verify=verify)[s - clo : e - clo]
+                # byte-level copy: dtype-agnostic (out may be a raw byte buffer)
+                _byte_view(dst)[:] = _byte_view(np.ascontiguousarray(src))
+        return n_rows * rb
+
     def read(self, name: str, verify: bool = False) -> np.ndarray:
         meta = self.meta(name)
         dt = meta.np_dtype
+        if meta.is_chunked:
+            out = np.empty(meta.shape, dtype=dt.newbyteorder("="))
+            self._gather_rows_chunked(name, meta, 0, meta.n_rows, out, verify=verify)
+            return out
         if self._is_native(dt):
             # vectored read straight into the result array — no intermediate
             # bytes object between the page cache and the caller's buffer
@@ -559,6 +947,9 @@ class TH5File:
             raise TH5Error(f"out buffer is {out.nbytes} B, need {want}")
         if not out.flags.c_contiguous or not out.flags.writeable:
             raise TH5Error("out buffer must be C-contiguous and writable")
+        if meta.is_chunked:
+            name = name_or_meta if isinstance(name_or_meta, str) else self._name_of(meta)
+            return self._gather_rows_chunked(name, meta, row_start, n_rows, out)
         n, calls = preadv_full(
             self._fd, [_byte_view(out)], meta.offset + row_start * meta.row_bytes
         )
@@ -566,11 +957,12 @@ class TH5File:
         return n
 
     def read_rows(self, name: str, row_start: int, n_rows: int) -> np.ndarray:
-        """Partial read of contiguous rows — one hyperslab."""
+        """Partial read of contiguous rows — one hyperslab.  On a chunked
+        dataset only the intersecting chunks are read and decoded."""
         meta = self.meta(name)
         dt = meta.np_dtype
-        if self._is_native(dt):
-            out = np.empty((n_rows,) + tuple(meta.shape[1:]), dtype=dt)
+        if self._is_native(dt) or meta.is_chunked:
+            out = np.empty((n_rows,) + tuple(meta.shape[1:]), dtype=dt.newbyteorder("="))
             self.read_rows_into(meta, row_start, n_rows, out)
             return out
         nrows_total = meta.shape[0] if meta.shape else 1
@@ -596,6 +988,18 @@ class TH5File:
         nrows_total = meta.shape[0] if meta.shape else 1
         if idx.min() < 0 or idx.max() >= nrows_total:
             raise TH5Error("row range out of bounds")
+        if meta.is_chunked:
+            # gather by chunk: each intersecting chunk is read+decoded once
+            # (LRU-cached), then its requested rows fan out to their slots —
+            # sliding-window playback over a compressed file never inflates
+            # the full dataset
+            cr = meta.chunk_rows or 1
+            cis = idx // cr
+            for ci in np.unique(cis):
+                sel = cis == ci
+                dec = self._decode_chunk(name, meta, int(ci))
+                out[sel] = dec[idx[sel] - int(ci) * cr]
+            return out
         order = np.argsort(idx, kind="stable")
         sorted_idx = idx[order]
         scatter = self._is_native(dt)

@@ -14,6 +14,14 @@ writer and the benchmarks).  ``core.collective_io`` re-implements the same
 plan *on-device* with ``jax.lax`` collectives under ``shard_map`` and is
 tested to agree bit-for-bit.
 
+The plans feed the zero-copy write pipeline: each planned extent becomes a
+view-carrying ``WriteRequest`` (``aggregation.nd_slab_requests`` — no
+payload bytes are copied), coalesced and drained with vectored ``pwritev``
+by the aggregator pool.  Plans describe *logical* rows, so they serve both
+dataset layouts unchanged: contiguous extents and the chunked/compressed
+layout, whose variable-length post-filter extents are tracked separately by
+chunk records (``docs/FORMAT.md``).  Stage map: ``docs/ARCHITECTURE.md``.
+
 Invariants (property-tested in ``tests/test_hyperslab.py``):
   * extents are pairwise disjoint              (lock-free writes are safe)
   * extents ordered by rank                    (row index == paper ordering)

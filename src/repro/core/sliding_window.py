@@ -14,6 +14,13 @@ Two front-ends:
   * :func:`read_lod` — the LM-checkpoint variant: strided (every k-th row)
     windowed reads of any 2-D dataset, used by eval/monitoring to inspect a
     parameter or optimizer moment without loading the full tensor.
+
+Both ride on the container's gather primitives, so they work unchanged over
+compressed files: on a chunked dataset ``read_row_indices`` decodes only the
+chunks intersecting the window, through the file's LRU
+:class:`~repro.core.container.ChunkCache` — overlapping playback windows
+decompress each chunk once, never the full dataset (read-path map:
+``docs/ARCHITECTURE.md``).
 """
 
 from __future__ import annotations
@@ -123,13 +130,19 @@ class WindowPrefetcher:
     A single worker thread is deliberate: gathers target one file descriptor
     and the aggregation-aware coalescing inside ``read_row_indices`` already
     turns each window into few large ``preadv`` calls — more threads would
-    just reintroduce seek contention.
+    just reintroduce seek contention.  On chunked datasets the worker also
+    owns the decompression; the chunk cache (thread-safe) carries decoded
+    chunks across overlapping windows — see :meth:`cache_stats`.
     """
 
     def __init__(self, f: TH5File, dataset: str):
         self.f = f
         self.dataset = dataset
         self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="window-prefetch")
+
+    def cache_stats(self) -> dict:
+        """Chunk-cache hit/miss counters (chunked datasets; benchmarks)."""
+        return self.f.chunk_cache.stats()
 
     def submit(self, rows: Sequence[int]) -> "Future[np.ndarray]":
         return self._pool.submit(self.f.read_row_indices, self.dataset, list(rows))

@@ -6,9 +6,15 @@ run.  VPIC-IO writes eight flat 1-D variables per particle (x, y, z, px,
 py, pz: float32; id1, id2: int32), one dataset per variable, each rank
 appending its particle block — a deliberately *lighter* data structure than
 mpfluid's topology-carrying layout.  Re-implemented here on TH5 with the
-same optimisations (alignment, collective buffering, lock-free disjoint
-extents) and the paper's protocol of **equal total bytes** so the layouts,
-not the byte counts, are compared.
+same optimisations as the main kernel — alignment, collective buffering
+with file-domain bucketing, lock-free disjoint extents, and the zero-copy
+vectored write path (requests carry array views straight into ``pwritev``;
+no staging copies) — and the paper's protocol of **equal total bytes** so
+the layouts, not the byte counts, are compared.  VPIC-IO deliberately stays
+on the *contiguous* dataset layout (flat appends are its whole point); the
+chunked/compressed layout the snapshot writer uses is specified in
+``docs/FORMAT.md``, and the stage-by-stage pipeline both kernels share is
+mapped in ``docs/ARCHITECTURE.md``.
 """
 
 from __future__ import annotations

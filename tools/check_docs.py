@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""CI drift check: docs/FORMAT.md must stay in lockstep with the code.
+
+Asserts, without importing the package (stdlib-only, runs before deps are
+installed):
+
+  * the ``VERSION`` / ``MIN_READ_VERSION`` constants in ``container.py``
+    appear in the spec ("Format version: N", version floor mentioned);
+  * every dataclass field name of ``DatasetMeta`` and ``ChunkRecord`` is
+    documented;
+  * every codec name and id registered in ``codecs.py`` is documented;
+  * the superblock struct format string matches the spec's packed layout.
+
+Exit status 1 with a list of misses on drift.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+CONTAINER = ROOT / "src" / "repro" / "core" / "container.py"
+CODECS = ROOT / "src" / "repro" / "core" / "codecs.py"
+SPEC = ROOT / "docs" / "FORMAT.md"
+ARCH = ROOT / "docs" / "ARCHITECTURE.md"
+
+
+def dataclass_fields(tree: ast.Module, class_name: str) -> list[str]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == class_name:
+            return [
+                stmt.target.id
+                for stmt in node.body
+                if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name)
+            ]
+    raise SystemExit(f"check_docs: class {class_name} not found in {CONTAINER}")
+
+
+def module_constant(tree: ast.Module, name: str):
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == name:
+                    return ast.literal_eval(node.value)
+    raise SystemExit(f"check_docs: constant {name} not found")
+
+
+def main() -> int:
+    missing: list[str] = []
+    for p in (SPEC, ARCH):
+        if not p.exists():
+            print(f"check_docs: {p.relative_to(ROOT)} does not exist")
+            return 1
+    spec = SPEC.read_text(encoding="utf-8")
+    ctree = ast.parse(CONTAINER.read_text(encoding="utf-8"))
+    ktree = ast.parse(CODECS.read_text(encoding="utf-8"))
+
+    version = module_constant(ctree, "VERSION")
+    if f"Format version: {version}" not in spec:
+        missing.append(f'spec header "Format version: {version}" (container.VERSION)')
+    min_version = module_constant(ctree, "MIN_READ_VERSION")
+    if not re.search(rf"versions {min_version}[–-]{version}", spec):
+        missing.append(f'accepted version range "versions {min_version}-{version}"')
+
+    sb_fmt = module_constant(ctree, "_SB_FMT")
+    if f'"{sb_fmt}"' not in spec:
+        missing.append(f"superblock struct format {sb_fmt!r}")
+
+    for cls in ("DatasetMeta", "ChunkRecord"):
+        for fld in dataclass_fields(ctree, cls):
+            if f"`{fld}`" not in spec:
+                missing.append(f"{cls} field `{fld}`")
+
+    # codec names + ids: the CODEC_* constants and registered names
+    for node in ast.walk(ktree):
+        if isinstance(node, ast.ClassDef):
+            names = {
+                stmt.targets[0].id: stmt.value
+                for stmt in node.body
+                if isinstance(stmt, ast.Assign)
+                and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+            }
+            if "name" in names and "codec_id" in names:
+                try:
+                    cname = ast.literal_eval(names["name"])
+                except ValueError:
+                    continue
+                if cname == "?":
+                    continue  # abstract base
+                if f"`{cname}`" not in spec:
+                    missing.append(f"codec name `{cname}`")
+
+    if missing:
+        print("docs/FORMAT.md drifted from the code — missing:")
+        for m in missing:
+            print(f"  - {m}")
+        return 1
+    print("check_docs: docs/FORMAT.md is in lockstep with container.py/codecs.py")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
