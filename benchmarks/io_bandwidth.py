@@ -220,7 +220,7 @@ def scatter_read(path: str, *, n_rows: int = 8192, cols: int = 256, stride: int 
 # -- chunked + compressed trajectory benchmark ---------------------------------
 
 
-CODECS = ("none", "zlib", "int8-blockq")
+CODECS = ("none", "zlib", "shuffle+zlib", "int8-blockq")
 
 
 def compression_write(
@@ -273,6 +273,78 @@ def compression_write(
         "copies_per_byte": bytes_copied / fs.raw_bytes if fs.raw_bytes else 0.0,
         "n_chunks": fs.n_chunks,
         "chunk_rows": chunk_rows,
+    }
+
+
+def read_bench(
+    path: str,
+    *,
+    rows: int = 8192,
+    cols: int = 1024,
+    chunk_rows: int = 512,
+    n_aggregators: int = 8,
+    n_windows: int = 4,
+) -> dict:
+    """Read-path trajectory: cold-vs-warm LOD window replay through the
+    overlapped ``DecodePipeline`` (chunk k+1's preadv in flight while chunk
+    k inflates in the decode pool), plus the shuffle-filter ratio uplift
+    over plain zlib and the zero-copy check on the raw-chunk read route."""
+    from repro.core.sliding_window import iter_lod_windows
+
+    rng = np.random.default_rng(11)
+    # the same quantised-field proxy as compression_write: zlib ~1.88:1,
+    # byte-shuffled zlib well above that (correlated exponent/mantissa bytes)
+    field = (rng.integers(0, 1024, (rows, cols)) / 1024.0).astype(np.float32)
+    with TH5File.create(path) as f:
+        mz = f.create_chunked_dataset("/fields/zlib", field.shape, "<f4", chunk_rows, "zlib")
+        ms = f.create_chunked_dataset("/fields/shuf", field.shape, "<f4", chunk_rows, "shuffle+zlib")
+        mn = f.create_chunked_dataset("/fields/raw", field.shape, "<f4", chunk_rows, "none")
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=n_aggregators)) as pipe:
+            fz = pipe.write(mz, field)
+            fs = pipe.write(ms, field)
+            pipe.write(mn, field)
+        os.fsync(f.fd)
+        f.commit()
+
+    win = max(rows // n_windows, 1)
+    windows = [(lo, min(lo + win, rows)) for lo in range(0, rows, win)]
+    with TH5File.open(path) as f:  # fresh open: cold decoded-chunk cache
+        f.set_decode_config(AggregationConfig(n_aggregators=n_aggregators))
+        f.chunk_cache.capacity_bytes = 2 * field.nbytes  # hold the replay set
+        t0 = time.perf_counter()
+        for _ in iter_lod_windows(f, "/fields/shuf", windows):
+            pass
+        cold_wall = time.perf_counter() - t0
+        cold = f.read_stats  # cumulative == the cold replay only
+        cold_overlap = cold.overlap_ratio if cold is not None else 0.0
+        decoded_cold = cold.n_chunks if cold is not None else 0
+
+        t0 = time.perf_counter()
+        for _ in iter_lod_windows(f, "/fields/shuf", windows):
+            pass
+        warm_wall = time.perf_counter() - t0
+        cache = f.chunk_cache.stats()
+
+        # raw-chunk route: vectored scatter straight into the caller's
+        # buffer — COPY_COUNTER delta must be exactly 0 (the PR-1 invariant)
+        COPY_COUNTER.reset()
+        out = np.empty_like(field)
+        f.read_rows_into("/fields/raw", 0, rows, out)
+        _, bytes_copied = COPY_COUNTER.snapshot()
+        assert bytes_copied == 0, "none-codec read path copied payload bytes"
+    return {
+        "rows": rows,
+        "chunk_rows": chunk_rows,
+        "n_windows": len(windows),
+        "cold_MBps": round(field.nbytes / cold_wall / 1e6, 1),
+        "warm_MBps": round(field.nbytes / warm_wall / 1e6, 1),
+        "overlap_ratio": round(cold_overlap, 3),
+        "decoded_chunks_cold": decoded_cold,
+        "cache_hit_rate": round(cache["hit_rate"], 3),
+        "zlib_ratio": round(fz.ratio, 3),
+        "shuffle_zlib_ratio": round(fs.ratio, 3),
+        "shuffle_uplift": round(fs.ratio / fz.ratio, 3) if fz.ratio else 0.0,
+        "none_read_copies_per_byte": 0.0,
     }
 
 
@@ -334,7 +406,7 @@ def run(sizes_mb=(64, 192), ranks=(4, 16, 32, 64, 128), n_aggregators=8, repeats
         comp = []
         for codec in codecs:
             c = compression_write(
-                os.path.join(d, f"comp_{codec}.th5"), codec,
+                os.path.join(d, f"comp_{codec.replace('+', '_')}.th5"), codec,
                 rows=compression_rows, n_aggregators=n_aggregators,
             )
             comp.append(c)
@@ -342,6 +414,29 @@ def run(sizes_mb=(64, 192), ranks=(4, 16, 32, 64, 128), n_aggregators=8, repeats
                 f"effective={c['effective_MBps']:.0f}MB/s,overlap={c['overlap_ratio']:.2f},"
                 f"cache_hit_rate={c['cache_hit_rate']:.2f}")
 
+        # read-path trajectory: cold-vs-warm replay through the decode
+        # pipeline — skipped on codec-restricted runs (the CI zlib smoke has
+        # its own dedicated `--smoke --read` step)
+        rd = None
+        if tuple(codecs) == CODECS:
+            rd = read_bench(
+                os.path.join(d, "read.th5"),
+                rows=compression_rows,
+                chunk_rows=max(compression_rows // 16, 1),
+                n_aggregators=n_aggregators,
+            )
+            out(f"read,cold={rd['cold_MBps']:.0f}MB/s,warm={rd['warm_MBps']:.0f}MB/s,"
+                f"decode_overlap={rd['overlap_ratio']:.2f},"
+                f"shuffle={rd['shuffle_zlib_ratio']:.2f}:1_vs_zlib={rd['zlib_ratio']:.2f}:1")
+
+    sections = {
+        "fig8": rows,
+        "tp_sharded": tp,
+        "scatter_read": sr,
+        "compression": comp,
+    }
+    if rd is not None:
+        sections["read"] = rd
     if json_path:
         doc = {}
         if os.path.exists(json_path):
@@ -350,18 +445,25 @@ def run(sizes_mb=(64, 192), ranks=(4, 16, 32, 64, 128), n_aggregators=8, repeats
                     doc = json.load(fh)
             except (OSError, ValueError):
                 doc = {}
-        doc.update({
-            "schema": 2,
-            "generated_unix": time.time(),
-            "fig8": rows,
-            "tp_sharded": tp,
-            "scatter_read": sr,
-            "compression": comp,
-        })
+        doc.update({"schema": 3, "generated_unix": time.time(), **sections})
         with open(json_path, "w") as fh:
             json.dump(doc, fh, indent=2, sort_keys=True)
         out(f"wrote {json_path}")
-    return rows
+    return sections
+
+
+def derived_summary(sections: dict) -> str:
+    """Compact compression + read digest of a :func:`run` result for the
+    ``benchmarks/run.py`` derived-metrics line."""
+    comp = sections.get("compression") or []
+    rd = sections.get("read") or {}
+    parts = [f"{c['codec']}={c['ratio']:.2f}:1@{c['effective_MBps']:.0f}MB/s" for c in comp]
+    if rd:
+        parts.append(
+            f"read_cold={rd['cold_MBps']:.0f}MB/s_warm={rd['warm_MBps']:.0f}MB/s"
+            f"_overlap={rd['overlap_ratio']:.2f}"
+        )
+    return ",".join(parts)
 
 
 if __name__ == "__main__":
@@ -373,9 +475,22 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=BENCH_JSON, help="output JSON path ('' disables)")
     ap.add_argument("--codec", choices=CODECS, default=None,
                     help="restrict the compression section to one codec (CI runs zlib)")
+    ap.add_argument("--read", action="store_true",
+                    help="run ONLY the read-path bench (cold-vs-warm window replay)")
     a = ap.parse_args()
     codecs = (a.codec,) if a.codec else CODECS
-    if a.smoke:
+    if a.read:
+        rows = 2048 if a.smoke else 8192
+        with tempfile.TemporaryDirectory() as d:
+            rd = read_bench(os.path.join(d, "read.th5"), rows=rows, chunk_rows=rows // 16)
+        print(f"read,cold={rd['cold_MBps']:.0f}MB/s,warm={rd['warm_MBps']:.0f}MB/s,"
+              f"decode_overlap={rd['overlap_ratio']:.2f},"
+              f"shuffle={rd['shuffle_zlib_ratio']:.2f}:1_vs_zlib={rd['zlib_ratio']:.2f}:1,"
+              f"none_copies_per_byte={rd['none_read_copies_per_byte']}")
+        # deterministic invariants (timing-free) — safe to enforce on CI VMs
+        assert rd["shuffle_uplift"] >= 1.0, "shuffle filter lost to plain zlib"
+        assert rd["none_read_copies_per_byte"] == 0.0
+    elif a.smoke:
         run(sizes_mb=(2,), ranks=(4, 32), repeats=1, json_path=a.json or None,
             codecs=codecs, compression_rows=2048)
     else:

@@ -22,7 +22,10 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     suites = [
-        ("io_bandwidth_fig8", io_bandwidth.run, lambda rows: f"best={max(r['mpfluid_MBps'] for r in rows)}MB/s"),
+        # fig8 write curves + the run's compression and read sections
+        ("io_bandwidth_fig8", io_bandwidth.run,
+         lambda res: f"best={max(r['mpfluid_MBps'] for r in res['fig8'])}MB/s,"
+                     + io_bandwidth.derived_summary(res)),
         ("io_ablation_s52", io_ablation.run, lambda rows: f"overlap_ratio={rows[-1]['overlap_ratio']:.3f}"),
         ("ghost_exchange_fig2a", ghost_exchange.run, lambda rows: f"us_per_grid={rows[-1]['us_per_grid']:.2f}"),
         ("multigrid_fig2bc", multigrid_bench.run, lambda rows: f"contraction={rows[-1]['contraction_per_cycle']:.3f}"),

@@ -45,12 +45,23 @@ import zlib
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Any, Sequence
 
 import numpy as np
 
-from .codecs import CODEC_NONE, encode_chunk, get_codec
-from .container import IOV_MAX, DatasetMeta, TH5Error, TH5File, _advance, _byte_view, pwrite_full
+from .codecs import CODEC_NONE, codec_by_id, encode_chunk, get_codec
+from .container import (
+    IOV_MAX,
+    READ_COUNTER,
+    CorruptFileError,
+    DatasetMeta,
+    TH5Error,
+    TH5File,
+    _advance,
+    _byte_view,
+    preadv_full,
+    pwrite_full,
+)
 
 
 class CopyCounter:
@@ -510,11 +521,16 @@ def nd_slab_requests(
 
 @dataclass
 class FilterStats:
-    """Accounting for one chunked-dataset write through the filter pipeline.
+    """Accounting for one chunked-dataset pass through the filter pipeline,
+    in either direction.
 
-    ``encode_s`` is summed across codec workers and ``write_s`` across drain
-    pwrites, so ``overlap_ratio = (encode_s + write_s) / wall_s`` exceeds 1.0
-    exactly when encoding genuinely overlapped the disk writes (the Jin-style
+    Writes (:class:`ChunkPipeline`): ``encode_s`` is summed across codec
+    workers and ``write_s`` across drain pwrites.  Reads
+    (:class:`DecodePipeline`): ``encode_s`` holds the summed inflate/decode
+    worker time and ``write_s`` the summed preadv fetch time (the
+    :attr:`decode_s` / :attr:`fetch_s` aliases).  Either way
+    ``overlap_ratio = (encode_s + write_s) / wall_s`` exceeds 1.0 exactly
+    when codec work genuinely overlapped the disk I/O (the Jin-style
     pipeline working as intended).
     """
 
@@ -540,6 +556,15 @@ class FilterStats:
     @property
     def overlap_ratio(self) -> float:
         return (self.encode_s + self.write_s) / self.wall_s if self.wall_s > 0 else 0.0
+
+    # read-side aliases (DecodePipeline fills the same slots)
+    @property
+    def decode_s(self) -> float:
+        return self.encode_s
+
+    @property
+    def fetch_s(self) -> float:
+        return self.write_s
 
     def merge(self, other: "FilterStats") -> "FilterStats":
         self.n_chunks += other.n_chunks
@@ -711,3 +736,272 @@ class ChunkPipeline:
             pool = self._get_pool()
             for fut in [pool.submit(drain, d) for d in domains]:
                 fut.result()
+
+
+# -- the overlapped decode (read-side filter) pipeline --------------------------
+
+
+class DecodePipeline:
+    """Read-side mirror of :class:`ChunkPipeline` (the paper's "fast (random)
+    access when retrieving the data for visual processing", made real).
+
+    Cold multi-chunk reads used to decode intersecting chunks serially:
+    pread chunk k, inflate chunk k, pread chunk k+1, ...  This pipeline
+    preadv-fetches chunk k+1's stored bytes on the calling thread *while*
+    chunk k inflates in a persistent worker pool, with a bounded in-flight
+    window (same shape as the write pipeline, arrows reversed).  zlib /
+    CRC / numpy release the GIL, so the overlap is real thread parallelism.
+
+    Fast paths are preserved exactly:
+
+      * chunk-cache hits never touch the pool (and ``verify=True`` still
+        bypasses cache *hits* — a verified read must never launder a decode
+        populated by an unverified one);
+      * ``none``-codec chunks on a native-dtype, unverified gather keep the
+        PR-2 zero-copy route — a vectored ``preadv`` straight into the
+        caller's destination rows, ``COPY_COUNTER`` delta 0;
+      * a single decode-needed chunk is inflated inline (no pool hop).
+
+    Every gather publishes a read-side :class:`FilterStats`
+    (``decode_s`` / ``fetch_s`` / ``overlap_ratio``) to
+    ``TH5File.last_read_stats`` and merges it into the cumulative
+    ``TH5File.read_stats``.  Thread-safe: concurrent gathers share the pool
+    and the (thread-safe) chunk cache; each call's destination rows are
+    disjoint slices owned by that call.
+    """
+
+    def __init__(self, f: TH5File, config: AggregationConfig | None = None):
+        self.file = f
+        self.config = config or AggregationConfig()
+        self._pool: ThreadPoolExecutor | None = None
+        self._pool_lock = threading.Lock()
+
+    def _get_pool(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=max(2, self.config.n_aggregators),
+                    thread_name_prefix="chunk-decode",
+                )
+            return self._pool
+
+    def close(self) -> None:
+        with self._pool_lock:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+                self._pool = None
+
+    def __enter__(self) -> "DecodePipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self) -> None:  # best-effort thread release
+        try:
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+        except Exception:
+            pass
+
+    # -- building blocks -------------------------------------------------------
+
+    def _record(self, name: str, meta: DatasetMeta, ci: int):
+        if meta.chunks is None or ci >= len(meta.chunks):
+            raise CorruptFileError(f"chunk {ci} of {name} missing (incomplete write)")
+        return meta.chunks[ci]
+
+    def _fetch(self, name: str, ci: int, rec) -> tuple[np.ndarray, int]:
+        """Read chunk ``ci``'s stored payload (caller thread — the I/O half
+        of the pipeline).  ``preadv_full`` resumes short reads; EOF inside
+        the extent (truncated file) names the offending chunk.  Returns
+        ``(payload, syscalls)``."""
+        buf = np.empty(rec.nbytes, dtype=np.uint8)
+        calls = 0
+        if rec.nbytes:
+            try:
+                n, calls = preadv_full(self.file.fd, [_byte_view(buf)], rec.offset)
+            except CorruptFileError as e:
+                raise CorruptFileError(f"short read on chunk {ci} of {name}: {e}") from None
+            READ_COUNTER.add(n, calls)
+        return buf, calls
+
+    def _inflate(
+        self, name: str, meta: DatasetMeta, ci: int, rec, blob: np.ndarray, verify: bool
+    ) -> np.ndarray:
+        """Decode one fetched payload (pool worker — the CPU half).  CRC
+        failures name the chunk; the decoded rows are cached."""
+        if verify and (zlib.crc32(blob) & 0xFFFFFFFF) != rec.stored_crc32:
+            raise CorruptFileError(f"stored CRC mismatch on chunk {ci} of {name}")
+        codec = codec_by_id(rec.codec_id)
+        dt = meta.np_dtype
+        flat = codec.decode(blob, dt, rec.raw_nbytes // dt.itemsize)
+        if verify and codec.lossless:
+            if (zlib.crc32(_byte_view(np.ascontiguousarray(flat))) & 0xFFFFFFFF) != rec.raw_crc32:
+                raise CorruptFileError(f"payload CRC mismatch on chunk {ci} of {name}")
+        lo, hi = meta.chunk_row_range(ci)
+        out = flat.reshape((hi - lo,) + tuple(meta.shape[1:]))
+        self.file.chunk_cache.put((name, ci), out)
+        return out
+
+    def _publish(self, stats: FilterStats) -> None:
+        f = self.file
+        with f._read_stats_lock:
+            f.last_read_stats = stats
+            if f.read_stats is None:
+                f.read_stats = FilterStats()
+            f.read_stats.merge(stats)
+
+    def _run(
+        self,
+        name: str,
+        meta: DatasetMeta,
+        jobs: list[tuple[int, Any]],
+        verify: bool,
+        stats: FilterStats,
+        consume,
+    ) -> None:
+        """Drive fetch→inflate over ``jobs`` (list of (ci, rec)), calling
+        ``consume(ci, decoded_rows)`` in chunk order.  Two or more jobs run
+        overlapped: chunk k+1's preadv proceeds on this thread while chunk k
+        inflates in the pool."""
+
+        def account(rec, calls):
+            stats.n_chunks += 1
+            stats.raw_bytes += rec.raw_nbytes
+            stats.stored_bytes += rec.nbytes
+            stats.n_syscalls += calls
+
+        if len(jobs) == 1:
+            ci, rec = jobs[0]
+            t0 = time.perf_counter()
+            blob, calls = self._fetch(name, ci, rec)
+            t1 = time.perf_counter()
+            dec = self._inflate(name, meta, ci, rec, blob, verify)
+            stats.write_s += t1 - t0
+            stats.encode_s += time.perf_counter() - t1
+            account(rec, calls)
+            consume(ci, dec)
+            return
+
+        pool = self._get_pool()
+        window = 2 * max(2, self.config.n_aggregators)  # bounded in-flight payloads
+
+        def inflate_timed(ci, rec, blob):
+            t0 = time.perf_counter()
+            dec = self._inflate(name, meta, ci, rec, blob, verify)
+            return dec, time.perf_counter() - t0
+
+        pending: deque = deque()  # (ci, Future) in chunk order
+
+        def drain_one() -> None:
+            ci, fut = pending.popleft()
+            dec, dt = fut.result()  # re-raises CorruptFileError naming the chunk
+            stats.encode_s += dt
+            consume(ci, dec)
+
+        try:
+            for ci, rec in jobs:
+                while len(pending) >= window:
+                    drain_one()
+                t0 = time.perf_counter()
+                blob, calls = self._fetch(name, ci, rec)  # overlaps in-flight inflates
+                stats.write_s += time.perf_counter() - t0
+                pending.append((ci, pool.submit(inflate_timed, ci, rec, blob)))
+                account(rec, calls)
+            while pending:
+                drain_one()
+        finally:
+            # error path: cancel what hasn't started, then retrieve the rest —
+            # an already-running worker's exception (e.g. a second corrupt
+            # chunk) must not surface as an unretrieved-future warning at GC
+            while pending:
+                _, fut = pending.popleft()
+                if not fut.cancel():  # already running/done: wait + retrieve
+                    try:
+                        fut.result()
+                    except Exception:
+                        pass  # the first failure is already propagating
+
+    # -- public entry points ----------------------------------------------------
+
+    def gather_rows(
+        self,
+        name: str,
+        meta: DatasetMeta,
+        row_start: int,
+        n_rows: int,
+        out: np.ndarray,
+        verify: bool = False,
+    ) -> int:
+        """Fill ``out`` with rows [row_start, row_start+n_rows) of a chunked
+        dataset, decoding ONLY the intersecting chunks — cold multi-chunk
+        windows overlap preadv with inflate.  Returns bytes gathered."""
+        if n_rows == 0:
+            return 0
+        f = self.file
+        rb = meta.row_bytes
+        cr = meta.chunk_rows or 1
+        dt = meta.np_dtype
+        native = TH5File._is_native(dt)
+        out2 = out.reshape((n_rows, -1))  # view (out is C-contiguous)
+        stats = FilterStats()
+        t_start = time.perf_counter()
+
+        def dst_for(ci: int) -> tuple[np.ndarray, int, int, int]:
+            clo, chi = meta.chunk_row_range(ci)
+            s, e = max(row_start, clo), min(row_start + n_rows, chi)
+            return out2[s - row_start : e - row_start], s, e, clo
+
+        jobs: list[tuple[int, Any]] = []
+        for ci in range(row_start // cr, (row_start + n_rows - 1) // cr + 1):
+            dst, s, e, clo = dst_for(ci)
+            rec = self._record(name, meta, ci)
+            if rec.codec_id == CODEC_NONE and native and not verify:
+                # raw chunk: vectored read directly into the result rows
+                # (zero intermediate copies — the PR-2 fast path, untouched)
+                n, calls = preadv_full(f.fd, [_byte_view(dst)], rec.offset + (s - clo) * rb)
+                READ_COUNTER.add(n, calls)
+                stats.n_syscalls += calls
+                continue
+            if not verify:
+                hit = f.chunk_cache.get((name, ci))
+                if hit is not None:
+                    _byte_view(dst)[:] = _byte_view(np.ascontiguousarray(hit[s - clo : e - clo]))
+                    continue
+            jobs.append((ci, rec))
+
+        if jobs:
+            def consume(ci: int, dec: np.ndarray) -> None:
+                dst, s, e, clo = dst_for(ci)
+                # byte-level copy: dtype-agnostic (out may be a raw byte buffer)
+                _byte_view(dst)[:] = _byte_view(np.ascontiguousarray(dec[s - clo : e - clo]))
+
+            self._run(name, meta, jobs, verify, stats, consume)
+        stats.wall_s = time.perf_counter() - t_start
+        self._publish(stats)
+        return n_rows * rb
+
+    def decode_chunks(
+        self, name: str, meta: DatasetMeta, cis: Sequence[int], verify: bool = False
+    ) -> dict[int, np.ndarray]:
+        """Decode the given chunk indices (deduplicated, in order), fetching
+        chunk k+1 while chunk k inflates.  Returns {ci: decoded rows};
+        callers must not mutate the arrays (they are cache entries)."""
+        f = self.file
+        out: dict[int, np.ndarray] = {}
+        stats = FilterStats()
+        t_start = time.perf_counter()
+        jobs: list[tuple[int, Any]] = []
+        for ci in dict.fromkeys(int(c) for c in cis):
+            if not verify:
+                hit = f.chunk_cache.get((name, ci))
+                if hit is not None:
+                    out[ci] = hit
+                    continue
+            jobs.append((ci, self._record(name, meta, ci)))
+        if jobs:
+            self._run(name, meta, jobs, verify, stats, out.__setitem__)
+        stats.wall_s = time.perf_counter() - t_start
+        self._publish(stats)
+        return out

@@ -71,6 +71,13 @@ class CodecPolicy:
     contiguous zero-copy path, and a lossy codec on a non-float leaf falls
     back to ``lossless_fallback`` (quantising step counters corrupts them).
     ``chunk_rows=None`` sizes chunks to ~``target_chunk_bytes`` each.
+
+    Dtype heuristic (``auto_shuffle``, on by default): a ``zlib`` leaf whose
+    dtype is f32/f64 upgrades to ``shuffle+zlib`` — the HDF5 byte-shuffle
+    pre-filter groups exponent/high-mantissa bytes into runs and lifts the
+    deflate ratio well above plain zlib on field data (measured in
+    ``benchmarks/io_bandwidth.py``'s ``read`` section).  Integer and
+    sub-4-byte leaves keep plain zlib (shuffle buys little there).
     """
 
     default: str = "none"
@@ -79,6 +86,7 @@ class CodecPolicy:
     target_chunk_bytes: int = 1 << 20
     min_chunk_bytes: int = 1 << 16
     lossless_fallback: str = "zlib"
+    auto_shuffle: bool = True
 
     def codec_for(self, leaf_path: str) -> str:
         for pattern, codec in self.rules:
@@ -95,7 +103,15 @@ class CodecPolicy:
             return "none"
         is_float = arr.dtype.kind == "f" or arr.dtype.name.startswith(("bfloat16", "float8"))
         if codec.partition(":")[0] == "int8-blockq" and not is_float:
-            return self.lossless_fallback
+            codec = self.lossless_fallback
+        name, _, param = codec.partition(":")
+        if (
+            self.auto_shuffle
+            and name == "zlib"
+            and arr.dtype.kind == "f"
+            and arr.dtype.itemsize >= 4
+        ):
+            return "shuffle+zlib" + (f":{param}" if param else "")
         return codec
 
     def chunk_rows_for(self, n_rows: int, row_bytes: int) -> int:

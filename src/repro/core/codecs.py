@@ -10,15 +10,25 @@ overlapped encode-while-writing stage lives in
 :class:`repro.core.aggregation.ChunkPipeline`, and the on-disk chunk-record
 layout is specified in ``docs/FORMAT.md``.
 
-Three codecs (ids are stable on-disk values — never renumber):
+Four codecs (ids are stable on-disk values — never renumber):
 
-  ==== ============== ========= =======================================
-  id   name           lossless  payload
-  ==== ============== ========= =======================================
-  0    ``none``       yes       raw little-endian chunk bytes
-  1    ``zlib``       yes       DEFLATE (RFC 1950) of the raw bytes
-  2    ``int8-blockq``no        per-256-block f32 scales + int8 mantissas
-  ==== ============== ========= =======================================
+  ==== ================ ========= =======================================
+  id   name             lossless  payload
+  ==== ================ ========= =======================================
+  0    ``none``         yes       raw little-endian chunk bytes
+  1    ``zlib``         yes       DEFLATE (RFC 1950) of the raw bytes
+  2    ``int8-blockq``  no        per-256-block f32 scales + int8 mantissas
+  3    ``shuffle+zlib`` yes       DEFLATE of the byte-shuffled chunk bytes
+  ==== ================ ========= =======================================
+
+``shuffle+zlib`` is HDF5's byte-shuffle pre-filter fused with deflate: the
+raw chunk bytes are viewed as ``(n_elems, itemsize)`` and transposed, so all
+first bytes of every element come first, then all second bytes, and so on.
+Fixed-point-ish scientific f32/f64 fields share exponent and high-mantissa
+bytes across neighbouring elements; grouping them into byte planes hands
+zlib long runs it can actually exploit (measured: 1.88:1 → ~2.5:1 on the
+benchmark field data).  The shuffle itself is a pure permutation — decoding
+transposes back, so the filter stays bit-exact lossless.
 
 ``int8-blockq`` is the lossy scientific-data codec: the same per-block
 quantiser as ``repro.distributed.compression`` (the DCN gradient compressor),
@@ -42,6 +52,7 @@ import numpy as np
 CODEC_NONE = 0
 CODEC_ZLIB = 1
 CODEC_INT8_BLOCKQ = 2
+CODEC_SHUFFLE_ZLIB = 3
 
 BLOCK = 256  # quantiser block length — mirrors repro.distributed.compression.BLOCK
 
@@ -107,6 +118,56 @@ class ZlibCodec(Codec):
         return out
 
 
+def byte_shuffle(raw: bytes | memoryview, itemsize: int) -> np.ndarray:
+    """HDF5 shuffle filter: regroup ``raw`` (n_elems × itemsize element
+    bytes) into itemsize byte planes.  Pure permutation — inverse is
+    :func:`byte_unshuffle`."""
+    b = np.frombuffer(raw, dtype=np.uint8)
+    if itemsize <= 1 or b.size == 0:
+        return b
+    if b.size % itemsize:
+        raise ValueError(f"{b.size} bytes is not a multiple of itemsize {itemsize}")
+    return np.ascontiguousarray(b.reshape(-1, itemsize).T).reshape(-1)
+
+
+def byte_unshuffle(shuffled: bytes | memoryview, itemsize: int) -> np.ndarray:
+    """Invert :func:`byte_shuffle`: byte planes back to element order."""
+    b = np.frombuffer(shuffled, dtype=np.uint8)
+    if itemsize <= 1 or b.size == 0:
+        return b
+    if b.size % itemsize:
+        raise ValueError(f"{b.size} bytes is not a multiple of itemsize {itemsize}")
+    return np.ascontiguousarray(b.reshape(itemsize, -1).T).reshape(-1)
+
+
+class ShuffleZlibCodec(Codec):
+    """Byte-shuffle pre-filter + DEFLATE (HDF5's ``shuffle | deflate`` filter
+    chain fused into one codec id).  The stored payload is
+    ``zlib.compress(byte_shuffle(raw, itemsize))``; decode inflates and
+    transposes the byte planes back.  ``itemsize`` is recovered from the
+    dtype at decode time — no payload header needed."""
+
+    name = "shuffle+zlib"
+    codec_id = CODEC_SHUFFLE_ZLIB
+    lossless = True
+
+    def __init__(self, level: int = 1):
+        self.level = int(level)
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        arr = np.ascontiguousarray(arr)
+        itemsize = arr.dtype.itemsize
+        return zlib.compress(byte_shuffle(_byte_view(arr), itemsize), self.level)
+
+    def decode(self, blob, dtype: np.dtype, n_elems: int) -> np.ndarray:
+        dt = np.dtype(dtype)
+        raw = byte_unshuffle(zlib.decompress(blob), dt.itemsize)
+        out = np.frombuffer(raw, dtype=dt, count=n_elems)
+        if not (dt.byteorder in ("|", "=") or dt.isnative):
+            out = out.astype(dt.newbyteorder("="))
+        return out
+
+
 class Int8BlockQCodec(Codec):
     """Lossy block quantiser: per-``BLOCK`` f32 scale + int8 mantissas.
 
@@ -151,13 +212,14 @@ _BY_ID: dict[int, Codec] = {
     CODEC_NONE: NoneCodec(),
     CODEC_ZLIB: ZlibCodec(),
     CODEC_INT8_BLOCKQ: Int8BlockQCodec(),
+    CODEC_SHUFFLE_ZLIB: ShuffleZlibCodec(),
 }
 CODEC_NAMES: tuple[str, ...] = tuple(c.name for c in _BY_ID.values())
 
 
 def get_codec(spec: str) -> Codec:
     """Resolve a codec spec: ``none``, ``zlib``, ``zlib:<level>``,
-    ``int8-blockq``."""
+    ``int8-blockq``, ``shuffle+zlib``, ``shuffle+zlib:<level>``."""
     name, _, param = str(spec).partition(":")
     if name == "none":
         return _BY_ID[CODEC_NONE]
@@ -165,6 +227,8 @@ def get_codec(spec: str) -> Codec:
         return ZlibCodec(int(param)) if param else _BY_ID[CODEC_ZLIB]
     if name == "int8-blockq":
         return _BY_ID[CODEC_INT8_BLOCKQ]
+    if name == "shuffle+zlib":
+        return ShuffleZlibCodec(int(param)) if param else _BY_ID[CODEC_SHUFFLE_ZLIB]
     raise ValueError(f"unknown codec {spec!r} (have {CODEC_NAMES})")
 
 

@@ -57,7 +57,7 @@ from typing import Any, Iterable, Mapping, Sequence
 import numpy as np
 
 from . import codecs as _codecs
-from .codecs import CODEC_NONE, codec_by_id, get_codec
+from .codecs import get_codec
 from .hyperslab import SlabPlan, align_up
 
 IOV_MAX = 1024  # conservative portable IOV_MAX (per preadv/pwritev call)
@@ -452,6 +452,12 @@ class TH5File:
         self._dirty = False
         self._closed = False
         self.chunk_cache = ChunkCache()
+        # read-side decode pipeline (aggregation.DecodePipeline), created
+        # lazily on the first chunked read; per-read + cumulative FilterStats
+        self._decode_pipe = None
+        self._read_stats_lock = threading.Lock()
+        self.read_stats = None  # cumulative aggregation.FilterStats
+        self.last_read_stats = None  # the most recent gather's FilterStats
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -486,6 +492,9 @@ class TH5File:
     def close(self) -> None:
         if self._closed:
             return
+        if self._decode_pipe is not None:
+            self._decode_pipe.close()
+            self._decode_pipe = None
         if self._dirty and self.mode != "r":
             self._commit()
         os.close(self._fd)
@@ -830,40 +839,34 @@ class TH5File:
     def _is_native(dt: np.dtype) -> bool:
         return dt.byteorder in ("|", "=") or dt.isnative
 
-    def _decode_chunk(
-        self, name: str, meta: DatasetMeta, ci: int, verify: bool = False
-    ) -> np.ndarray:
-        """Read + decode chunk ``ci`` through the LRU cache.  Returns the
-        chunk's rows as a native-dtype array; callers must not mutate it.
+    def _decode_pipeline(self):
+        """The file's decode pipeline (``aggregation.DecodePipeline``),
+        created lazily — every chunked read routes through it.  Init is
+        guarded by ``_read_stats_lock`` so concurrent first reads share one
+        pipeline (and one decode pool).  The deferred import breaks the
+        container→aggregation cycle (aggregation imports this module at its
+        top level)."""
+        pipe = self._decode_pipe
+        if pipe is None:
+            from .aggregation import DecodePipeline  # deferred: circular import
 
-        ``verify=True`` bypasses cache *hits*: a cached decode may have been
-        populated by an unverified read (LOD playback never verifies), and a
-        verified read must never launder corrupt bytes through it."""
-        key = (name, ci)
-        if not verify:
-            hit = self.chunk_cache.get(key)
-            if hit is not None:
-                return hit
-        if meta.chunks is None or ci >= len(meta.chunks):
-            raise CorruptFileError(f"chunk {ci} of {name} missing (incomplete write)")
-        rec = meta.chunks[ci]
-        blob = os.pread(self._fd, rec.nbytes, rec.offset)
-        READ_COUNTER.add(len(blob), 1)
-        if len(blob) != rec.nbytes:
-            raise CorruptFileError(f"short read on chunk {ci} of {name}")
-        if verify and (zlib.crc32(blob) & 0xFFFFFFFF) != rec.stored_crc32:
-            raise CorruptFileError(f"stored CRC mismatch on chunk {ci} of {name}")
-        codec = codec_by_id(rec.codec_id)
-        dt = meta.np_dtype
-        n_elems = rec.raw_nbytes // dt.itemsize
-        flat = codec.decode(blob, dt, n_elems)
-        if verify and codec.lossless:
-            if (zlib.crc32(_byte_view(np.ascontiguousarray(flat))) & 0xFFFFFFFF) != rec.raw_crc32:
-                raise CorruptFileError(f"payload CRC mismatch on chunk {ci} of {name}")
-        lo, hi = meta.chunk_row_range(ci)
-        out = flat.reshape((hi - lo,) + tuple(meta.shape[1:]))
-        self.chunk_cache.put(key, out)
-        return out
+            with self._read_stats_lock:
+                pipe = self._decode_pipe
+                if pipe is None:
+                    pipe = self._decode_pipe = DecodePipeline(self)
+        return pipe
+
+    def set_decode_config(self, config) -> None:
+        """Swap the decode pipeline's :class:`~repro.core.aggregation.
+        AggregationConfig` (pool width = ``n_aggregators``).  Closes any
+        existing pool, so the caller must be quiescent: a chunked read in
+        flight on another thread would lose its pool mid-gather."""
+        from .aggregation import DecodePipeline  # deferred: circular import
+
+        with self._read_stats_lock:
+            old, self._decode_pipe = self._decode_pipe, DecodePipeline(self, config)
+        if old is not None:
+            old.close()
 
     def _gather_rows_chunked(
         self,
@@ -875,31 +878,14 @@ class TH5File:
         verify: bool = False,
     ) -> int:
         """Fill ``out`` with rows [row_start, row_start+n_rows) of a chunked
-        dataset, decoding ONLY the intersecting chunks.  ``none``-codec
-        chunks scatter-read straight into the destination rows (zero
-        intermediate copies, like the contiguous path)."""
-        if n_rows == 0:
-            return 0
-        dt = meta.np_dtype
-        rb = meta.row_bytes
-        cr = meta.chunk_rows or 1
-        out2 = out.reshape((n_rows, -1))  # view (out is C-contiguous); rows stay addressable
-        for ci in range(row_start // cr, (row_start + n_rows - 1) // cr + 1):
-            clo, chi = meta.chunk_row_range(ci)
-            s, e = max(row_start, clo), min(row_start + n_rows, chi)
-            dst = out2[s - row_start : e - row_start]
-            rec = meta.chunks[ci] if meta.chunks is not None and ci < len(meta.chunks) else None
-            if rec is None:
-                raise CorruptFileError(f"chunk {ci} of {name} missing (incomplete write)")
-            if rec.codec_id == CODEC_NONE and self._is_native(dt) and not verify:
-                # raw chunk: vectored read directly into the result rows
-                n, calls = preadv_full(self._fd, [_byte_view(dst)], rec.offset + (s - clo) * rb)
-                READ_COUNTER.add(n, calls)
-            else:
-                src = self._decode_chunk(name, meta, ci, verify=verify)[s - clo : e - clo]
-                # byte-level copy: dtype-agnostic (out may be a raw byte buffer)
-                _byte_view(dst)[:] = _byte_view(np.ascontiguousarray(src))
-        return n_rows * rb
+        dataset, decoding ONLY the intersecting chunks — via the overlapped
+        :class:`~repro.core.aggregation.DecodePipeline` (chunk k+1's preadv
+        in flight while chunk k inflates).  ``none``-codec chunks
+        scatter-read straight into the destination rows (zero intermediate
+        copies, like the contiguous path)."""
+        return self._decode_pipeline().gather_rows(
+            name, meta, row_start, n_rows, out, verify=verify
+        )
 
     def read(self, name: str, verify: bool = False) -> np.ndarray:
         meta = self.meta(name)
@@ -990,15 +976,16 @@ class TH5File:
             raise TH5Error("row range out of bounds")
         if meta.is_chunked:
             # gather by chunk: each intersecting chunk is read+decoded once
-            # (LRU-cached), then its requested rows fan out to their slots —
-            # sliding-window playback over a compressed file never inflates
-            # the full dataset
+            # (LRU-cached) through the overlapped DecodePipeline — chunk
+            # k+1's preadv runs while chunk k inflates — then its requested
+            # rows fan out to their slots; sliding-window playback over a
+            # compressed file never inflates the full dataset
             cr = meta.chunk_rows or 1
             cis = idx // cr
-            for ci in np.unique(cis):
+            decoded = self._decode_pipeline().decode_chunks(name, meta, np.unique(cis))
+            for ci, dec in decoded.items():
                 sel = cis == ci
-                dec = self._decode_chunk(name, meta, int(ci))
-                out[sel] = dec[idx[sel] - int(ci) * cr]
+                out[sel] = dec[idx[sel] - ci * cr]
             return out
         order = np.argsort(idx, kind="stable")
         sorted_idx = idx[order]

@@ -17,7 +17,9 @@ Two front-ends:
 
 Both ride on the container's gather primitives, so they work unchanged over
 compressed files: on a chunked dataset ``read_row_indices`` decodes only the
-chunks intersecting the window, through the file's LRU
+chunks intersecting the window, through the overlapped
+:class:`~repro.core.aggregation.DecodePipeline` (chunk k+1's preadv in
+flight while chunk k inflates) and the file's LRU
 :class:`~repro.core.container.ChunkCache` — overlapping playback windows
 decompress each chunk once, never the full dataset (read-path map:
 ``docs/ARCHITECTURE.md``).
@@ -130,9 +132,14 @@ class WindowPrefetcher:
     A single worker thread is deliberate: gathers target one file descriptor
     and the aggregation-aware coalescing inside ``read_row_indices`` already
     turns each window into few large ``preadv`` calls — more threads would
-    just reintroduce seek contention.  On chunked datasets the worker also
-    owns the decompression; the chunk cache (thread-safe) carries decoded
-    chunks across overlapping windows — see :meth:`cache_stats`.
+    just reintroduce seek contention.  On chunked datasets the worker drives
+    the file's :class:`~repro.core.aggregation.DecodePipeline`: within each
+    window, chunk k+1's preadv is in flight while chunk k inflates in the
+    decode pool, so a *cold* window replay overlaps disk I/O with
+    decompression twice over (window-level double buffering × chunk-level
+    fetch/inflate overlap).  The chunk cache (thread-safe) carries decoded
+    chunks across overlapping windows — see :meth:`cache_stats` and
+    :meth:`decode_stats`.
     """
 
     def __init__(self, f: TH5File, dataset: str):
@@ -143,6 +150,12 @@ class WindowPrefetcher:
     def cache_stats(self) -> dict:
         """Chunk-cache hit/miss counters (chunked datasets; benchmarks)."""
         return self.f.chunk_cache.stats()
+
+    def decode_stats(self):
+        """Cumulative read-side ``FilterStats`` of the underlying file
+        (fetch/inflate overlap across every gather so far), or ``None`` if
+        no chunked read has happened yet."""
+        return self.f.read_stats
 
     def submit(self, rows: Sequence[int]) -> "Future[np.ndarray]":
         return self._pool.submit(self.f.read_row_indices, self.dataset, list(rows))

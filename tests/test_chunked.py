@@ -46,7 +46,7 @@ def _roundtrip(tmp_path, data, chunk_rows, codec, name="rt.th5"):
     rows=st.integers(min_value=1, max_value=70),
     cols=st.integers(min_value=1, max_value=9),
     chunk_rows=st.integers(min_value=1, max_value=80),
-    codec=st.sampled_from(["none", "zlib", "zlib:6"]),
+    codec=st.sampled_from(["none", "zlib", "zlib:6", "shuffle+zlib", "shuffle+zlib:6"]),
     dtype=st.sampled_from(["<f4", "<f8", "<i4", "<u1"]),
     seed=st.integers(min_value=0, max_value=2**16),
 )
@@ -76,6 +76,85 @@ def test_lossy_roundtrip_within_stored_scale_tolerance(tmp_path, rows, cols, chu
     data = ((rng.random((rows, cols)) - 0.5) * 10).astype(np.float32)
     got, _ = _roundtrip(tmp_path, data, chunk_rows, "int8-blockq")
     assert np.abs(got.astype(np.float64) - data).max() <= Int8BlockQCodec.tolerance(data)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_elems=st.integers(min_value=0, max_value=4096),
+    dtype=st.sampled_from(["<f4", "<f8", "<i8", "<u2", "<u1"]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_byte_shuffle_is_a_pure_permutation(n_elems, dtype, seed):
+    """shuffle∘unshuffle == identity for any element count × itemsize, and
+    the shuffled buffer is byte-for-byte a permutation of the input."""
+    from repro.core.codecs import byte_shuffle, byte_unshuffle
+
+    rng = np.random.default_rng(seed)
+    dt = np.dtype(dtype)
+    raw = rng.integers(0, 256, n_elems * dt.itemsize, dtype=np.uint8).tobytes()
+    shuf = byte_shuffle(raw, dt.itemsize)
+    assert shuf.nbytes == len(raw)
+    np.testing.assert_array_equal(np.sort(shuf), np.sort(np.frombuffer(raw, np.uint8)))
+    np.testing.assert_array_equal(byte_unshuffle(shuf.tobytes(), dt.itemsize),
+                                  np.frombuffer(raw, np.uint8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=70),
+    cols=st.integers(min_value=1, max_value=9),
+    chunk_rows=st.integers(min_value=1, max_value=80),
+    dtype=st.sampled_from(["<f4", "<f8"]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_shuffle_zlib_roundtrip_bitexact(tmp_path, rows, cols, chunk_rows, dtype, seed):
+    """The shuffle pre-filter stays bit-exact across shape × dtype × chunk
+    size, including ragged final chunks and chunk_rows > rows — and the
+    written chunks survive the byte-balanced file-domain split (the
+    straddling-boundary case is exercised separately below)."""
+    rng = np.random.default_rng(seed)
+    dt = np.dtype(dtype)
+    data = ((rng.integers(0, 256, (rows, cols)) / 256) * 8 - 4).astype(dt)
+    got, meta = _roundtrip(tmp_path, data, chunk_rows, "shuffle+zlib")
+    np.testing.assert_array_equal(got, data)
+    assert len(meta.chunks) == -(-rows // min(chunk_rows, 80))
+
+
+def test_shuffle_zlib_chunks_straddle_file_domain_boundaries(tmp_path):
+    """shuffle+zlib chunks through the overlapped pipeline: wildly unequal
+    post-filter sizes land across byte-balanced domain boundaries and still
+    round-trip bit-exact under verify=True."""
+    from repro.core.codecs import CODEC_SHUFFLE_ZLIB
+
+    rng = np.random.default_rng(12)
+    parts = []
+    for i in range(16):  # alternate smooth (compressible) and noisy chunks
+        if i % 2:
+            parts.append(np.full((64, 16), float(i), np.float32))
+        else:
+            parts.append(rng.standard_normal((64, 16)).astype(np.float32))
+    data = np.concatenate(parts)
+    with TH5File.create(str(tmp_path / "svl.th5")) as f:
+        meta = f.create_chunked_dataset("/d", data.shape, "<f4", 64, "shuffle+zlib")
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=4)) as pipe:
+            fs = pipe.write(meta, data)
+        f.commit()
+        assert fs.n_chunks == 16
+        assert len({c.nbytes for c in meta.chunks}) > 1  # genuinely variable-length
+        assert CODEC_SHUFFLE_ZLIB in {c.codec_id for c in meta.chunks}
+        np.testing.assert_array_equal(f.read("/d", verify=True), data)
+
+
+def test_shuffle_uplift_over_plain_zlib_on_f32():
+    """Ratio regression: the byte-shuffle pre-filter must compress f32 field
+    data at least as well as plain zlib (in practice ~30% better — the
+    committed BENCH_io.json `read` section tracks the exact uplift)."""
+    rng = np.random.default_rng(7)
+    field = (rng.integers(0, 1024, (2048, 64)) / 1024.0).astype(np.float32)
+    plain = len(get_codec("zlib").encode(field))
+    shuffled = len(get_codec("shuffle+zlib").encode(field))
+    assert shuffled <= plain
+    assert field.nbytes / shuffled > 1.88  # beats the committed plain-zlib ratio
 
 
 def test_1d_and_ragged_final_chunk_roundtrip(tmp_path):
@@ -285,6 +364,80 @@ def test_variable_length_requests_through_collective_writer(tmp_path):
         np.testing.assert_array_equal(f.read("/d"), np.concatenate(payloads))
 
 
+# -- the read-side decode pipeline ---------------------------------------------
+
+
+def test_decode_pipeline_overlaps_fetch_with_inflate(tmp_path):
+    """Cold multi-chunk read: stored bytes of chunk k+1 are preadv-fetched
+    while chunk k inflates in the decode pool — both halves show up in the
+    per-read FilterStats and the result is bit-exact."""
+    rng = np.random.default_rng(13)
+    data = (rng.integers(0, 128, (2048, 64)) / 128).astype(np.float32)
+    path = str(tmp_path / "dp.th5")
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/d", data.shape, "<f4", 128, "zlib")
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=4)) as pipe:
+            pipe.write(meta, data)
+        f.commit()
+    with TH5File.open(path) as f:  # fresh open: cold chunk cache
+        f.set_decode_config(AggregationConfig(n_aggregators=4))  # explicit pool width
+        got = f.read("/d")
+        np.testing.assert_array_equal(got, data)
+        rs = f.last_read_stats
+        assert rs is not None and rs.n_chunks == 16
+        assert rs.raw_bytes == data.nbytes and 0 < rs.stored_bytes < data.nbytes
+        assert rs.decode_s > 0 and rs.fetch_s > 0 and rs.wall_s > 0
+        # warm read: all cache hits → no decode work in the new stats
+        f.read("/d")
+        assert f.last_read_stats.n_chunks == 0
+        # cumulative stats accumulated both reads
+        assert f.read_stats.n_chunks == 16
+
+
+def test_decode_pipeline_none_codec_read_is_zero_copy(tmp_path):
+    """The PR-1/PR-2 invariant holds on the read side: raw-chunk gathers
+    scatter straight into the caller's buffer — COPY_COUNTER delta 0 and no
+    decode-pool work."""
+    rng = np.random.default_rng(14)
+    data = rng.integers(0, 255, (1024, 32), dtype=np.uint8)
+    path = str(tmp_path / "zr.th5")
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/d", data.shape, "<u1", 100, "none")
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=4)) as pipe:
+            pipe.write(meta, data)
+        f.commit()
+    with TH5File.open(path) as f:
+        COPY_COUNTER.reset()
+        out = np.empty_like(data)
+        f.read_rows_into("/d", 0, 1024, out)
+        assert COPY_COUNTER.snapshot() == (0, 0)
+        np.testing.assert_array_equal(out, data)
+        assert f.last_read_stats.n_chunks == 0  # fast path bypassed the pool
+        assert f.chunk_cache.stats()["entries"] == 0  # and never staged a decode
+
+
+def test_decode_pipeline_mixed_codec_gather(tmp_path):
+    """A gather spanning none- and zlib-coded chunks routes each through its
+    own path (direct scatter vs pipeline) within one read."""
+    rng = np.random.default_rng(15)
+    # alternate incompressible (falls back to none) and all-zero chunks
+    parts = [
+        rng.integers(0, 2**63, (32, 4), dtype=np.int64) if i % 2 else np.zeros((32, 4), np.int64)
+        for i in range(8)
+    ]
+    data = np.concatenate(parts)
+    path = str(tmp_path / "mx.th5")
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/d", data.shape, "<i8", 32, "zlib")
+        f.write_chunked(meta, data)
+        f.commit()
+        assert {c.codec_id for c in meta.chunks} == {CODEC_NONE, CODEC_ZLIB}
+    with TH5File.open(path) as f:
+        np.testing.assert_array_equal(f.read("/d"), data)
+        assert f.last_read_stats.n_chunks == 4  # only the zlib chunks decoded
+        np.testing.assert_array_equal(f.read_rows("/d", 16, 64), data[16:80])
+
+
 # -- sliding-window / LOD over compressed files --------------------------------
 
 
@@ -323,9 +476,19 @@ def _mixed_state(seed=0):
 def test_codec_policy_resolution():
     pol = CodecPolicy(default="zlib", rules=(("fields.*", "int8-blockq"),), min_chunk_bytes=64)
     assert pol.resolve("fields.u", np.zeros((64, 4), np.float32)) == "int8-blockq"
-    assert pol.resolve("opt.m", np.zeros((64, 4), np.float32)) == "zlib"
-    # lossy on an int leaf falls back to lossless
+    # dtype heuristic: zlib on an f32/f64 leaf upgrades to the shuffle filter
+    assert pol.resolve("opt.m", np.zeros((64, 4), np.float32)) == "shuffle+zlib"
+    assert pol.resolve("opt.v", np.zeros((64, 4), np.float64)) == "shuffle+zlib"
+    # ... but integer leaves keep plain zlib (shuffle buys little there)
+    assert pol.resolve("opt.idx", np.zeros((64, 4), np.int32)) == "zlib"
+    # lossy on an int leaf falls back to lossless (and stays unshuffled)
     assert pol.resolve("fields.mask", np.zeros((64, 4), np.int32)) == "zlib"
+    # opting out of the heuristic restores plain zlib everywhere
+    pol_plain = CodecPolicy(default="zlib", min_chunk_bytes=64, auto_shuffle=False)
+    assert pol_plain.resolve("opt.m", np.zeros((64, 4), np.float32)) == "zlib"
+    # the compression level rides through the upgrade
+    pol6 = CodecPolicy(default="zlib:6", min_chunk_bytes=64)
+    assert pol6.resolve("opt.m", np.zeros((64, 4), np.float32)) == "shuffle+zlib:6"
     # tiny / 0-d leaves stay on the contiguous zero-copy path
     assert pol.resolve("opt.step", np.int64(3)) == "none"
     assert pol.resolve("opt.m", np.zeros(4, np.float32)) == "none"

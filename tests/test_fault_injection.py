@@ -1,0 +1,263 @@
+"""Fault injection against the chunked read path (DecodePipeline).
+
+Every corruption mode a deployed reader can meet — bit-flipped stored chunk
+bytes, truncated files, corrupted index JSON, lying chunk records, short
+kernel reads — must either surface as a :class:`CorruptFileError` that
+*names the offending chunk* (``verify=True``) or, for the unverified fast
+path, must at minimum never be laundered through the decoded-chunk cache
+into a later verified read.  docs/FORMAT.md §"Integrity verification
+summary" is the contract under test.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AggregationConfig, ChunkPipeline, DecodePipeline
+from repro.core.codecs import encode_chunk, get_codec
+from repro.core.container import READ_COUNTER, CorruptFileError, TH5File
+
+
+def _write_chunked(path, data, chunk_rows, codec, name="/d", pipeline=False):
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset(name, data.shape, data.dtype, chunk_rows, codec)
+        if pipeline:
+            with ChunkPipeline(f, AggregationConfig(n_aggregators=4)) as pipe:
+                pipe.write(meta, data)
+        else:
+            f.write_chunked(meta, data)
+        f.commit()
+        return [(c.offset, c.nbytes) for c in meta.chunks]
+
+
+def _flip_bytes(path, offset, n=8):
+    with open(path, "r+b") as fh:
+        fh.seek(offset)
+        orig = fh.read(n)
+        fh.seek(offset)
+        fh.write(bytes(b ^ 0xFF for b in orig))
+
+
+# -- bit-flipped stored chunk bytes --------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["none", "zlib", "shuffle+zlib", "int8-blockq"])
+def test_bitflip_names_offending_chunk_under_verify(tmp_path, codec):
+    """Flipping bytes inside chunk 2's stored extent makes every verified
+    read raise a stored-CRC error that names chunk 2 — for every codec
+    (the stored CRC is checked *before* decode, so even a corrupted DEFLATE
+    stream fails cleanly, not inside zlib)."""
+    rng = np.random.default_rng(0)
+    data = (rng.integers(0, 64, (64, 8)) / 64).astype(np.float32)
+    path = str(tmp_path / f"bf_{codec.replace('+', '_')}.th5")
+    chunks = _write_chunked(path, data, 16, codec)
+    _flip_bytes(path, chunks[2][0] + chunks[2][1] // 2)
+    with TH5File.open(path) as f:
+        with pytest.raises(CorruptFileError, match="chunk 2 of /d"):
+            f.read("/d", verify=True)
+        # partial verified reads not touching chunk 2 still succeed
+        got = np.empty((16, 8), np.float32)
+        f._gather_rows_chunked("/d", f.meta("/d"), 0, 16, got, verify=True)
+        if get_codec(codec).lossless:
+            np.testing.assert_array_equal(got, data[:16])
+        else:  # int8-blockq: within the stored-scale tolerance
+            from repro.core.codecs import Int8BlockQCodec
+
+            assert np.abs(got - data[:16]).max() <= Int8BlockQCodec.tolerance(data[:16])
+
+
+def test_multiple_corrupt_chunks_fail_cleanly_and_pipeline_survives(tmp_path):
+    """Two corrupt chunks inside one pipelined read: the first (in chunk
+    order) is the one reported; in-flight workers for the second are
+    retrieved, not leaked; and the shared decode pool stays usable for
+    later reads on the same file."""
+    rng = np.random.default_rng(9)
+    data = (rng.integers(0, 64, (64, 8)) / 64).astype(np.float32)
+    path = str(tmp_path / "multi.th5")
+    chunks = _write_chunked(path, data, 8, "zlib")
+    for ci in (2, 5):
+        _flip_bytes(path, chunks[ci][0] + 2)
+    with TH5File.open(path) as f:
+        for _ in range(2):  # error path must be repeatable, not poison the pool
+            with pytest.raises(CorruptFileError, match="chunk 2 of /d"):
+                f.read("/d", verify=True)
+        # untouched region still reads verified through the same pipeline
+        out = np.empty((16, 8), np.float32)
+        f._gather_rows_chunked("/d", f.meta("/d"), 0, 16, out, verify=True)
+        np.testing.assert_array_equal(out, data[:16])
+
+
+def test_lying_raw_crc_caught_after_decode(tmp_path):
+    """A chunk record whose raw_crc32 doesn't match the decoded payload
+    (index bitrot / writer bug): the stored stream inflates fine, so only
+    the post-decode raw-CRC check can catch it — and it names the chunk."""
+    data = np.arange(128, dtype=np.float32).reshape(32, 4)
+    path = str(tmp_path / "lying.th5")
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/d", data.shape, "<f4", 16, "zlib")
+        codec = get_codec("zlib")
+        for ci, lo in enumerate(range(0, 32, 16)):
+            payload, raw_n, raw_crc, stored_crc, cid = encode_chunk(codec, data[lo : lo + 16])
+            f.append_chunk(
+                meta,
+                payload,
+                raw_nbytes=raw_n,
+                raw_crc32=raw_crc ^ (0xDEAD if ci == 1 else 0),  # chunk 1 lies
+                stored_crc32=stored_crc,
+                codec_id=cid,
+            )
+        f.commit()
+    with TH5File.open(path) as f:
+        with pytest.raises(CorruptFileError, match="payload CRC mismatch on chunk 1 of /d"):
+            f.read("/d", verify=True)
+        np.testing.assert_array_equal(f.read("/d", verify=False), data)  # unverified: readable
+
+
+# -- truncation ----------------------------------------------------------------
+
+
+def test_truncated_file_names_offending_chunk(tmp_path):
+    """The file gets truncated inside the last chunk's extent *under* an
+    open reader (torn copy / concurrent writer crash): the fetch hits EOF
+    mid-extent and the error names the chunk instead of a bare offset.
+    (Truncation below the index offset makes the file unopenable outright —
+    the superblock points past EOF and open() raises; that path is covered
+    by the index-corruption tests.)"""
+    rng = np.random.default_rng(1)
+    data = (rng.integers(0, 64, (64, 8)) / 64).astype(np.float32)
+    path = str(tmp_path / "trunc.th5")
+    chunks = _write_chunked(path, data, 16, "zlib")
+    with TH5File.open(path) as f:  # index loaded before the truncation
+        os.truncate(path, chunks[3][0] + chunks[3][1] // 2)
+        with pytest.raises(CorruptFileError, match="chunk 3 of /d"):
+            f.read("/d", verify=True)
+        with pytest.raises(CorruptFileError, match="chunk 3 of /d"):
+            f.read_rows("/d", 48, 16)  # unverified decode path fetches too
+        np.testing.assert_array_equal(f.read_rows("/d", 0, 48), data[:48])
+    # after the truncation the live index itself is gone → unopenable
+    with pytest.raises(CorruptFileError):
+        TH5File.open(path)
+
+
+# -- corrupted metadata --------------------------------------------------------
+
+
+def test_corrupt_index_json_rejected_at_open(tmp_path):
+    data = np.zeros((32, 4), np.float32)
+    path = str(tmp_path / "idx.th5")
+    _write_chunked(path, data, 16, "zlib")
+    with TH5File.open(path) as f:
+        pass  # sanity: opens before corruption
+    sb = open(path, "rb").read(512)
+    import struct
+
+    _, _, _, index_off, _, _, _, _, _ = struct.unpack_from("<4sIIQQQQdI", sb, 0)
+    _flip_bytes(path, index_off + 16)  # inside the JSON payload, past the CRC header
+    with pytest.raises(CorruptFileError, match="index CRC mismatch"):
+        TH5File.open(path)
+
+
+def test_corrupt_superblock_rejected_at_open(tmp_path):
+    path = str(tmp_path / "sb.th5")
+    _write_chunked(path, np.zeros((8, 4), np.float32), 4, "none")
+    _flip_bytes(path, 8, 4)  # block_size field → CRC mismatch
+    with pytest.raises(CorruptFileError, match="superblock CRC mismatch"):
+        TH5File.open(path)
+
+
+# -- cache laundering ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec", ["none", "int8-blockq"])
+def test_unverified_cache_never_launders_corruption(tmp_path, codec):
+    """An unverified multi-chunk read (LOD playback) happily decodes and
+    caches corrupted bytes (codecs where corruption decodes silently).  A
+    later verify=True read must re-fetch and raise — the poisoned cache
+    entry must never satisfy it.  Exercises the pipelined (multi-job) path,
+    not just the single-chunk inline one."""
+    rng = np.random.default_rng(2)
+    data = (rng.random((64, 8)) - 0.5).astype(np.float32)
+    path = str(tmp_path / f"laund_{codec}.th5")
+    chunks = _write_chunked(path, data, 8, codec)
+    _flip_bytes(path, chunks[5][0], 4)
+    with TH5File.open(path) as f:
+        # scatter gather decodes + caches every chunk (for `none` too — the
+        # row-gather path stages decodes through the cache, unlike the
+        # contiguous fast path)
+        got = f.read_row_indices("/d", range(64))
+        assert f.chunk_cache.stats()["entries"] == 8
+        assert not np.array_equal(got[40:48], data[40:48])  # corruption landed
+        with pytest.raises(CorruptFileError, match="chunk 5 of /d"):
+            f.read("/d", verify=True)
+        # the poisoned entry still serves unverified reads (same bytes) —
+        # corruption detection is verify's job, laundering is the bug
+        np.testing.assert_array_equal(f.read_row_indices("/d", range(64)), got)
+
+
+def test_verified_read_repopulates_cache_with_verified_decode(tmp_path):
+    """verify=True bypasses cache *hits* but its (checked) decode does
+    refresh the cache — later unverified reads serve verified bytes."""
+    data = np.arange(256, dtype=np.float32).reshape(64, 4)
+    path = str(tmp_path / "fresh.th5")
+    _write_chunked(path, data, 16, "shuffle+zlib")
+    with TH5File.open(path) as f:
+        f.read("/d", verify=False)
+        s0 = f.chunk_cache.stats()
+        f.read("/d", verify=True)  # no cache gets, 4 fresh decodes + puts
+        s1 = f.chunk_cache.stats()
+        assert s1["misses"] == s0["misses"]  # verified path never polled the cache
+        np.testing.assert_array_equal(f.read("/d"), data)
+
+
+# -- short kernel reads --------------------------------------------------------
+
+
+def test_short_preadv_resumes_through_decode_pipeline(tmp_path, monkeypatch):
+    """os.preadv returning short counts (network FS, signals) must be
+    resumed transparently by every fetch path — pipelined decode fetches,
+    the none-codec direct scatter, and single-chunk inline decodes."""
+    rng = np.random.default_rng(3)
+    data = (rng.integers(0, 64, (64, 8)) / 64).astype(np.float32)
+    raw = rng.integers(0, 255, (64, 8), dtype=np.uint8)
+    path = str(tmp_path / "short.th5")
+    with TH5File.create(path) as f:
+        mz = f.create_chunked_dataset("/z", data.shape, "<f4", 8, "shuffle+zlib")
+        f.write_chunked(mz, data)
+        mn = f.create_chunked_dataset("/n", raw.shape, "<u1", 8, "none")
+        f.write_chunked(mn, raw)
+        f.commit()
+
+    real = os.preadv
+
+    def short_preadv(fd_, bufs, off):
+        first = bufs[0]
+        if len(first) > 5:  # cap every syscall at 5 bytes
+            first = first[:5]
+        return real(fd_, [first], off)
+
+    with TH5File.open(path) as f:
+        monkeypatch.setattr(os, "preadv", short_preadv)
+        READ_COUNTER.reset()
+        np.testing.assert_array_equal(f.read("/z", verify=True), data)  # pipelined fetches
+        np.testing.assert_array_equal(f.read("/n"), raw)  # direct scatter
+        got = f.read_rows("/z", 4, 8)  # straddles chunks 0|1
+        np.testing.assert_array_equal(got, data[4:12])
+        syscalls, nbytes = READ_COUNTER.snapshot()
+        assert syscalls > nbytes / 5 - 1  # genuinely resumed 5 bytes at a time
+
+
+def test_decode_pipeline_standalone_on_missing_chunks(tmp_path):
+    """DecodePipeline surfaces incomplete writes (sparse chunk list) as
+    CorruptFileError naming the first missing chunk."""
+    path = str(tmp_path / "miss.th5")
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/d", (32, 4), "<f4", 8, "zlib")
+        payload, raw_n, rc, sc, cid = encode_chunk(get_codec("zlib"), np.zeros((8, 4), np.float32))
+        f.append_chunk(meta, payload, raw_nbytes=raw_n, raw_crc32=rc, stored_crc32=sc, codec_id=cid)
+        with DecodePipeline(f) as pipe:
+            with pytest.raises(CorruptFileError, match="chunk 1 of /d missing"):
+                pipe.decode_chunks("/d", meta, [0, 1, 2])
+            out = np.empty((8, 4), np.float32)
+            assert pipe.gather_rows("/d", meta, 0, 8, out) == out.nbytes
+            np.testing.assert_array_equal(out, np.zeros((8, 4), np.float32))
