@@ -315,9 +315,12 @@ def read_bench(
         for _ in iter_lod_windows(f, "/fields/shuf", windows):
             pass
         cold_wall = time.perf_counter() - t0
-        cold = f.read_stats  # cumulative == the cold replay only
+        cold = f.read_stats  # cumulative == the cold replay only (snapshot
+        # the counters NOW: the warm replay below merges into the object)
         cold_overlap = cold.overlap_ratio if cold is not None else 0.0
         decoded_cold = cold.n_chunks if cold is not None else 0
+        cold_syscalls = cold.n_syscalls if cold is not None else 0
+        cold_stored = cold.stored_bytes if cold is not None else 0
 
         t0 = time.perf_counter()
         for _ in iter_lod_windows(f, "/fields/shuf", windows):
@@ -332,6 +335,21 @@ def read_bench(
         f.read_rows_into("/fields/raw", 0, rows, out)
         _, bytes_copied = COPY_COUNTER.snapshot()
         assert bytes_copied == 0, "none-codec read path copied payload bytes"
+
+    # adjacent-chunk fetch batching (ROADMAP item): the same cold replay
+    # with per-chunk fetches — batching must cut read syscalls per stored
+    # MB (chunks from one pipeline are disk-contiguous, so a whole
+    # in-flight window arrives per preadv)
+    with TH5File.open(path) as f:
+        f.set_decode_config(
+            AggregationConfig(n_aggregators=n_aggregators), batch_fetch=False
+        )
+        f.chunk_cache.capacity_bytes = 2 * field.nbytes
+        for _ in iter_lod_windows(f, "/fields/shuf", windows):
+            pass
+        unb = f.read_stats
+    batched_rate = cold_syscalls / (cold_stored / 1e6) if cold_stored else 0.0
+    unbatched_rate = unb.n_syscalls / (unb.stored_bytes / 1e6) if unb and unb.stored_bytes else 0.0
     return {
         "rows": rows,
         "chunk_rows": chunk_rows,
@@ -345,6 +363,9 @@ def read_bench(
         "shuffle_zlib_ratio": round(fs.ratio, 3),
         "shuffle_uplift": round(fs.ratio / fz.ratio, 3) if fz.ratio else 0.0,
         "none_read_copies_per_byte": 0.0,
+        "fetch_syscalls_per_mb": round(batched_rate, 3),
+        "fetch_syscalls_per_mb_unbatched": round(unbatched_rate, 3),
+        "fetch_batch_drop": round(unbatched_rate / batched_rate, 2) if batched_rate else 0.0,
     }
 
 
@@ -486,10 +507,15 @@ if __name__ == "__main__":
         print(f"read,cold={rd['cold_MBps']:.0f}MB/s,warm={rd['warm_MBps']:.0f}MB/s,"
               f"decode_overlap={rd['overlap_ratio']:.2f},"
               f"shuffle={rd['shuffle_zlib_ratio']:.2f}:1_vs_zlib={rd['zlib_ratio']:.2f}:1,"
-              f"none_copies_per_byte={rd['none_read_copies_per_byte']}")
+              f"none_copies_per_byte={rd['none_read_copies_per_byte']},"
+              f"fetch_syscalls_per_mb={rd['fetch_syscalls_per_mb']:.2f}"
+              f"_vs_unbatched={rd['fetch_syscalls_per_mb_unbatched']:.2f}")
         # deterministic invariants (timing-free) — safe to enforce on CI VMs
         assert rd["shuffle_uplift"] >= 1.0, "shuffle filter lost to plain zlib"
         assert rd["none_read_copies_per_byte"] == 0.0
+        assert rd["fetch_syscalls_per_mb"] < rd["fetch_syscalls_per_mb_unbatched"], (
+            "adjacent-chunk preadv batching did not reduce fetch syscalls"
+        )
     elif a.smoke:
         run(sizes_mb=(2,), ranks=(4, 32), repeats=1, json_path=a.json or None,
             codecs=codecs, compression_rows=2048)

@@ -10,6 +10,7 @@ per-figure detail lines.  Figure map:
     multigrid_bench  → Fig. 2b/2c (solver scaling / contraction)
     trs_savings      → §4 TRS cost-saving scenario
     lm_checkpoint    → framework integration (train-state snapshots)
+    service_load     → §2.3/§4 served: N-client read/steering broker load
 """
 
 from __future__ import annotations
@@ -18,7 +19,15 @@ import time
 
 
 def main() -> None:
-    from . import ghost_exchange, io_ablation, io_bandwidth, lm_checkpoint, multigrid_bench, trs_savings
+    from . import (
+        ghost_exchange,
+        io_ablation,
+        io_bandwidth,
+        lm_checkpoint,
+        multigrid_bench,
+        service_load,
+        trs_savings,
+    )
 
     print("name,us_per_call,derived")
     suites = [
@@ -31,6 +40,11 @@ def main() -> None:
         ("multigrid_fig2bc", multigrid_bench.run, lambda rows: f"contraction={rows[-1]['contraction_per_cycle']:.3f}"),
         ("trs_savings_s4", trs_savings.run, lambda rows: f"production_ratio={rows[-1]['prod_ratio']:.3f}"),
         ("lm_checkpoint", lm_checkpoint.run, lambda rows: f"write={max(r['write_MBps'] for r in rows):.0f}MB/s"),
+        # multi-client broker: aggregate served MB/s scaling with client count
+        ("service_load_serve", service_load.run,
+         lambda res: f"agg8={res['traffic'][-1]['agg_MBps']:.0f}MB/s,"
+                     f"speedup_vs_1client={res['speedup_max_clients_vs_1']:.2f}x,"
+                     f"p99={res['traffic'][-1]['p99_ms']:.0f}ms"),
     ]
     for name, fn, derive in suites:
         t0 = time.perf_counter()

@@ -120,6 +120,44 @@ class CodecPolicy:
         return max(1, min(n_rows, self.target_chunk_bytes // max(row_bytes, 1)))
 
 
+def _default_policy(cls) -> "CodecPolicy":
+    """``CodecPolicy.default()`` — the measured per-dtype / per-leaf-name
+    default table (ROADMAP open item, first slice).  Attach it once to the
+    :class:`CheckpointManager` instead of passing a policy at every ``save``
+    call site.
+
+    The rules encode the numbers committed in ``BENCH_io.json`` /
+    ``benchmarks/lm_checkpoint.py``:
+
+    * field snapshots (a ``fields`` component anywhere in the leaf path —
+      both the tree_ser dotted form ``fields.u`` and the dataset-path form
+      ``fields/u``) tolerate the stored-scale-bounded loss →
+      ``int8-blockq`` (3.94:1 at ~585 MB/s effective);
+      :meth:`CodecPolicy.resolve` already demotes non-float fields to the
+      lossless fallback;
+    * everything else (params, optimizer moments, counters) must stay
+      bit-exact → ``zlib``, which ``resolve``'s dtype heuristic upgrades to
+      ``shuffle+zlib`` for f32/f64 leaves (1.88:1 → ~2.45:1) and keeps
+      plain for integer / sub-4-byte dtypes;
+    * leaves under ``min_chunk_bytes`` stay on the contiguous zero-copy
+      path (chunk framing would cost more than it saves).
+    """
+    return cls(
+        default="zlib",
+        rules=(
+            ("fields[./]*", "int8-blockq"),
+            ("*[./]fields[./]*", "int8-blockq"),
+        ),
+    )
+
+
+# attached after the class body: `default` is already the name of the policy's
+# fallback-codec *field*, so a method of the same name inside the body would
+# shadow the dataclass field default.  Instance lookup (`self.default`) still
+# resolves to the field because __init__ writes an instance attribute.
+CodecPolicy.default = classmethod(_default_policy)  # type: ignore[assignment]
+
+
 @dataclass
 class SaveResult:
     step: int
@@ -150,6 +188,7 @@ class CheckpointManager:
         common: Mapping[str, Any] | None = None,
         block_size: int = 4096,
         lineage: Mapping[str, Any] | None = None,
+        codec_policy: CodecPolicy | None = None,
     ):
         exists = os.path.exists(path)
         if create is None:
@@ -162,6 +201,11 @@ class CheckpointManager:
         else:
             self.file = TH5File.open(path, mode="r+")
         self.path = path
+        # manager-level filter policy: `save` falls back to this when no
+        # per-call policy is given, so call sites set it ONCE (e.g.
+        # `CodecPolicy.default()`) instead of threading it everywhere;
+        # None keeps every leaf on the contiguous zero-copy path
+        self.codec_policy = codec_policy
         self._io_lock = threading.Lock()  # serialises *sessions*, not slabs
         # static-topology fast path: row-split plans depend only on
         # (n_rows, row_bytes, n_ranks), so steady-state steps skip the
@@ -258,8 +302,12 @@ class CheckpointManager:
         ``codec_policy`` routes selected leaves through the chunked filter
         pipeline instead (compressed, variable-length chunks written by the
         aggregators overlapped with encoding); leaves resolved to ``none``
-        keep the zero-copy contiguous path.
+        keep the zero-copy contiguous path.  ``None`` falls back to the
+        manager's own ``codec_policy`` (e.g. ``CodecPolicy.default()``
+        passed once at construction).
         """
+        if codec_policy is None:
+            codec_policy = self.codec_policy
         t0 = time.perf_counter()
         skeleton, leaves = tree_ser.flatten_state(state)
         group = _step_group(step)

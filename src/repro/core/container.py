@@ -382,6 +382,15 @@ class ChunkCache:
         self.misses = 0
         self.evictions = 0
 
+    def contains(self, key: tuple[str, int]) -> bool:
+        """Presence probe that mutates NOTHING — no LRU promotion, no
+        hit/miss counters.  The service layer uses it to attribute shared-
+        cache hits to individual clients without perturbing the cache; the
+        answer is advisory under concurrency (an entry may be evicted
+        between the probe and the read)."""
+        with self._lock:
+            return key in self._entries
+
     def get(self, key: tuple[str, int]) -> np.ndarray | None:
         with self._lock:
             arr = self._entries.get(key)
@@ -856,15 +865,20 @@ class TH5File:
                     pipe = self._decode_pipe = DecodePipeline(self)
         return pipe
 
-    def set_decode_config(self, config) -> None:
+    def set_decode_config(self, config, *, batch_fetch: bool = True) -> None:
         """Swap the decode pipeline's :class:`~repro.core.aggregation.
         AggregationConfig` (pool width = ``n_aggregators``).  Closes any
         existing pool, so the caller must be quiescent: a chunked read in
-        flight on another thread would lose its pool mid-gather."""
+        flight on another thread would lose its pool mid-gather.
+        ``batch_fetch=False`` disables the adjacent-chunk preadv batching
+        (the benchmarks' unbatched baseline)."""
         from .aggregation import DecodePipeline  # deferred: circular import
 
         with self._read_stats_lock:
-            old, self._decode_pipe = self._decode_pipe, DecodePipeline(self, config)
+            old, self._decode_pipe = (
+                self._decode_pipe,
+                DecodePipeline(self, config, batch_fetch=batch_fetch),
+            )
         if old is not None:
             old.close()
 
@@ -920,10 +934,22 @@ class TH5File:
         return arr.reshape(meta.shape)
 
     def read_rows_into(
-        self, name_or_meta: str | DatasetMeta, row_start: int, n_rows: int, out: np.ndarray
+        self,
+        name_or_meta: str | DatasetMeta,
+        row_start: int,
+        n_rows: int,
+        out: np.ndarray,
+        verify: bool = False,
     ) -> int:
         """Vectored read of contiguous rows into a preallocated buffer
-        (``os.preadv`` — zero intermediate copies).  Returns bytes read."""
+        (``os.preadv`` — zero intermediate copies).  Returns bytes read.
+
+        ``verify=True`` checks integrity like :meth:`read` does: per-chunk
+        CRCs on chunked datasets (cache hits bypassed — verified reads
+        never launder unverified decodes).  A contiguous dataset carries
+        only a whole-payload CRC, so a *partial* verified read re-reads
+        the full payload to check it — correct but O(dataset); chunked
+        layouts are the scalable verified-read path."""
         meta = name_or_meta if isinstance(name_or_meta, DatasetMeta) else self.meta(name_or_meta)
         nrows_total = meta.shape[0] if meta.shape else 1
         if row_start < 0 or row_start + n_rows > nrows_total:
@@ -935,22 +961,38 @@ class TH5File:
             raise TH5Error("out buffer must be C-contiguous and writable")
         if meta.is_chunked:
             name = name_or_meta if isinstance(name_or_meta, str) else self._name_of(meta)
-            return self._gather_rows_chunked(name, meta, row_start, n_rows, out)
+            return self._gather_rows_chunked(name, meta, row_start, n_rows, out, verify=verify)
+        if verify and meta.crc32 is not None:
+            name = name_or_meta if isinstance(name_or_meta, str) else self._name_of(meta)
+            raw = os.pread(self._fd, meta.nbytes, meta.offset)
+            READ_COUNTER.add(len(raw), 1)
+            if len(raw) != meta.nbytes:
+                raise CorruptFileError(f"short read on {name}")
+            if (zlib.crc32(raw) & 0xFFFFFFFF) != meta.crc32:
+                raise CorruptFileError(f"payload CRC mismatch on {name}")
+            off = row_start * meta.row_bytes
+            _byte_view(out)[:] = memoryview(raw)[off : off + want]
+            return want
         n, calls = preadv_full(
             self._fd, [_byte_view(out)], meta.offset + row_start * meta.row_bytes
         )
         READ_COUNTER.add(n, calls)
         return n
 
-    def read_rows(self, name: str, row_start: int, n_rows: int) -> np.ndarray:
+    def read_rows(self, name: str, row_start: int, n_rows: int, verify: bool = False) -> np.ndarray:
         """Partial read of contiguous rows — one hyperslab.  On a chunked
-        dataset only the intersecting chunks are read and decoded."""
+        dataset only the intersecting chunks are read and decoded.  For
+        ``verify`` semantics (and its cost on contiguous datasets) see
+        :meth:`read_rows_into`."""
         meta = self.meta(name)
         dt = meta.np_dtype
         if self._is_native(dt) or meta.is_chunked:
             out = np.empty((n_rows,) + tuple(meta.shape[1:]), dtype=dt.newbyteorder("="))
-            self.read_rows_into(meta, row_start, n_rows, out)
+            self.read_rows_into(meta, row_start, n_rows, out, verify=verify)
             return out
+        if verify and meta.crc32 is not None:
+            # foreign-endian contiguous: whole-payload CRC, then slice
+            return np.ascontiguousarray(self.read(name, verify=True)[row_start : row_start + n_rows])
         nrows_total = meta.shape[0] if meta.shape else 1
         if row_start < 0 or row_start + n_rows > nrows_total:
             raise TH5Error("row range out of bounds")
@@ -983,6 +1025,25 @@ class TH5File:
             cr = meta.chunk_rows or 1
             cis = idx // cr
             decoded = self._decode_pipeline().decode_chunks(name, meta, np.unique(cis))
+            if len(idx) > 1 and bool(np.all(idx[1:] > idx[:-1])):
+                # strictly ascending selection (every window/LOD replay):
+                # each chunk's slots form a CONTIGUOUS output span, and a
+                # stride-1 run inside a chunk becomes one big slice copy
+                # (~memcpy speed) instead of a fancy-indexed scatter — the
+                # hot multi-client serve path (duplicate rows fall through
+                # to the general scatter below)
+                pos = 0
+                for ci in np.unique(cis):
+                    dec = decoded[int(ci)]
+                    end = int(np.searchsorted(cis, ci, side="right"))
+                    rel = idx[pos:end] - int(ci) * cr
+                    k = end - pos
+                    if k and int(rel[-1]) - int(rel[0]) + 1 == k:
+                        out[pos:end] = dec[int(rel[0]) : int(rel[0]) + k]
+                    else:
+                        out[pos:end] = dec[rel]
+                    pos = end
+                return out
             for ci, dec in decoded.items():
                 sel = cis == ci
                 out[sel] = dec[idx[sel] - ci * cr]

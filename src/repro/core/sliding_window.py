@@ -60,6 +60,21 @@ def lod_stride_for_budget(n_rows_in_window: int, max_rows: int) -> int:
     return -(-n_rows_in_window // max_rows)  # ceil division
 
 
+def plan_window_rows(
+    lo: int, hi: int, n_rows: int, max_rows: int | None = None
+) -> tuple[int, ...]:
+    """Row selection for one LOD window: clamp ``[lo, hi)`` to the dataset,
+    pick the stride from the bandwidth budget (the paper's 'every second,
+    third, fourth ... data point will be dismissed').  Shared by
+    :func:`iter_lod_windows` and the service layer's per-client
+    :class:`~repro.service.sessions.LodWindowSession`."""
+    lo, hi = max(0, int(lo)), min(int(n_rows), int(hi))
+    if hi <= lo:
+        return ()
+    stride = 1 if max_rows is None else lod_stride_for_budget(hi - lo, max_rows)
+    return tuple(range(lo, hi, max(1, stride)))
+
+
 @dataclass
 class TreeWindow:
     """Space-tree sliding window over snapshot topology datasets.
@@ -195,11 +210,7 @@ def iter_lod_windows(
     rate)."""
     meta = f.meta(name)
     n_rows = meta.shape[0] if meta.shape else 1
-
-    def rows_for(window: tuple[int, int]) -> list[int]:
-        lo, hi = max(0, window[0]), min(n_rows, window[1])
-        stride = 1 if max_rows is None else lod_stride_for_budget(hi - lo, max_rows)
-        return list(range(lo, hi, max(1, stride)))
-
     with WindowPrefetcher(f, name) as pf:
-        yield from pf.iter_windows(rows_for(w) for w in row_windows)
+        yield from pf.iter_windows(
+            plan_window_rows(w[0], w[1], n_rows, max_rows) for w in row_windows
+        )

@@ -52,6 +52,11 @@ class BranchManager:
             )
         return list(reversed(chain))
 
+    def lineage_summary(self) -> list[tuple[str, int | None]]:
+        """Root-first ``(path, branch_step)`` pairs — the JSON-able shape
+        the service layer's steering responses carry."""
+        return [(e.path, e.branch_step) for e in self.lineage()]
+
     def effective_config(self) -> dict[str, Any]:
         """Root /common attrs with every branch overlay applied in order —
         the 'altered boundary conditions' of the current branch."""

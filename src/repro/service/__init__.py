@@ -1,0 +1,62 @@
+"""TH5 data service — multi-client read/steering broker over a run file.
+
+The subsystem that turns the PR 1–3 single-caller pipelines into something
+N concurrent explorers can hit at once (the paper's post-write promise:
+"very fast interactive visualisation" plus "additional steering
+functionality", served HSDS-style from a broker that owns the file):
+
+=====================  ========================================================
+:class:`DataService`   the broker: one shared TH5File + chunk cache + decode
+                       pool per file, bounded admission queue, fair
+                       round-robin scheduling, worker pool
+requests               :class:`HyperslabQuery`, :class:`WindowQuery`,
+                       :class:`CatalogQuery`, :class:`PingQuery`,
+                       :class:`SteeringRequest` → :class:`ServiceResponse`
+:class:`LodWindowSession`  per-client stateful sliding-window playback over
+                       the shared cache (double-buffered through the queue)
+:class:`SnapshotCatalog`   steps / leaves / codec stats without decoding
+:class:`SteeringEndpoint`  serialized branch / rollback over the lineage
+:class:`ServiceStats`  queue depth, admission rejections, per-client cache
+                       hit rates, p50/p99 latency
+=====================  ========================================================
+
+Ownership / backpressure model and the full request reference:
+``docs/SERVICE.md``.  Load benchmark: ``benchmarks/service_load.py``
+(the ``serve`` section of ``BENCH_io.json``).
+"""
+
+from .broker import AdmissionError, DataService, ServiceConfig
+from .catalog import DatasetInfo, SnapshotCatalog, build_catalog
+from .requests import (
+    CatalogQuery,
+    HyperslabQuery,
+    PingQuery,
+    ServiceResponse,
+    SteeringRequest,
+    WindowQuery,
+)
+from .sessions import LodWindowSession, plan_window_rows
+from .stats import ClientStats, LatencyRecorder, ServiceStats
+from .steer import SteeringEndpoint, SteeringResult
+
+__all__ = [
+    "AdmissionError",
+    "DataService",
+    "ServiceConfig",
+    "DatasetInfo",
+    "SnapshotCatalog",
+    "build_catalog",
+    "CatalogQuery",
+    "HyperslabQuery",
+    "PingQuery",
+    "ServiceResponse",
+    "SteeringRequest",
+    "WindowQuery",
+    "LodWindowSession",
+    "plan_window_rows",
+    "ClientStats",
+    "LatencyRecorder",
+    "ServiceStats",
+    "SteeringEndpoint",
+    "SteeringResult",
+]

@@ -1,0 +1,435 @@
+"""DataService — the multi-client broker over one TH5 run file.
+
+The paper's file layout exists for what happens *after* the write: many
+concurrent explorers issuing random LOD window reads and branch/rollback
+commands against one run (HSDS plays this role for HDF5 proper).  PR 1–3
+built fast single-caller pipelines; this broker is the layer that lets N
+clients hit them at once without N× the cost:
+
+* **ownership** — per file (realpath-keyed, process-wide registry): ONE
+  read-only ``TH5File`` handle, ONE decoded-chunk ``ChunkCache`` and ONE
+  ``DecodePipeline`` pool, shared by every client and every DataService
+  instance.  N viewers replaying the same window cost ~1 decode — the
+  cross-client cache sharing measured in ``benchmarks/service_load.py``.
+* **admission control** — a bounded queue (``ServiceConfig.max_queue``).
+  A full queue REJECTS (:class:`AdmissionError`) instead of piling up
+  threads/latency: backpressure is explicit and accounted
+  (``ServiceStats.rejected``), clients retry or degrade (sessions drop
+  their prefetch, see ``sessions.py``).
+* **fair scheduling** — admitted requests queue per client; workers pop
+  round-robin across clients, so one client streaming full-file reads
+  cannot starve another's single catalog query behind its backlog.
+* **serialized steering** — every :class:`~repro.service.requests.
+  SteeringRequest` funnels through the file's single
+  :class:`~repro.service.steer.SteeringEndpoint` mutex; reads keep flowing
+  meanwhile.
+
+Payload semantics are untouched: responses are bit-identical to direct
+``TH5File`` calls (asserted in ``tests/test_service.py``); single-caller
+code paths don't know the service exists.  See ``docs/SERVICE.md``.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.container import TH5Error, TH5File
+from repro.core.aggregation import AggregationConfig
+
+from .catalog import build_catalog
+from .requests import (
+    CatalogQuery,
+    HyperslabQuery,
+    PingQuery,
+    ServiceResponse,
+    SteeringRequest,
+    WindowQuery,
+    response_nbytes,
+)
+from .sessions import LodWindowSession
+from .stats import ClientStats, LatencyRecorder, ServiceStats
+from .steer import SteeringEndpoint
+
+
+class AdmissionError(TH5Error):
+    """The bounded request queue is full — backpressure, not failure.
+
+    Carries ``queue_depth`` so clients can implement informed retry/degrade
+    policies (the LOD session drops its prefetch; the load generator counts
+    and retries)."""
+
+    def __init__(self, msg: str, queue_depth: int):
+        super().__init__(msg)
+        self.queue_depth = queue_depth
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """``max_queue``: admission bound on queued (admitted, unstarted)
+    requests — the backpressure knob.  ``n_workers``: service worker
+    threads; defaults the decode pool width too, so aggregate read
+    throughput scales with client count up to this.  ``cache_bytes``:
+    shared decoded-chunk cache capacity for the file.  ``batch_fetch``:
+    adjacent-chunk preadv batching in the decode pipeline."""
+
+    max_queue: int = 64
+    n_workers: int = 4
+    cache_bytes: int = 256 << 20
+    batch_fetch: bool = True
+
+    def __post_init__(self) -> None:
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if self.n_workers < 1:
+            raise ValueError("need >= 1 worker")
+
+
+# -- process-wide shared-file registry -----------------------------------------
+#
+# One TH5File (⇒ one ChunkCache + one DecodePipeline pool) per realpath,
+# refcounted across DataService instances: the explicit ownership model the
+# single-caller layers never needed.  First acquirer's config wins for the
+# cache capacity / decode pool; later services share it untouched.
+
+
+class _SharedFile:
+    def __init__(self, file: TH5File):
+        self.file = file
+        self.refs = 1
+        self.steering: SteeringEndpoint | None = None
+
+
+_REGISTRY: dict[str, _SharedFile] = {}
+_REG_LOCK = threading.Lock()
+
+
+def _acquire_shared(path: str, config: ServiceConfig) -> tuple[str, _SharedFile]:
+    key = os.path.realpath(path)
+    with _REG_LOCK:
+        shared = _REGISTRY.get(key)
+        if shared is not None:
+            shared.refs += 1
+            return key, shared
+        f = TH5File.open(path, mode="r")
+        f.chunk_cache.capacity_bytes = int(config.cache_bytes)
+        f.set_decode_config(
+            AggregationConfig(n_aggregators=config.n_workers),
+            batch_fetch=config.batch_fetch,
+        )
+        shared = _SharedFile(f)
+        _REGISTRY[key] = shared
+        return key, shared
+
+
+def _release_shared(key: str) -> None:
+    with _REG_LOCK:
+        shared = _REGISTRY.get(key)
+        if shared is None:
+            return
+        shared.refs -= 1
+        if shared.refs <= 0:
+            del _REGISTRY[key]
+            shared.file.close()
+
+
+class _Job:
+    __slots__ = ("client", "request", "future", "t_submit", "t_start")
+
+    def __init__(self, client: str, request: Any):
+        self.client = client
+        self.request = request
+        self.future: "Future[ServiceResponse]" = Future()
+        self.t_submit = time.perf_counter()
+        self.t_start = 0.0
+
+
+class DataService:
+    """The broker (see module docstring).  Thread-safe; use as a context
+    manager or call :meth:`close`."""
+
+    def __init__(self, path: str, config: ServiceConfig | None = None):
+        self.config = config or ServiceConfig()
+        self.path = str(path)
+        self._key, self._shared = _acquire_shared(self.path, self.config)
+        self._cv = threading.Condition()
+        self._queues: dict[str, deque[_Job]] = {}
+        self._rr: deque[str] = deque()  # clients with >= 1 queued job, RR order
+        self._queued = 0
+        self._inflight = 0
+        self._shutdown = False
+        # accounting (all mutated under _cv's lock)
+        self._max_queue_depth = 0
+        self._admitted = 0
+        self._rejected = 0
+        self._completed = 0
+        self._failed = 0
+        self._bytes_served = 0
+        self._by_type: dict[str, int] = {}
+        self._latency = LatencyRecorder()
+        self._client_latency: dict[str, LatencyRecorder] = {}
+        self._clients: dict[str, ClientStats] = {}
+        self._workers = [
+            threading.Thread(target=self._worker, name=f"th5-service-{i}", daemon=True)
+            for i in range(self.config.n_workers)
+        ]
+        for w in self._workers:
+            w.start()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Drain admitted requests, stop the workers, release the shared
+        file handle (closed when the last service for this path closes)."""
+        with self._cv:
+            if self._shutdown:
+                return
+            self._shutdown = True
+            self._cv.notify_all()
+        for w in self._workers:
+            w.join()
+        _release_shared(self._key)
+
+    def __enter__(self) -> "DataService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def file(self) -> TH5File:
+        """The shared read-only handle (diagnostics / tests; treat as
+        read-only — its cache and decode pool are service-owned)."""
+        return self._shared.file
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, client: str, request: Any) -> "Future[ServiceResponse]":
+        """Admit one request for ``client``.  Raises :class:`AdmissionError`
+        when the bounded queue is full (backpressure) — nothing is queued in
+        that case."""
+        job = _Job(str(client), request)
+        with self._cv:
+            if self._shutdown:
+                raise TH5Error("service closed")
+            if self._queued >= self.config.max_queue:
+                self._rejected += 1
+                self._client(job.client).rejected += 1
+                raise AdmissionError(
+                    f"service queue full ({self._queued}/{self.config.max_queue})",
+                    queue_depth=self._queued,
+                )
+            self._admitted += 1
+            q = self._queues.setdefault(job.client, deque())
+            if not q:
+                self._rr.append(job.client)
+            q.append(job)
+            self._queued += 1
+            self._max_queue_depth = max(self._max_queue_depth, self._queued)
+            self._cv.notify()
+        return job.future
+
+    def request(self, client: str, request: Any) -> ServiceResponse:
+        """Synchronous :meth:`submit` (admission errors still raise)."""
+        return self.submit(client, request).result()
+
+    def open_window_session(
+        self,
+        client: str,
+        dataset: str,
+        windows: Iterable[Sequence[int]] | None = None,
+        *,
+        max_rows: int | None = None,
+    ) -> LodWindowSession:
+        """Stateful per-client sliding-window playback over the shared
+        cache (see :class:`~repro.service.sessions.LodWindowSession`)."""
+        return LodWindowSession(self, client, dataset, windows, max_rows=max_rows)
+
+    @property
+    def steering(self) -> SteeringEndpoint:
+        """The file's serialized steering endpoint (created on first use —
+        steering needs the file to be writable/branchable on disk)."""
+        with _REG_LOCK:
+            if self._shared.steering is None:
+                self._shared.steering = SteeringEndpoint(self.path)
+            return self._shared.steering
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _pop_job_locked(self) -> _Job | None:
+        """Round-robin across clients with queued work (fairness: one
+        client's backlog never blocks another's next request)."""
+        if not self._rr:
+            return None
+        cid = self._rr.popleft()
+        q = self._queues[cid]
+        job = q.popleft()
+        if q:
+            self._rr.append(cid)  # back of the rotation only if more queued
+        self._queued -= 1
+        return job
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._rr and not self._shutdown:
+                    self._cv.wait()
+                job = self._pop_job_locked()
+                if job is None:  # shutdown and fully drained
+                    return
+                self._inflight += 1
+            job.t_start = time.perf_counter()
+            try:
+                resp = self._execute(job)
+            except BaseException as e:
+                with self._cv:
+                    self._inflight -= 1
+                    self._failed += 1
+                    self._account_locked(job, None)
+                job.future.set_exception(e)
+            else:
+                with self._cv:
+                    self._inflight -= 1
+                    self._completed += 1
+                    self._account_locked(job, resp)
+                job.future.set_result(resp)
+
+    def _client(self, cid: str) -> ClientStats:
+        cs = self._clients.get(cid)
+        if cs is None:
+            cs = self._clients[cid] = ClientStats()
+            self._client_latency[cid] = LatencyRecorder()
+        return cs
+
+    def _account_locked(self, job: _Job, resp: ServiceResponse | None) -> None:
+        t_done = time.perf_counter()
+        kind = type(job.request).__name__
+        self._by_type[kind] = self._by_type.get(kind, 0) + 1
+        latency = t_done - job.t_submit
+        self._latency.add(latency)
+        cs = self._client(job.client)
+        cs.requests += 1
+        self._client_latency[job.client].add(latency)
+        if resp is not None:
+            resp.queued_s = job.t_start - job.t_submit
+            resp.service_s = t_done - job.t_start
+            resp.nbytes = response_nbytes(resp.value)
+            self._bytes_served += resp.nbytes
+            cs.bytes_served += resp.nbytes
+            cs.chunk_hits += resp.chunk_hits
+            cs.chunk_misses += resp.chunk_misses
+
+    # -- execution -----------------------------------------------------------
+
+    def _chunk_probe(
+        self, dataset: str, rows: Iterable[int] | None, row_range: tuple[int, int] | None
+    ) -> tuple[int, int]:
+        """Attribute shared-cache state to THIS request: probe (without
+        touching LRU order or hit counters) which intersecting chunks are
+        already decoded.  Advisory under concurrent eviction."""
+        f = self._shared.file
+        meta = f.meta(dataset)
+        if not meta.is_chunked:
+            return 0, 0
+        cr = meta.chunk_rows or 1
+        if row_range is not None:  # contiguous: every chunk the span crosses
+            lo, hi = row_range
+            cis: Iterable[int] = range(lo // cr, max(hi - 1, lo) // cr + 1)
+        else:
+            cis = sorted({int(r) // cr for r in rows or ()})
+        hits = total = 0
+        for ci in cis:
+            total += 1
+            hits += f.chunk_cache.contains((dataset, ci))
+        return hits, total - hits
+
+    def _execute(self, job: _Job) -> ServiceResponse:
+        req = job.request
+        f = self._shared.file
+        hits = misses = 0
+        if isinstance(req, HyperslabQuery):
+            if req.n_rows:
+                hits, misses = self._chunk_probe(
+                    req.dataset, None, (req.row_start, req.row_start + req.n_rows)
+                )
+            value = self._read_hyperslab(f, req)
+        elif isinstance(req, WindowQuery):
+            if req.rows:
+                hits, misses = self._chunk_probe(req.dataset, req.rows, None)
+            value = f.read_row_indices(req.dataset, list(req.rows))
+        elif isinstance(req, CatalogQuery):
+            value = build_catalog(f, req.prefix)
+        elif isinstance(req, PingQuery):
+            if req.gate is not None:
+                req.gate.wait()
+            if req.delay_s:
+                time.sleep(req.delay_s)
+            value = None
+        elif isinstance(req, SteeringRequest):
+            value = self.steering.execute(req)
+        else:
+            raise TypeError(f"unknown request type {type(req).__name__}")
+        return ServiceResponse(
+            value=value, client=job.client, request=req, chunk_hits=hits, chunk_misses=misses
+        )
+
+    @staticmethod
+    def _read_hyperslab(f: TH5File, q: HyperslabQuery) -> np.ndarray:
+        meta = f.meta(q.dataset)
+        n_total = meta.n_rows
+        if q.row_start < 0 or q.row_start + q.n_rows > n_total:
+            raise TH5Error(
+                f"hyperslab [{q.row_start}, {q.row_start + q.n_rows}) outside {q.dataset}"
+                f" of {n_total} rows"
+            )
+        # verify rides the public read path: per-chunk CRCs on chunked
+        # datasets, whole-payload CRC (full re-read on partial ranges) on
+        # contiguous ones — never silently downgraded
+        arr = f.read_rows(q.dataset, q.row_start, q.n_rows, verify=q.verify)
+        if q.cols is not None:
+            if arr.ndim < 2:
+                raise TH5Error("column slice on a 1-D dataset")
+            arr = np.ascontiguousarray(arr[:, q.cols[0] : q.cols[1]])
+        return arr
+
+    # -- introspection -------------------------------------------------------
+
+    def stats(self) -> ServiceStats:
+        """Immutable accounting snapshot (see :class:`ServiceStats`)."""
+        cache = self._shared.file.chunk_cache.stats()
+        with self._cv:
+            clients = {}
+            for cid, cs in self._clients.items():
+                rec = self._client_latency[cid]
+                clients[cid] = ClientStats(
+                    requests=cs.requests,
+                    bytes_served=cs.bytes_served,
+                    rejected=cs.rejected,
+                    chunk_hits=cs.chunk_hits,
+                    chunk_misses=cs.chunk_misses,
+                    p50_ms=rec.percentile(50) * 1e3,
+                    p99_ms=rec.percentile(99) * 1e3,
+                )
+            return ServiceStats(
+                queue_depth=self._queued,
+                max_queue_depth=self._max_queue_depth,
+                inflight=self._inflight,
+                admitted=self._admitted,
+                rejected=self._rejected,
+                completed=self._completed,
+                failed=self._failed,
+                bytes_served=self._bytes_served,
+                requests_by_type=dict(self._by_type),
+                p50_ms=self._latency.percentile(50) * 1e3,
+                p99_ms=self._latency.percentile(99) * 1e3,
+                mean_ms=self._latency.mean() * 1e3,
+                cache=cache,
+                clients=clients,
+            )

@@ -1,0 +1,151 @@
+"""Typed request / response API of the TH5 data service.
+
+Every client interaction with a :class:`~repro.service.broker.DataService`
+is one of the request dataclasses below, submitted through the broker's
+admission-controlled queue and answered with a :class:`ServiceResponse`.
+The payload semantics are *exactly* the single-caller container reads —
+bit-identical results are asserted in ``tests/test_service.py`` — the
+service only adds admission, fairness, shared-cache reuse and accounting
+on top.
+
+Requests are frozen dataclasses so they can be logged, hashed into traffic
+scripts (``benchmarks/service_load.py``) and replayed; none of them carry
+open file handles — the broker owns the file.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HyperslabQuery:
+    """Contiguous row range × optional column slice of one dataset.
+
+    Planned against the chunk index: on a chunked dataset only the chunks
+    intersecting ``[row_start, row_start + n_rows)`` are fetched/decoded
+    (through the file's shared :class:`~repro.core.aggregation.
+    DecodePipeline` and :class:`~repro.core.container.ChunkCache`); the
+    column slice is applied to the decoded rows (chunks are row-major, so
+    columns never reduce the chunk set).  ``verify=True`` routes through
+    the CRC-checking read path (cache *hits* are bypassed — the
+    fault-injection contract).
+    """
+
+    dataset: str
+    row_start: int
+    n_rows: int
+    cols: tuple[int, int] | None = None  # (start, stop) column slice
+    verify: bool = False
+
+
+@dataclass(frozen=True)
+class WindowQuery:
+    """Arbitrary row-index gather — one LOD / sliding-window selection.
+
+    The request form of ``TH5File.read_row_indices``: contiguous runs
+    become single vectored ``preadv`` calls, chunked datasets decode each
+    intersecting chunk once through the shared cache.  This is what
+    :class:`~repro.service.sessions.LodWindowSession` submits per window.
+    """
+
+    dataset: str
+    rows: tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class CatalogQuery:
+    """Snapshot-catalog request: steps, leaves and codec stats of the run
+    file **without decoding any data** (pure index walk — asserted with a
+    READ_COUNTER delta of 0 in the tests).  Answered with a
+    :class:`~repro.service.catalog.SnapshotCatalog`."""
+
+    prefix: str = "/simulation"
+
+
+@dataclass(frozen=True)
+class PingQuery:
+    """Diagnostic no-op request: measures the queue + dispatch latency
+    floor (the load generator's zero-byte baseline).  ``delay_s`` holds a
+    worker busy; ``gate`` (an optional ``threading.Event``) blocks the
+    worker until set — the deterministic way the tests fill the queue to
+    exercise admission control."""
+
+    delay_s: float = 0.0
+    gate: Any = None  # threading.Event | None (Any: keep the dataclass frozen+hashable)
+
+
+@dataclass(frozen=True)
+class SteeringRequest:
+    """Branch / rollback command against the run's TRS lineage.
+
+    ``op`` is ``"branch"`` (new child file at ``at_step`` with ``overlay``
+    applied to /common — the paper's 'altered boundary conditions'),
+    ``"rollback"`` (a branch with an empty overlay: pure time reversal), or
+    ``"lineage"`` (read-only: the chain + available steps).  All steering
+    requests for one file execute **serialized** in the
+    :class:`~repro.service.steer.SteeringEndpoint` — concurrent steers can
+    never race the lineage records.
+    """
+
+    op: str  # "branch" | "rollback" | "lineage"
+    at_step: int | None = None
+    child_path: str | None = None
+    overlay: tuple[tuple[str, Any], ...] = ()  # frozen mapping
+
+    @staticmethod
+    def branch(at_step: int, child_path: str, overlay: Mapping[str, Any] | None = None) -> "SteeringRequest":
+        return SteeringRequest(
+            op="branch",
+            at_step=int(at_step),
+            child_path=str(child_path),
+            overlay=tuple(sorted((overlay or {}).items())),
+        )
+
+    @staticmethod
+    def rollback(at_step: int, child_path: str) -> "SteeringRequest":
+        return SteeringRequest(op="rollback", at_step=int(at_step), child_path=str(child_path))
+
+    @staticmethod
+    def lineage() -> "SteeringRequest":
+        return SteeringRequest(op="lineage")
+
+
+Request = HyperslabQuery | WindowQuery | CatalogQuery | PingQuery | SteeringRequest
+
+
+@dataclass
+class ServiceResponse:
+    """One answered request: the payload plus the accounting the service
+    layer adds on top of the raw read.
+
+    ``value`` is the np.ndarray / catalog / steering result (bit-identical
+    to the equivalent direct ``TH5File`` call).  ``queued_s`` is time spent
+    waiting for a worker (the backpressure signal), ``service_s`` the
+    execution time, ``chunk_hits`` / ``chunk_misses`` the shared-cache
+    attribution for THIS request (probed against the cache before the
+    gather — advisory under concurrent eviction).
+    """
+
+    value: Any
+    client: str
+    request: Any
+    queued_s: float = 0.0
+    service_s: float = 0.0
+    chunk_hits: int = 0
+    chunk_misses: int = 0
+    nbytes: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        return self.queued_s + self.service_s
+
+
+def response_nbytes(value: Any) -> int:
+    """Logical payload size of a response (throughput accounting)."""
+    if isinstance(value, np.ndarray):
+        return int(value.nbytes)
+    return 0

@@ -1,0 +1,149 @@
+"""Per-client LOD window sessions — stateful playback through the broker.
+
+The single-caller analogue is :class:`repro.core.sliding_window.
+WindowPrefetcher`: gather window n+1 in the background while the client
+consumes window n.  A session keeps that double-buffering, but routes every
+gather through the service queue as an ordinary
+:class:`~repro.service.requests.WindowQuery`, which changes three things:
+
+* the gather competes *fairly* with other clients (round-robin), instead
+  of owning a private thread;
+* decoded chunks land in the file's ONE shared cache — N sessions
+  replaying the same run pay ~1 decode total (measured in
+  ``benchmarks/service_load.py``: aggregate MB/s scales with client count);
+* backpressure is explicit: if the prefetch submit is rejected
+  (:class:`~repro.service.broker.AdmissionError`), the session degrades to
+  synchronous gathers (prefetch skipped, retried next window) rather than
+  deepening the overload.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Iterable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core.sliding_window import plan_window_rows
+
+from .requests import HyperslabQuery, WindowQuery
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from concurrent.futures import Future
+
+    from .broker import DataService
+    from .requests import ServiceResponse
+
+
+class LodWindowSession:
+    """Stateful sliding-window playback for ONE client over ONE dataset.
+
+    Iterate it (or call :meth:`next_window`) to receive each window's rows
+    in order, bit-identical to ``TH5File.read_row_indices`` over the same
+    selection.  ``windows`` is any iterable of row-index sequences or
+    ``(lo, hi)`` pairs (``max_rows`` budgets the LOD stride for pairs).
+    Created via :meth:`DataService.open_window_session`.
+    """
+
+    def __init__(
+        self,
+        service: "DataService",
+        client: str,
+        dataset: str,
+        windows: Iterable[Sequence[int] | tuple[int, int]] | None,
+        *,
+        max_rows: int | None = None,
+    ):
+        self.service = service
+        self.client = str(client)
+        self.dataset = str(dataset)
+        self.max_rows = max_rows
+        self._n_rows = service.file.meta(self.dataset).n_rows
+        self._windows = iter(windows) if windows is not None else None
+        self._pending: "Future[ServiceResponse] | None" = None
+        self._pending_rows: tuple[int, ...] | None = None
+        self.prefetch_rejections = 0
+        self.windows_served = 0
+
+    # -- window planning -----------------------------------------------------
+
+    def _rows_of(self, window: Sequence[int] | tuple[int, int]) -> tuple[int, ...]:
+        if isinstance(window, _Planned):  # requeued after a rejected prefetch
+            return tuple(window)
+        if (
+            isinstance(window, tuple)
+            and len(window) == 2
+            and all(isinstance(v, (int, np.integer)) for v in window)
+        ):
+            return plan_window_rows(window[0], window[1], self._n_rows, self.max_rows)
+        return tuple(int(r) for r in window)
+
+    def _submit(self, rows: tuple[int, ...]) -> "Future[ServiceResponse]":
+        # a stride-1 window (budget not binding) is a plain hyperslab —
+        # route it as one: the contiguous gather path skips the per-row
+        # index arrays entirely (bit-identical result, much cheaper to
+        # serve; the strided case keeps the row-gather WindowQuery).
+        # Contiguity must be checked pairwise: an endpoints-only test would
+        # misroute explicit selections like (2, 7, 4) or (2, 2, 4)
+        if len(rows) > 1 and all(b - a == 1 for a, b in zip(rows, rows[1:])):
+            return self.service.submit(
+                self.client, HyperslabQuery(self.dataset, rows[0], len(rows))
+            )
+        return self.service.submit(self.client, WindowQuery(self.dataset, rows))
+
+    # -- playback ------------------------------------------------------------
+
+    def gather(self, window: Sequence[int] | tuple[int, int]) -> np.ndarray:
+        """One-shot gather outside the scripted window sequence (seek)."""
+        rows = self._rows_of(window)
+        self.windows_served += 1
+        return self.service.request(self.client, WindowQuery(self.dataset, rows)).value
+
+    def next_window(self) -> np.ndarray:
+        """The next scripted window (double-buffered: the following
+        window's gather is submitted before this one is returned).
+        Raises ``StopIteration`` when the script is exhausted."""
+        if self._windows is None:
+            raise ValueError("session has no scripted windows; use gather()")
+        from .broker import AdmissionError  # deferred: broker imports sessions
+
+        if self._pending is None:
+            rows = self._rows_of(next(self._windows))  # StopIteration ends playback
+            fut = self._submit(rows)  # sync half: admission errors surface
+        else:
+            fut, self._pending = self._pending, None
+        # prefetch the following window best-effort BEFORE blocking on this
+        # one; a full queue degrades to synchronous (counted, retried next)
+        nxt = next(self._windows, None)
+        if nxt is not None:
+            rows_nxt = self._rows_of(nxt)
+            try:
+                self._pending = self._submit(rows_nxt)
+            except AdmissionError:
+                self.prefetch_rejections += 1
+                self._windows = _chain_front(rows_nxt, self._windows)
+        self.windows_served += 1
+        return fut.result().value
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        while True:
+            try:
+                yield self.next_window()
+            except StopIteration:
+                return
+
+    def close(self) -> None:
+        """Drop the in-flight prefetch result (the gather itself still
+        completes server-side; its chunks stay in the shared cache)."""
+        self._pending = None
+        self._windows = iter(())
+
+
+class _Planned(tuple):
+    """An already-planned row selection requeued into the window script —
+    must NOT be re-interpreted as a (lo, hi) pair when it has length 2."""
+
+
+def _chain_front(first: tuple[int, ...], rest: Iterator) -> Iterator:
+    """Put an already-planned window back at the front of the script."""
+    yield _Planned(first)
+    yield from rest

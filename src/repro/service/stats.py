@@ -1,0 +1,122 @@
+"""Service-side accounting: latency percentiles, per-client attribution.
+
+The broker mutates one :class:`_StatsCore` under its own lock; clients and
+benchmarks read immutable :class:`ServiceStats` / :class:`ClientStats`
+snapshots.  Latency samples go through a bounded deterministic reservoir
+(:class:`LatencyRecorder`) so a million-request load run costs O(1) memory
+while p50/p99 stay representative.  Field semantics are documented in
+``docs/SERVICE.md`` (kept in lockstep by ``tools/check_docs.py``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+
+class LatencyRecorder:
+    """Bounded reservoir of latency samples with percentile queries.
+
+    Deterministic (seeded LCG, no wall-clock / global RNG): the first
+    ``capacity`` samples are kept verbatim, later ones replace a
+    pseudo-random slot with the classic reservoir probability — unbiased
+    enough for p50/p99 over closed-loop load runs, and reproducible.
+    """
+
+    def __init__(self, capacity: int = 4096, seed: int = 0x5EED):
+        self.capacity = int(capacity)
+        self._samples: list[float] = []
+        self._seen = 0
+        self._lcg = seed & 0x7FFFFFFF or 1
+
+    def _rand(self, n: int) -> int:
+        # Lehmer LCG (minstd) — cheap, deterministic, lock-held safe
+        self._lcg = (self._lcg * 48271) % 0x7FFFFFFF
+        return self._lcg % n
+
+    def add(self, sample_s: float) -> None:
+        self._seen += 1
+        if len(self._samples) < self.capacity:
+            self._samples.append(float(sample_s))
+        elif self._rand(self._seen) < self.capacity:
+            self._samples[self._rand(self.capacity)] = float(sample_s)
+
+    @property
+    def n(self) -> int:
+        return self._seen
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100]; 0.0 when no samples yet (nearest-rank method)."""
+        if not self._samples:
+            return 0.0
+        ordered = sorted(self._samples)
+        rank = max(0, min(len(ordered) - 1, int(round(q / 100.0 * (len(ordered) - 1)))))
+        return ordered[rank]
+
+    def mean(self) -> float:
+        return sum(self._samples) / len(self._samples) if self._samples else 0.0
+
+
+@dataclass
+class ClientStats:
+    """Per-client slice of the service accounting (one entry per
+    ``client_id`` the broker has seen).
+
+    ``requests`` / ``bytes_served`` are completed work; ``rejected`` counts
+    this client's admission failures; ``chunk_hits`` / ``chunk_misses`` are
+    the shared-cache probes attributed to this client's gathers (so N
+    viewers of one run can each see their own hit rate against the ONE
+    shared cache); ``p50_ms`` / ``p99_ms`` are this client's end-to-end
+    request latencies.
+    """
+
+    requests: int = 0
+    bytes_served: int = 0
+    rejected: int = 0
+    chunk_hits: int = 0
+    chunk_misses: int = 0
+    p50_ms: float = 0.0
+    p99_ms: float = 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.chunk_hits + self.chunk_misses
+        return self.chunk_hits / total if total else 0.0
+
+
+@dataclass
+class ServiceStats:
+    """One immutable snapshot of a :class:`~repro.service.broker.
+    DataService`'s accounting (``DataService.stats()``).
+
+    ``queue_depth`` is the instantaneous number of admitted-but-unstarted
+    requests and ``max_queue_depth`` its high-water mark; ``inflight`` the
+    requests currently executing; ``admitted`` / ``rejected`` the admission
+    controller's totals (rejected = backpressure, the bounded queue was
+    full); ``completed`` / ``failed`` terminal counts; ``bytes_served`` the
+    logical payload bytes returned; ``requests_by_type`` the per-request-
+    class totals; ``p50_ms`` / ``p99_ms`` / ``mean_ms`` end-to-end request
+    latency percentiles over the reservoir; ``cache`` the SHARED chunk
+    cache's counters (one cache per file, all clients); ``clients`` the
+    per-client attribution (:class:`ClientStats`).
+    """
+
+    queue_depth: int = 0
+    max_queue_depth: int = 0
+    inflight: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    failed: int = 0
+    bytes_served: int = 0
+    requests_by_type: dict[str, int] = field(default_factory=dict)
+    p50_ms: float = 0.0
+    p99_ms: float = 0.0
+    mean_ms: float = 0.0
+    cache: dict[str, Any] = field(default_factory=dict)
+    clients: dict[str, ClientStats] = field(default_factory=dict)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache.get("hits", 0) + self.cache.get("misses", 0)
+        return self.cache.get("hits", 0) / total if total else 0.0

@@ -1,0 +1,118 @@
+"""Steering endpoint — serialized branch/rollback over one run's lineage.
+
+Reads scale out across the service's worker pool; **steering must not**.
+Two concurrent ``branch`` commands that both read the lineage, then both
+create children, can interleave arbitrarily with a ``rollback`` and leave
+the lineage chain observing different parents than the clients were
+promised.  The endpoint therefore executes every mutating request under
+one per-file mutex (writer-side serialization): each steer observes the
+fully committed result of the previous one.  A non-reentrant busy flag
+inside the critical section turns any future serialization bug into an
+immediate hard error instead of silent lineage corruption.
+
+The actual TRS mechanics stay in :class:`repro.core.steering.BranchManager`
+— this module only adds the concurrency contract and the typed
+request/response surface.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+from repro.core.checkpoint import CheckpointManager
+from repro.core.steering import BranchManager
+
+from .requests import SteeringRequest
+
+
+@dataclass(frozen=True)
+class SteeringResult:
+    """Answer to a :class:`~repro.service.requests.SteeringRequest`.
+
+    ``child_path`` is set for branch/rollback (the new lineage member);
+    ``steps`` are the snapshots reachable from the *target* of the
+    operation (the child for branch/rollback, this run for lineage);
+    ``lineage`` is the root-first chain as ``(path, branch_step)`` pairs.
+    """
+
+    op: str
+    path: str
+    child_path: str | None
+    branch_step: int | None
+    steps: tuple[int, ...]
+    lineage: tuple[tuple[str, int | None], ...]
+
+
+class SteeringEndpoint:
+    """Serialized steering executor for one run file (see module docstring).
+
+    Stateless between calls by design: every operation opens the run file
+    fresh (``CheckpointManager(create=False)``), so a steer always sees the
+    latest committed generation — including steps written by branches that
+    other clients created a moment earlier.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._serial = threading.Lock()  # THE writer-side serialization point
+        self._busy = False  # non-reentrant invariant check inside the lock
+        self.n_ops = 0
+
+    def execute(self, req: SteeringRequest) -> SteeringResult:
+        with self._serial:
+            if self._busy:  # pragma: no cover - serialization invariant
+                raise RuntimeError("steering serialization violated (concurrent entry)")
+            self._busy = True
+            try:
+                self.n_ops += 1
+                return self._execute_locked(req)
+            finally:
+                self._busy = False
+
+    # convenience verbs (all funnel through the serialized execute) ---------
+
+    def branch(
+        self, at_step: int, child_path: str, overlay: Mapping[str, Any] | None = None
+    ) -> SteeringResult:
+        return self.execute(SteeringRequest.branch(at_step, child_path, overlay))
+
+    def rollback(self, at_step: int, child_path: str) -> SteeringResult:
+        return self.execute(SteeringRequest.rollback(at_step, child_path))
+
+    def lineage(self) -> SteeringResult:
+        return self.execute(SteeringRequest.lineage())
+
+    # -----------------------------------------------------------------------
+
+    def _execute_locked(self, req: SteeringRequest) -> SteeringResult:
+        with CheckpointManager(self.path, create=False) as mgr:
+            bm = BranchManager(mgr)
+            if req.op == "lineage":
+                return SteeringResult(
+                    op=req.op,
+                    path=self.path,
+                    child_path=None,
+                    branch_step=None,
+                    steps=tuple(bm.available_steps()),
+                    lineage=tuple(bm.lineage_summary()),
+                )
+            if req.op not in ("branch", "rollback"):
+                raise ValueError(f"unknown steering op {req.op!r}")
+            if req.at_step is None or req.child_path is None:
+                raise ValueError(f"{req.op} needs at_step and child_path")
+            child = bm.branch(int(req.at_step), req.child_path, overlay=dict(req.overlay))
+            try:
+                chain = tuple(child.lineage_summary())
+                steps = tuple(child.available_steps())
+            finally:
+                child.manager.close()
+            return SteeringResult(
+                op=req.op,
+                path=self.path,
+                child_path=req.child_path,
+                branch_step=int(req.at_step),
+                steps=steps,
+                lineage=chain,
+            )

@@ -174,3 +174,48 @@ def test_split_rows_balanced():
     np.testing.assert_array_equal(split_rows(10, 3), [4, 3, 3])
     np.testing.assert_array_equal(split_rows(2, 4), [1, 1, 0, 0])
     assert split_rows(0, 4).sum() == 0
+
+
+def test_codec_policy_default_table(tmp_path):
+    """CodecPolicy.default() (ROADMAP open item, first slice): the measured
+    per-dtype / per-leaf-name table resolves fields to the lossy codec,
+    large float leaves to shuffle+zlib, integers to plain zlib, and small
+    leaves to the contiguous zero-copy path — and attaching it at manager
+    construction means save() needs no per-call policy."""
+    from repro.core.checkpoint import CodecPolicy
+
+    pol = CodecPolicy.default()
+    big_f32 = np.zeros((4096, 64), np.float32)
+    assert pol.resolve("fields/u", big_f32) == "int8-blockq"
+    assert pol.resolve("sim/fields/p", big_f32) == "int8-blockq"
+    assert pol.resolve("params/w", big_f32) == "shuffle+zlib"  # dtype upgrade
+    assert pol.resolve("opt/count", np.zeros((100_000,), np.int64)) == "zlib"
+    assert pol.resolve("fields/mask", np.zeros((100_000,), np.int32)) == "zlib"  # lossy→lossless
+    assert pol.resolve("step", np.int64(3)) == "none"  # tiny: stays contiguous
+    # the classmethod constructor coexists with the `default` codec field
+    assert pol.default == "zlib"
+
+    p = str(tmp_path / "run.th5")
+    rng = np.random.default_rng(5)
+    state = {
+        "fields": {"u": (rng.integers(0, 256, (2048, 64)) / 256).astype(np.float32)},
+        "params": {"w": rng.standard_normal((2048, 64)).astype(np.float32)},
+        "step": np.int64(7),
+    }
+    with CheckpointManager(p, codec_policy=CodecPolicy.default()) as mgr:
+        res = mgr.save(0, state)  # no per-call policy
+        assert res.filter_stats.n_chunks > 0  # leaves actually went chunked
+        assert res.compression_ratio > 1.0
+        assert mgr.file.meta("/simulation/step_00000000/state/fields.u").codec == "int8-blockq"
+        assert mgr.file.meta("/simulation/step_00000000/state/params.w").codec == "shuffle+zlib"
+        step, got = mgr.restore(0)
+        np.testing.assert_array_equal(got["params"]["w"], state["params"]["w"])  # lossless
+        from repro.core.codecs import Int8BlockQCodec
+
+        assert (
+            np.abs(got["fields"]["u"] - state["fields"]["u"]).max()
+            <= Int8BlockQCodec.tolerance(state["fields"]["u"])
+        )
+        # an explicit per-call policy still overrides the manager's
+        res2 = mgr.save(1, state, codec_policy=CodecPolicy(default="none"))
+        assert res2.filter_stats.n_chunks == 0

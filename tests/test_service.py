@@ -1,0 +1,360 @@
+"""Multi-client behaviour of the TH5 data service (``repro.service``).
+
+The broker adds admission control, fair scheduling, shared-cache reuse and
+serialized steering ON TOP of the single-caller read paths — so the
+contract under test is: payloads stay bit-identical to direct ``TH5File``
+calls under concurrency, a full queue rejects instead of piling up,
+steering never races the lineage, and a second client replaying a window
+another client already warmed decodes NOTHING new.
+"""
+
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AggregationConfig, ChunkPipeline
+from repro.core.checkpoint import CheckpointManager, CodecPolicy
+from repro.core.container import READ_COUNTER, TH5File
+from repro.service import (
+    AdmissionError,
+    CatalogQuery,
+    DataService,
+    HyperslabQuery,
+    PingQuery,
+    ServiceConfig,
+    SteeringRequest,
+    WindowQuery,
+)
+
+ROWS, COLS, CHUNK_ROWS = 1024, 64, 128
+DS_U = "/simulation/step_00000000/state/fields/u"
+DS_FLAT = "/simulation/step_00000000/state/flat"
+
+
+@pytest.fixture()
+def run_file(tmp_path):
+    """One run file with a compressed chunked leaf and a contiguous leaf."""
+    rng = np.random.default_rng(42)
+    u = (rng.integers(0, 1024, (ROWS, COLS)) / 1024.0).astype(np.float32)
+    flat = rng.random((ROWS, COLS)).astype(np.float32)
+    path = str(tmp_path / "run.th5")
+    with TH5File.create(path) as f:
+        mu = f.create_chunked_dataset(DS_U, u.shape, "<f4", CHUNK_ROWS, "shuffle+zlib")
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=4)) as pipe:
+            pipe.write(mu, u)
+        mf = f.create_dataset(DS_FLAT, flat.shape, "<f4")
+        f.write_full(mf, flat, checksum=True)
+        f.commit()
+    return path, u, flat
+
+
+# -- bit-identical results under concurrency -----------------------------------
+
+
+def test_concurrent_hyperslab_and_lod_bit_identical(run_file):
+    """8 clients × mixed hyperslab / window traffic over one file: every
+    response equals the direct single-caller read of the same selection."""
+    path, u, flat = run_file
+    rng = np.random.default_rng(7)
+    scripts = []
+    for c in range(8):
+        script = []
+        for _ in range(12):
+            if rng.integers(2):
+                lo = int(rng.integers(0, ROWS - 64))
+                n = int(rng.integers(1, 256))
+                n = min(n, ROWS - lo)
+                c0 = int(rng.integers(0, COLS - 8))
+                ds = DS_U if rng.integers(2) else DS_FLAT
+                script.append((HyperslabQuery(ds, lo, n, cols=(c0, c0 + 8)), None))
+            else:
+                rows = tuple(int(r) for r in np.sort(rng.choice(ROWS, size=96, replace=False)))
+                script.append((WindowQuery(DS_U, rows), None))
+        scripts.append(script)
+
+    def expected(req):
+        src = u if req.dataset == DS_U else flat
+        if isinstance(req, HyperslabQuery):
+            out = src[req.row_start : req.row_start + req.n_rows]
+            return out[:, req.cols[0] : req.cols[1]] if req.cols else out
+        return src[list(req.rows)]
+
+    with DataService(path, ServiceConfig(n_workers=4, max_queue=256)) as svc:
+        def run_client(cid):
+            futs = [(svc.submit(f"c{cid}", req), req) for req, _ in scripts[cid]]
+            for fut, req in futs:
+                np.testing.assert_array_equal(fut.result().value, expected(req))
+
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            for f_ in [pool.submit(run_client, c) for c in range(8)]:
+                f_.result()
+        st = svc.stats()
+        assert st.completed == 8 * 12
+        assert st.failed == 0 and st.rejected == 0
+        assert sorted(st.clients) == [f"c{c}" for c in range(8)]
+        # fair-queue bookkeeping drained fully
+        assert st.queue_depth == 0 and st.inflight == 0
+
+
+def test_window_sessions_concurrent_match_direct_reads(run_file):
+    """Concurrent per-client LOD sessions (double-buffered through the
+    service queue) return exactly what direct read_row_indices returns."""
+    path, u, _ = run_file
+    windows = [(lo, lo + 256) for lo in range(0, ROWS - 256 + 1, 128)]
+    with TH5File.open(path) as direct:
+        want = [
+            direct.read_row_indices(DS_U, list(range(lo, hi, 4)))
+            for lo, hi in windows
+        ]
+    with DataService(path, ServiceConfig(n_workers=4, max_queue=128)) as svc:
+        def play(cid):
+            ses = svc.open_window_session(cid, DS_U, windows, max_rows=64)
+            got = list(ses)
+            assert len(got) == len(want)
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(g, w)
+            return ses.windows_served
+
+        with ThreadPoolExecutor(max_workers=6) as pool:
+            served = [f.result() for f in [pool.submit(play, f"v{i}") for i in range(6)]]
+        assert served == [len(windows)] * 6
+
+
+def test_session_explicit_row_windows_not_misrouted(run_file):
+    """Explicit (non-contiguous / duplicate-bearing) row selections whose
+    endpoints happen to look contiguous must NOT be rewritten into
+    hyperslabs — the session returns exactly the requested rows."""
+    path, u, _ = run_file
+    tricky = [(2, 7, 4), (2, 2, 4), (5, 6, 7), [40, 39, 42]]
+    with DataService(path) as svc:
+        ses = svc.open_window_session("t", DS_U, tricky)
+        for rows, got in zip(tricky, ses):
+            np.testing.assert_array_equal(got, u[list(rows)])
+
+
+def test_verified_hyperslab_and_column_slice(run_file):
+    """verify=True routes through the CRC-checking paths — chunked partial,
+    contiguous full AND contiguous partial (whole-payload CRC re-read,
+    never a silent downgrade) — and stays bit-identical."""
+    path, u, flat = run_file
+    with DataService(path) as svc:
+        r = svc.request("v", HyperslabQuery(DS_U, 64, 512, verify=True))
+        np.testing.assert_array_equal(r.value, u[64:576])
+        r2 = svc.request("v", HyperslabQuery(DS_FLAT, 0, ROWS, verify=True))
+        np.testing.assert_array_equal(r2.value, flat)
+        r3 = svc.request("v", HyperslabQuery(DS_U, 0, ROWS, cols=(3, 9), verify=True))
+        np.testing.assert_array_equal(r3.value, u[:, 3:9])
+        r4 = svc.request("v", HyperslabQuery(DS_FLAT, 100, 50, verify=True))
+        np.testing.assert_array_equal(r4.value, flat[100:150])
+
+
+def test_partial_contiguous_verify_detects_corruption(run_file):
+    """A partial verified hyperslab of a contiguous dataset must check the
+    whole-payload CRC: corruption OUTSIDE the requested rows still raises
+    (the client asked for integrity, not a silent downgrade)."""
+    from repro.core.container import CorruptFileError
+
+    path, u, flat = run_file
+    meta_off = TH5File.open(path)
+    off = meta_off.meta(DS_FLAT).offset
+    meta_off.close()
+    with open(path, "r+b") as fh:  # flip bytes in the LAST row's extent
+        fh.seek(off + (ROWS - 1) * COLS * 4)
+        fh.write(b"\xff" * 8)
+    with DataService(path) as svc:
+        fut = svc.submit("v", HyperslabQuery(DS_FLAT, 0, 10, verify=True))
+        with pytest.raises(CorruptFileError, match="payload CRC mismatch"):
+            fut.result()
+        # unverified read of the untouched rows still serves bytes
+        got = svc.request("v", HyperslabQuery(DS_FLAT, 0, 10)).value
+        np.testing.assert_array_equal(got, flat[:10])
+        st = svc.stats()
+        assert st.failed == 1 and st.completed == 1
+
+
+# -- admission control ---------------------------------------------------------
+
+
+def test_admission_rejects_when_queue_full(run_file):
+    """Bounded queue: with the single worker gated, the (max_queue+1)-th
+    submit is REJECTED with AdmissionError (and accounted), nothing hangs,
+    and service resumes normally once the gate opens."""
+    path, u, _ = run_file
+    gate = threading.Event()
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=2)) as svc:
+        try:
+            blocker = svc.submit("greedy", PingQuery(gate=gate))
+            # worker is (or will be) busy on the gated ping; fill the queue
+            queued = []
+            while len(queued) < 2:
+                try:
+                    queued.append(svc.submit("greedy", PingQuery()))
+                except AdmissionError:
+                    pass  # racing the worker pickup; retry
+            with pytest.raises(AdmissionError) as ei:
+                for _ in range(3):  # queue holds 2: the 3rd must reject
+                    queued.append(svc.submit("greedy", PingQuery()))
+            assert ei.value.queue_depth == 2
+            st = svc.stats()
+            assert st.rejected >= 1
+            assert st.clients["greedy"].rejected >= 1
+        finally:
+            gate.set()  # never leave the worker gated (close() would hang)
+        for fut in [blocker] + queued:
+            fut.result(timeout=30)
+        # recovered: new requests are admitted and served
+        got = svc.request("greedy", HyperslabQuery(DS_U, 0, 8)).value
+        np.testing.assert_array_equal(got, u[:8])
+
+
+def test_fair_scheduling_round_robin(run_file):
+    """A client with a deep backlog cannot starve another client: with one
+    worker, B's single request (submitted after A's backlog) is served
+    after at most one more of A's — round-robin, not FIFO-by-client."""
+    path, _, _ = run_file
+    gate = threading.Event()
+    order = []
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=64)) as svc:
+        try:
+            blocker = svc.submit("a", PingQuery(gate=gate))
+            backlog = [svc.submit("a", PingQuery()) for _ in range(8)]
+            b = svc.submit("b", PingQuery())
+            for fut, tag in [(f, "a") for f in backlog] + [(b, "b")]:
+                fut.add_done_callback(lambda _f, t=tag: order.append(t))
+        finally:
+            gate.set()
+        blocker.result(timeout=30)
+        for f in backlog + [b]:
+            f.result(timeout=30)
+    # b entered the rotation with a's backlog already queued: it must be
+    # served within the first two completions, not after all 8 of a's
+    assert "b" in order[:2], order
+
+
+# -- cross-client cache sharing ------------------------------------------------
+
+
+def test_second_client_window_replay_decodes_nothing(run_file):
+    """The cache-sharing contract: after client A cold-replays a window
+    set, client B replaying the same windows decodes ZERO new chunks (all
+    shared-cache hits) — N viewers of one run cost ~1 decode."""
+    path, u, _ = run_file
+    windows = [(lo, lo + 256) for lo in range(0, ROWS - 256 + 1, 128)]
+    with DataService(path, ServiceConfig(n_workers=4, max_queue=128)) as svc:
+        for _ in svc.open_window_session("A", DS_U, windows):
+            pass
+        decoded_after_a = svc.file.read_stats.n_chunks if svc.file.read_stats else 0
+        assert decoded_after_a > 0  # A's replay was genuinely cold
+        for _ in svc.open_window_session("B", DS_U, windows):
+            pass
+        decoded_after_b = svc.file.read_stats.n_chunks
+        assert decoded_after_b == decoded_after_a  # B decoded nothing new
+        st = svc.stats()
+        assert st.clients["B"].chunk_misses == 0
+        assert st.clients["B"].chunk_hits > 0
+        assert st.clients["B"].cache_hit_rate == 1.0
+
+
+def test_shared_file_registry_across_service_instances(run_file):
+    """Two DataService instances over one path share ONE TH5File (one
+    cache, one decode pool) — and the file closes only with the last."""
+    path, u, _ = run_file
+    svc1 = DataService(path)
+    svc2 = DataService(path)
+    try:
+        assert svc1.file is svc2.file
+        svc1.request("x", HyperslabQuery(DS_U, 0, 256))
+        # the decode work is visible through the OTHER service's handle
+        assert svc2.file.read_stats is not None
+    finally:
+        svc1.close()
+        # still usable through svc2 after svc1 released its ref
+        got = svc2.request("y", HyperslabQuery(DS_U, 0, 16)).value
+        np.testing.assert_array_equal(got, u[:16])
+        svc2.close()
+
+
+# -- catalog -------------------------------------------------------------------
+
+
+def test_catalog_lists_without_decoding(run_file):
+    """CatalogQuery answers steps/leaves/codec stats from the index alone:
+    zero read syscalls, zero decodes."""
+    path, u, flat = run_file
+    with DataService(path) as svc:
+        READ_COUNTER.reset()
+        cat = svc.request("browser", CatalogQuery()).value
+        syscalls, nbytes = READ_COUNTER.snapshot()
+        assert (syscalls, nbytes) == (0, 0)
+        assert svc.file.read_stats is None  # no decode pipeline activity
+    assert cat.steps == (0,)
+    assert cat.leaves_by_step[0] == ("fields/u", "flat")
+    by_path = {d.path: d for d in cat.datasets}
+    du = by_path[DS_U]
+    assert du.codec == "shuffle+zlib"
+    assert du.n_chunks == ROWS // CHUNK_ROWS
+    assert du.nbytes == u.nbytes
+    assert 0 < du.stored_nbytes < u.nbytes and du.ratio > 1.0
+    dflat = by_path[DS_FLAT]
+    assert dflat.codec == "none" and dflat.stored_nbytes == flat.nbytes
+
+
+# -- steering ------------------------------------------------------------------
+
+
+def test_concurrent_steering_serialized_and_consistent(tmp_path):
+    """6 concurrent branch requests + interleaved reads: every branch
+    lands with a correct lineage record, the endpoint executes them
+    serially (single endpoint per file, op counter == request count), and
+    a chained rollback sees the committed lineage."""
+    root_path = str(tmp_path / "root.th5")
+    with CheckpointManager(root_path, common={"lamp_T": 324.66}) as mgr:
+        for s in (10, 20, 30):
+            mgr.save(s, {"T": np.full((64, 4), float(s), np.float32)})
+    with DataService(root_path, ServiceConfig(n_workers=4, max_queue=64)) as svc:
+        def steer(i):
+            child = str(tmp_path / f"branch_{i}.th5")
+            return svc.request(
+                f"s{i}", SteeringRequest.branch(20, child, {"lamp_T": 350.0 + i})
+            ).value
+        with ThreadPoolExecutor(max_workers=6) as pool:
+            results = [f.result() for f in [pool.submit(steer, i) for i in range(6)]]
+        for i, res in enumerate(results):
+            assert res.op == "branch" and res.branch_step == 20
+            assert res.steps == (10, 20)  # parent's future (30) invisible
+            assert res.lineage[0][0] == os.path.realpath(root_path) or res.lineage[0][0] == root_path
+            assert res.lineage[-1] == (str(tmp_path / f"branch_{i}.th5"), 20)
+        assert svc.steering.n_ops == 6
+        # chained rollback through one branch sees its committed lineage
+        with DataService(str(tmp_path / "branch_0.th5")) as child_svc:
+            rb = child_svc.request("s0", SteeringRequest.rollback(10, str(tmp_path / "rb.th5"))).value
+            assert rb.steps == (10,)
+            assert [p for p, _ in rb.lineage][-1] == str(tmp_path / "rb.th5")
+        lin = svc.request("any", SteeringRequest.lineage()).value
+        assert lin.steps == (10, 20, 30)
+
+
+# -- batched adjacent-chunk fetches (satellite) --------------------------------
+
+
+def test_batched_fetch_identical_and_fewer_syscalls(run_file):
+    """DecodePipeline preadv batching: a cold multi-chunk read issues
+    strictly fewer read syscalls than the per-chunk baseline and returns
+    bit-identical data."""
+    path, u, _ = run_file
+    counts = {}
+    for batch in (True, False):
+        with TH5File.open(path) as f:
+            f.set_decode_config(AggregationConfig(n_aggregators=4), batch_fetch=batch)
+            READ_COUNTER.reset()
+            got = f.read(DS_U)
+            np.testing.assert_array_equal(got, u)
+            counts[batch], _ = READ_COUNTER.snapshot()
+            assert f.read_stats.n_chunks == ROWS // CHUNK_ROWS  # fully cold
+    assert counts[True] < counts[False]
+    # ~one syscall per in-flight window (8 chunks) vs one per chunk
+    assert counts[True] <= -(-(ROWS // CHUNK_ROWS) // 8) + 1
+    assert counts[False] == ROWS // CHUNK_ROWS

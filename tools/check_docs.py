@@ -9,7 +9,10 @@ installed):
   * every dataclass field name of ``DatasetMeta`` and ``ChunkRecord`` is
     documented;
   * every codec name and id registered in ``codecs.py`` is documented;
-  * the superblock struct format string matches the spec's packed layout.
+  * the superblock struct format string matches the spec's packed layout;
+  * ``docs/SERVICE.md`` documents every ``ServiceStats`` / ``ClientStats``
+    field and every request dataclass of the service layer, and
+    ``docs/ARCHITECTURE.md`` covers the ``DataService`` broker.
 
 Exit status 1 with a list of misses on drift.
 """
@@ -24,11 +27,14 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 CONTAINER = ROOT / "src" / "repro" / "core" / "container.py"
 CODECS = ROOT / "src" / "repro" / "core" / "codecs.py"
+SERVICE_STATS = ROOT / "src" / "repro" / "service" / "stats.py"
+SERVICE_REQUESTS = ROOT / "src" / "repro" / "service" / "requests.py"
 SPEC = ROOT / "docs" / "FORMAT.md"
 ARCH = ROOT / "docs" / "ARCHITECTURE.md"
+SERVICE_DOC = ROOT / "docs" / "SERVICE.md"
 
 
-def dataclass_fields(tree: ast.Module, class_name: str) -> list[str]:
+def dataclass_fields(tree: ast.Module, class_name: str, where: Path = CONTAINER) -> list[str]:
     for node in ast.walk(tree):
         if isinstance(node, ast.ClassDef) and node.name == class_name:
             return [
@@ -36,7 +42,7 @@ def dataclass_fields(tree: ast.Module, class_name: str) -> list[str]:
                 for stmt in node.body
                 if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name)
             ]
-    raise SystemExit(f"check_docs: class {class_name} not found in {CONTAINER}")
+    raise SystemExit(f"check_docs: class {class_name} not found in {where}")
 
 
 def module_constant(tree: ast.Module, name: str):
@@ -50,7 +56,7 @@ def module_constant(tree: ast.Module, name: str):
 
 def main() -> int:
     missing: list[str] = []
-    for p in (SPEC, ARCH):
+    for p in (SPEC, ARCH, SERVICE_DOC):
         if not p.exists():
             print(f"check_docs: {p.relative_to(ROOT)} does not exist")
             return 1
@@ -94,12 +100,32 @@ def main() -> int:
                 if f"`{cname}`" not in spec:
                     missing.append(f"codec name `{cname}`")
 
+    # -- service layer: docs/SERVICE.md ------------------------------------
+    service_doc = SERVICE_DOC.read_text(encoding="utf-8")
+    stree = ast.parse(SERVICE_STATS.read_text(encoding="utf-8"))
+    for cls in ("ServiceStats", "ClientStats"):
+        for fld in dataclass_fields(stree, cls, SERVICE_STATS):
+            if f"`{fld}`" not in service_doc:
+                missing.append(f"SERVICE.md: {cls} field `{fld}`")
+    rtree = ast.parse(SERVICE_REQUESTS.read_text(encoding="utf-8"))
+    for node in rtree.body:
+        if isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
+            if f"`{node.name}`" not in service_doc:
+                missing.append(f"SERVICE.md: request/response class `{node.name}`")
+    arch = ARCH.read_text(encoding="utf-8")
+    for name in ("DataService", "SteeringEndpoint", "AdmissionError"):
+        if name not in arch and name not in service_doc:
+            missing.append(f"service class {name} undocumented (ARCHITECTURE.md / SERVICE.md)")
+
     if missing:
-        print("docs/FORMAT.md drifted from the code — missing:")
+        print("docs drifted from the code — missing:")
         for m in missing:
             print(f"  - {m}")
         return 1
-    print("check_docs: docs/FORMAT.md is in lockstep with container.py/codecs.py")
+    print(
+        "check_docs: docs/FORMAT.md and docs/SERVICE.md are in lockstep with "
+        "container.py/codecs.py/service"
+    )
     return 0
 
 
