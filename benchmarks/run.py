@@ -15,6 +15,7 @@ per-figure detail lines.  Figure map:
 
 from __future__ import annotations
 
+import functools
 import time
 
 
@@ -42,6 +43,12 @@ def main() -> None:
         ("lm_checkpoint", lm_checkpoint.run, lambda rows: f"write={max(r['write_MBps'] for r in rows):.0f}MB/s"),
         # multi-client broker: aggregate served MB/s scaling with client count
         ("service_load_serve", service_load.run,
+         lambda res: f"agg8={res['traffic'][-1]['agg_MBps']:.0f}MB/s,"
+                     f"speedup_vs_1client={res['speedup_max_clients_vs_1']:.2f}x,"
+                     f"p99={res['traffic'][-1]['p99_ms']:.0f}ms"),
+        # the same traffic over the wire protocol (ServiceServer + sockets)
+        ("service_load_serve_wire",
+         functools.partial(service_load.run, transport="socket"),
          lambda res: f"agg8={res['traffic'][-1]['agg_MBps']:.0f}MB/s,"
                      f"speedup_vs_1client={res['speedup_max_clients_vs_1']:.2f}x,"
                      f"p99={res['traffic'][-1]['p99_ms']:.0f}ms"),

@@ -17,32 +17,50 @@ requests               :class:`HyperslabQuery`, :class:`WindowQuery`,
 :class:`SnapshotCatalog`   steps / leaves / codec stats without decoding
 :class:`SteeringEndpoint`  serialized branch / rollback over the lineage
 :class:`ServiceStats`  queue depth, admission rejections, per-client cache
-                       hit rates, p50/p99 latency
+                       hit rates, QoS attribution, p50/p99 latency
+:class:`QosClass`      per-client scheduling class: interactive/bulk weight
+                       + optional token-bucket byte-rate limit
+:class:`ServiceServer` the wire transport: serves a DataService over a
+                       TCP / Unix socket (``transport.py`` + ``wire.py``)
+:class:`RemoteDataService`  socket client with the broker's exact API —
+                       sessions and benchmarks run unmodified against it
 =====================  ========================================================
 
-Ownership / backpressure model and the full request reference:
-``docs/SERVICE.md``.  Load benchmark: ``benchmarks/service_load.py``
-(the ``serve`` section of ``BENCH_io.json``).
+Ownership / backpressure model, the full request reference and the wire
+protocol: ``docs/SERVICE.md``.  Load benchmark: ``benchmarks/
+service_load.py`` (the ``serve`` / ``serve_wire`` sections of
+``BENCH_io.json``).
 """
 
-from .broker import AdmissionError, DataService, ServiceConfig
+from .broker import AdmissionError, DataService, QosClass, ServiceConfig
 from .catalog import DatasetInfo, SnapshotCatalog, build_catalog
+from .client import RemoteDataService
 from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
     ServiceResponse,
+    StatsQuery,
     SteeringRequest,
     WindowQuery,
 )
 from .sessions import LodWindowSession, plan_window_rows
 from .stats import ClientStats, LatencyRecorder, ServiceStats
 from .steer import SteeringEndpoint, SteeringResult
+from .transport import ServiceServer, serve
+from .wire import WireDisconnect, WireError
 
 __all__ = [
     "AdmissionError",
     "DataService",
+    "QosClass",
+    "RemoteDataService",
     "ServiceConfig",
+    "ServiceServer",
+    "serve",
+    "StatsQuery",
+    "WireDisconnect",
+    "WireError",
     "DatasetInfo",
     "SnapshotCatalog",
     "build_catalog",

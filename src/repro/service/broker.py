@@ -16,9 +16,13 @@ clients hit them at once without N× the cost:
   threads/latency: backpressure is explicit and accounted
   (``ServiceStats.rejected``), clients retry or degrade (sessions drop
   their prefetch, see ``sessions.py``).
-* **fair scheduling** — admitted requests queue per client; workers pop
-  round-robin across clients, so one client streaming full-file reads
-  cannot starve another's single catalog query behind its backlog.
+* **fair scheduling + QoS** — admitted requests queue per client; workers
+  pop by weighted virtual time (equal weights ⇒ exact round-robin), so one
+  client streaming full-file reads cannot starve another's single catalog
+  query behind its backlog.  Per-client :class:`QosClass` assignment
+  (``set_client_class``) adds interactive/bulk *weights* and an optional
+  token-bucket byte-rate limit on top (throttled clients are deferred, not
+  rejected; shutdown drains regardless).
 * **serialized steering** — every :class:`~repro.service.requests.
   SteeringRequest` funnels through the file's single
   :class:`~repro.service.steer.SteeringEndpoint` mutex; reads keep flowing
@@ -50,6 +54,7 @@ from .requests import (
     HyperslabQuery,
     PingQuery,
     ServiceResponse,
+    StatsQuery,
     SteeringRequest,
     WindowQuery,
     response_nbytes,
@@ -62,13 +67,48 @@ from .steer import SteeringEndpoint
 class AdmissionError(TH5Error):
     """The bounded request queue is full — backpressure, not failure.
 
-    Carries ``queue_depth`` so clients can implement informed retry/degrade
-    policies (the LOD session drops its prefetch; the load generator counts
-    and retries)."""
+    Carries ``queue_depth`` and the rejected ``client`` id so callers (and
+    the wire transport's ``BUSY`` reply) can report *why* the request was
+    turned away and implement informed retry/degrade policies (the LOD
+    session drops its prefetch; the load generator counts and retries)."""
 
-    def __init__(self, msg: str, queue_depth: int):
+    def __init__(self, msg: str, queue_depth: int, client: str | None = None):
         super().__init__(msg)
         self.queue_depth = queue_depth
+        self.client = client
+
+
+@dataclass(frozen=True)
+class QosClass:
+    """One per-client scheduling class.
+
+    ``weight`` sets the client's share of the worker pool under contention
+    (virtual-time weighted fair queueing: a weight-4 interactive client is
+    served ~4 requests for every 1 of a weight-1 bulk client — but a lone
+    client of *any* class still gets the whole pool).  ``rate_bytes_per_s``
+    adds a token-bucket rate limit on served payload bytes (``None`` =
+    unlimited): buckets start at ``burst_bytes`` and are debited as
+    responses complete, so a client whose bucket is in debt is *deferred*
+    (not rejected) until it refills.  Draining on shutdown ignores the
+    buckets — admitted work always completes."""
+
+    name: str
+    weight: int = 1
+    rate_bytes_per_s: float | None = None
+    burst_bytes: int = 8 << 20
+
+    def __post_init__(self) -> None:
+        if self.weight < 1:
+            raise ValueError("QosClass weight must be >= 1")
+        if self.rate_bytes_per_s is not None and self.rate_bytes_per_s <= 0:
+            raise ValueError("QosClass rate_bytes_per_s must be > 0 (or None)")
+        if self.burst_bytes < 1:
+            raise ValueError("QosClass burst_bytes must be >= 1")
+
+
+#: Default classes: interactive viewers outweigh bulk replayers 4:1 under
+#: contention; neither is rate-limited unless the deployment opts in.
+DEFAULT_QOS_CLASSES = (QosClass("interactive", weight=4), QosClass("bulk", weight=1))
 
 
 @dataclass(frozen=True)
@@ -78,18 +118,36 @@ class ServiceConfig:
     threads; defaults the decode pool width too, so aggregate read
     throughput scales with client count up to this.  ``cache_bytes``:
     shared decoded-chunk cache capacity for the file.  ``batch_fetch``:
-    adjacent-chunk preadv batching in the decode pipeline."""
+    adjacent-chunk preadv batching in the decode pipeline.
+    ``qos_classes``: the :class:`QosClass` set clients can be assigned to
+    (``DataService.set_client_class``); ``default_class`` is what new
+    clients get."""
 
     max_queue: int = 64
     n_workers: int = 4
     cache_bytes: int = 256 << 20
     batch_fetch: bool = True
+    qos_classes: tuple[QosClass, ...] = DEFAULT_QOS_CLASSES
+    default_class: str = "interactive"
 
     def __post_init__(self) -> None:
         if self.max_queue < 1:
             raise ValueError("max_queue must be >= 1")
         if self.n_workers < 1:
             raise ValueError("need >= 1 worker")
+        names = [c.name for c in self.qos_classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate QoS class names: {names}")
+        if self.default_class not in names:
+            raise ValueError(
+                f"default_class {self.default_class!r} not in qos_classes {names}"
+            )
+
+    def qos_class(self, name: str) -> QosClass:
+        for c in self.qos_classes:
+            if c.name == name:
+                return c
+        raise KeyError(f"unknown QoS class {name!r}")
 
 
 # -- process-wide shared-file registry -----------------------------------------
@@ -151,6 +209,40 @@ class _Job:
         self.t_start = 0.0
 
 
+class _Sched:
+    """Per-client scheduler state (all mutated under the broker's lock):
+    the client's FIFO of admitted jobs, its weighted-fair virtual time,
+    and its token bucket (``tokens`` may go negative — responses debit
+    after completion, since payload size is unknown until then)."""
+
+    __slots__ = ("queue", "cls", "vtime", "seq", "tokens", "t_refill", "throttled")
+
+    def __init__(self, cls: QosClass, seq: int, now: float):
+        self.queue: deque[_Job] = deque()
+        self.cls = cls
+        self.vtime = 0.0
+        self.seq = seq
+        self.tokens = float(cls.burst_bytes)
+        self.t_refill = now
+        self.throttled = 0
+
+    def refill(self, now: float) -> None:
+        rate = self.cls.rate_bytes_per_s
+        if rate is not None and now > self.t_refill:
+            self.tokens = min(
+                float(self.cls.burst_bytes), self.tokens + (now - self.t_refill) * rate
+            )
+        self.t_refill = now
+
+    def eligible(self) -> bool:
+        return self.cls.rate_bytes_per_s is None or self.tokens > 0.0
+
+    def wait_s(self) -> float:
+        """Seconds until the bucket climbs back above zero."""
+        rate = self.cls.rate_bytes_per_s or 1.0
+        return max((-self.tokens) / rate, 0.0) + 1e-4
+
+
 class DataService:
     """The broker (see module docstring).  Thread-safe; use as a context
     manager or call :meth:`close`."""
@@ -160,8 +252,14 @@ class DataService:
         self.path = str(path)
         self._key, self._shared = _acquire_shared(self.path, self.config)
         self._cv = threading.Condition()
-        self._queues: dict[str, deque[_Job]] = {}
-        self._rr: deque[str] = deque()  # clients with >= 1 queued job, RR order
+        self._clock = time.monotonic  # injectable for deterministic QoS tests
+        self._sched: dict[str, _Sched] = {}  # per-client QoS state (registry)
+        self._active: dict[str, _Sched] = {}  # only clients with queued work:
+        # the scheduler scans THIS (bounded by concurrent backlogs), never
+        # the full registry (which grows with every client id ever seen,
+        # like the stats maps)
+        self._sched_seq = 0  # stable tie-break for equal virtual times
+        self._vt_base = 0.0  # vtime floor newly-active clients join at
         self._queued = 0
         self._inflight = 0
         self._shutdown = False
@@ -214,8 +312,18 @@ class DataService:
     def submit(self, client: str, request: Any) -> "Future[ServiceResponse]":
         """Admit one request for ``client``.  Raises :class:`AdmissionError`
         when the bounded queue is full (backpressure) — nothing is queued in
-        that case."""
+        that case.  :class:`~repro.service.requests.StatsQuery` is answered
+        inline (never queued, never accounted): observability keeps working
+        during overload and does not perturb the counters it reports."""
         job = _Job(str(client), request)
+        if isinstance(request, StatsQuery):
+            with self._cv:
+                if self._shutdown:  # same contract as every other request
+                    raise TH5Error("service closed")
+            job.future.set_result(
+                ServiceResponse(value=self.stats(), client=job.client, request=request)
+            )
+            return job.future
         with self._cv:
             if self._shutdown:
                 raise TH5Error("service closed")
@@ -223,18 +331,48 @@ class DataService:
                 self._rejected += 1
                 self._client(job.client).rejected += 1
                 raise AdmissionError(
-                    f"service queue full ({self._queued}/{self.config.max_queue})",
+                    f"service queue full ({self._queued}/{self.config.max_queue})"
+                    f" for client {job.client!r}",
                     queue_depth=self._queued,
+                    client=job.client,
                 )
             self._admitted += 1
-            q = self._queues.setdefault(job.client, deque())
-            if not q:
-                self._rr.append(job.client)
-            q.append(job)
+            sched = self._sched_for(job.client)
+            if not sched.queue:  # idle → active: no banked virtual time
+                sched.vtime = max(sched.vtime, self._vt_base)
+                self._active[job.client] = sched
+            sched.queue.append(job)
             self._queued += 1
             self._max_queue_depth = max(self._max_queue_depth, self._queued)
             self._cv.notify()
         return job.future
+
+    def set_client_class(self, client: str, qos_class: str) -> None:
+        """Assign ``client`` to one of the configured :class:`QosClass`\\ es
+        (``KeyError`` on unknown names).  Token-bucket state is keyed by
+        the CLIENT, not the class: re-assigning the same class is a no-op,
+        and a class *change* carries the current balance across (clamped
+        to the new burst) — so a rate-limited client can never shed its
+        debt by reconnecting or by hopping classes (the transport calls
+        this on first sight per connection, with a client-declared HELLO
+        class; authn/z on that declaration is an open roadmap item)."""
+        cls = self.config.qos_class(qos_class)
+        with self._cv:
+            sched = self._sched_for(str(client))
+            if sched.cls == cls:
+                return
+            sched.cls = cls
+            # never a free refill: debt (negative balance) survives, a
+            # positive balance can only shrink to the new class's burst
+            sched.tokens = min(sched.tokens, float(cls.burst_bytes))
+            sched.t_refill = self._clock()
+            self._cv.notify_all()  # eligibility may have changed
+
+    def dataset_rows(self, dataset: str, *, client: str | None = None) -> int:
+        """Row count of one dataset (metadata only — no queue round-trip in
+        process; the remote client answers it from a cached catalog,
+        attributed to ``client``)."""
+        return self._shared.file.meta(dataset).n_rows
 
     def request(self, client: str, request: Any) -> ServiceResponse:
         """Synchronous :meth:`submit` (admission errors still raise)."""
@@ -263,27 +401,62 @@ class DataService:
 
     # -- scheduling ----------------------------------------------------------
 
-    def _pop_job_locked(self) -> _Job | None:
-        """Round-robin across clients with queued work (fairness: one
-        client's backlog never blocks another's next request)."""
-        if not self._rr:
-            return None
-        cid = self._rr.popleft()
-        q = self._queues[cid]
-        job = q.popleft()
-        if q:
-            self._rr.append(cid)  # back of the rotation only if more queued
+    def _sched_for(self, cid: str) -> _Sched:
+        sched = self._sched.get(cid)
+        if sched is None:
+            self._sched_seq += 1
+            sched = self._sched[cid] = _Sched(
+                self.config.qos_class(self.config.default_class),
+                self._sched_seq,
+                self._clock(),
+            )
+        return sched
+
+    def _pop_job_locked(self) -> tuple[_Job | None, float | None]:
+        """Weighted fair pop: among clients with queued work whose token
+        bucket is not in debt, pick the smallest virtual time (stable
+        tie-break by first-seen order) and advance it by ``1/weight`` —
+        equal weights degenerate to exact round-robin, a weight-4 client
+        gets 4 pops per weight-1 pop, and an idle client re-joins at the
+        current floor instead of cashing banked time.  When every queued
+        client is rate-throttled, returns ``(None, seconds-until-the-
+        earliest-bucket-refills)`` so the caller can sleep precisely;
+        during shutdown the buckets are ignored (admitted work drains)."""
+        now = self._clock()
+        best: str | None = None
+        best_key: tuple[float, int] | None = None
+        earliest: float | None = None
+        for cid, sched in self._active.items():
+            sched.refill(now)
+            if not sched.eligible() and not self._shutdown:
+                sched.throttled += 1
+                wait = sched.wait_s()
+                earliest = wait if earliest is None else min(earliest, wait)
+                continue
+            key = (sched.vtime, sched.seq)
+            if best_key is None or key < best_key:
+                best, best_key = cid, key
+        if best is None:
+            return None, earliest
+        sched = self._active[best]
+        job = sched.queue.popleft()
+        if not sched.queue:
+            del self._active[best]
+        self._vt_base = max(self._vt_base, sched.vtime)
+        sched.vtime += 1.0 / sched.cls.weight
         self._queued -= 1
-        return job
+        return job, None
 
     def _worker(self) -> None:
         while True:
             with self._cv:
-                while not self._rr and not self._shutdown:
-                    self._cv.wait()
-                job = self._pop_job_locked()
-                if job is None:  # shutdown and fully drained
-                    return
+                while True:
+                    job, wait_s = self._pop_job_locked()
+                    if job is not None:
+                        break
+                    if self._shutdown and self._queued == 0:
+                        return
+                    self._cv.wait(wait_s)
                 self._inflight += 1
             job.t_start = time.perf_counter()
             try:
@@ -325,6 +498,11 @@ class DataService:
             cs.bytes_served += resp.nbytes
             cs.chunk_hits += resp.chunk_hits
             cs.chunk_misses += resp.chunk_misses
+        # token-bucket debit, post-facto (payload size is unknown until the
+        # read completes); min cost 1 so zero-byte requests still meter
+        sched = self._sched.get(job.client)
+        if sched is not None and sched.cls.rate_bytes_per_s is not None:
+            sched.tokens -= float(max(resp.nbytes if resp is not None else 0, 1))
 
     # -- execution -----------------------------------------------------------
 
@@ -406,17 +584,39 @@ class DataService:
         cache = self._shared.file.chunk_cache.stats()
         with self._cv:
             clients = {}
+            qos: dict[str, dict[str, Any]] = {
+                c.name: {
+                    "weight": c.weight,
+                    "rate_bytes_per_s": c.rate_bytes_per_s,
+                    "clients": 0,
+                    "requests": 0,
+                    "bytes_served": 0,
+                    "throttled": 0,
+                }
+                for c in self.config.qos_classes
+            }
             for cid, cs in self._clients.items():
                 rec = self._client_latency[cid]
+                sched = self._sched.get(cid)
+                cls_name = sched.cls.name if sched else self.config.default_class
+                throttled = sched.throttled if sched else 0
                 clients[cid] = ClientStats(
                     requests=cs.requests,
                     bytes_served=cs.bytes_served,
                     rejected=cs.rejected,
                     chunk_hits=cs.chunk_hits,
                     chunk_misses=cs.chunk_misses,
+                    qos_class=cls_name,
+                    throttled=throttled,
                     p50_ms=rec.percentile(50) * 1e3,
                     p99_ms=rec.percentile(99) * 1e3,
                 )
+                agg = qos.get(cls_name)
+                if agg is not None:
+                    agg["clients"] += 1
+                    agg["requests"] += cs.requests
+                    agg["bytes_served"] += cs.bytes_served
+                    agg["throttled"] += throttled
             return ServiceStats(
                 queue_depth=self._queued,
                 max_queue_depth=self._max_queue_depth,
@@ -431,5 +631,6 @@ class DataService:
                 p99_ms=self._latency.percentile(99) * 1e3,
                 mean_ms=self._latency.mean() * 1e3,
                 cache=cache,
+                qos=qos,
                 clients=clients,
             )

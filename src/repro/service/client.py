@@ -1,0 +1,231 @@
+"""RemoteDataService — the broker's API over a socket.
+
+Drop-in for :class:`~repro.service.broker.DataService` on the consumer
+side: ``submit`` / ``request`` / ``open_window_session`` / ``stats`` have
+the same signatures and semantics, so :class:`~repro.service.sessions.
+LodWindowSession` and ``benchmarks/service_load.py`` run unmodified against
+either.  One socket per instance; requests are pipelined (client-assigned
+``req_id``, responses demultiplexed by a single reader thread), which is
+exactly what the LOD session's one-window prefetch needs.
+
+Differences a caller can observe, by design:
+
+* ``submit`` cannot raise :class:`~repro.service.broker.AdmissionError`
+  synchronously — the rejection happens broker-side and comes back as a
+  ``BUSY`` frame, so it surfaces from ``Future.result()`` instead (with
+  ``queue_depth`` and ``client`` faithfully reconstructed).  The LOD
+  session handles both shapes (`sessions.py`).
+* service-side exceptions are re-raised from the class name + message that
+  crossed the wire (``wire.decode_error``); chunked-read integrity errors
+  therefore still *name* the offending chunk.
+* ``dataset_rows`` is answered from a cached :class:`~repro.service.
+  catalog.SnapshotCatalog` (one CatalogQuery on first use) instead of the
+  broker's in-process metadata peek.
+"""
+
+from __future__ import annotations
+
+import itertools
+import socket
+import threading
+from concurrent.futures import Future
+from typing import Iterable, Sequence
+
+from repro.core.container import TH5Error
+
+from . import wire
+from .requests import CatalogQuery, ServiceResponse, StatsQuery
+from .sessions import LodWindowSession
+from .stats import ServiceStats
+
+
+class RemoteDataService:
+    """Client half of the wire protocol (see module docstring).
+
+    ``address``: a Unix-socket path or ``(host, port)``, e.g. a
+    :class:`~repro.service.transport.ServiceServer`'s resolved
+    ``.address``.  ``qos`` names the broker-side
+    :class:`~repro.service.broker.QosClass` every client id on this
+    connection is assigned to."""
+
+    def __init__(
+        self,
+        address: str | tuple[str, int],
+        *,
+        qos: str = "interactive",
+        connect_timeout: float | None = 30.0,
+        sock_buf_bytes: int = 1 << 20,
+    ):
+        if isinstance(address, (tuple, list)):
+            sock = socket.create_connection(tuple(address), timeout=connect_timeout)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        else:
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(connect_timeout)
+            sock.connect(address)
+        if sock_buf_bytes:
+            # response planes are window-sized; see ServiceServer on buffers
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, int(sock_buf_bytes))
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, int(sock_buf_bytes))
+        sock.settimeout(None)
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self._pending_lock = threading.Lock()
+        self._pending: dict[int, tuple[Future, object]] = {}
+        self._req_ids = itertools.count(1)
+        self._closed = False
+        self._catalog_cache = None
+        wire.send_frame(
+            sock, wire.KIND_HELLO, 0, {"version": wire.WIRE_VERSION, "qos": qos}
+        )
+        self._reader = threading.Thread(
+            target=self._read_loop, name="th5-wire-client-rx", daemon=True
+        )
+        self._reader.start()
+
+    # -- submission (the DataService surface) --------------------------------
+
+    def submit(self, client: str, request) -> "Future[ServiceResponse]":
+        """Send one request; the returned future completes when its
+        response frame arrives (admission rejections complete it with
+        :class:`~repro.service.broker.AdmissionError`)."""
+        meta, payload = wire.encode_request(client, request)  # raises on un-wireable
+        req_id = next(self._req_ids)
+        fut: "Future[ServiceResponse]" = Future()
+        with self._pending_lock:
+            if self._closed:
+                raise TH5Error("remote service connection closed")
+            self._pending[req_id] = (fut, request)
+        try:
+            with self._send_lock:
+                wire.send_frame(self._sock, wire.KIND_REQUEST, req_id, meta, payload)
+        except BaseException as e:
+            with self._pending_lock:
+                self._pending.pop(req_id, None)
+            raise TH5Error(f"wire send failed: {e}") from e
+        return fut
+
+    def request(self, client: str, request) -> ServiceResponse:
+        """Synchronous :meth:`submit` (broker-side errors re-raise here)."""
+        return self.submit(client, request).result()
+
+    def open_window_session(
+        self,
+        client: str,
+        dataset: str,
+        windows: Iterable[Sequence[int]] | None = None,
+        *,
+        max_rows: int | None = None,
+    ) -> LodWindowSession:
+        """Per-client LOD window playback, identical to the in-process
+        broker's — every gather crosses the wire as a WindowQuery /
+        HyperslabQuery."""
+        return LodWindowSession(self, client, dataset, windows, max_rows=max_rows)
+
+    def stats(self) -> ServiceStats:
+        """The broker's ``ServiceStats`` snapshot, via a
+        :class:`~repro.service.requests.StatsQuery` (answered inline
+        broker-side: works during overload, perturbs no counters)."""
+        return self.request("__stats__", StatsQuery()).value
+
+    def dataset_rows(self, dataset: str, *, client: str | None = None) -> int:
+        """Row count of one dataset, from a cached catalog (the single
+        CatalogQuery is attributed to ``client``)."""
+        cat = self._catalog_cache
+        if cat is None:
+            cat = self.request(client or "__catalog__", CatalogQuery(prefix="/")).value
+            self._catalog_cache = cat
+        for info in cat.datasets:
+            if info.path == dataset:
+                return int(info.shape[0]) if info.shape else 0
+        raise KeyError(f"no dataset {dataset!r} in remote catalog")
+
+    # -- response demultiplexing ---------------------------------------------
+
+    def _read_loop(self) -> None:
+        error: Exception | None = None
+        try:
+            while True:
+                frame = wire.recv_frame(self._sock)
+                if frame is None:
+                    break  # clean server close
+                self._complete(frame)
+        except Exception as e:  # wire/socket/connection-level failure
+            error = e if not self._closed else None
+        finally:
+            self._fail_pending(error)
+
+    def _complete(self, frame: wire.Frame) -> None:
+        if frame.kind == wire.KIND_ERROR and frame.req_id == 0:
+            # connection-level failure (bad HELLO, torn framing server-side):
+            # nothing specific to answer — every pending request is dead
+            raise wire.decode_error(frame.meta)
+        with self._pending_lock:
+            entry = self._pending.pop(frame.req_id, None)
+        if entry is None:
+            return  # response for a request we gave up on
+        fut, request = entry
+        if frame.kind == wire.KIND_OK:
+            meta = frame.meta
+            try:
+                value = wire.decode_value(meta["value"], frame.payload)
+            except Exception as e:
+                fut.set_exception(e)
+                return
+            fut.set_result(
+                ServiceResponse(
+                    value=value,
+                    client=meta.get("client", ""),
+                    request=request,
+                    queued_s=float(meta.get("queued_s", 0.0)),
+                    service_s=float(meta.get("service_s", 0.0)),
+                    chunk_hits=int(meta.get("chunk_hits", 0)),
+                    chunk_misses=int(meta.get("chunk_misses", 0)),
+                    nbytes=int(meta.get("nbytes", 0)),
+                )
+            )
+        elif frame.kind == wire.KIND_BUSY:
+            from .broker import AdmissionError  # deferred: broker imports sessions
+
+            fut.set_exception(
+                AdmissionError(
+                    frame.meta.get("message", "service queue full"),
+                    queue_depth=int(frame.meta.get("queue_depth", 0)),
+                    client=frame.meta.get("client"),
+                )
+            )
+        elif frame.kind == wire.KIND_ERROR:
+            fut.set_exception(wire.decode_error(frame.meta))
+        else:
+            fut.set_exception(wire.WireError(f"unexpected frame kind {frame.kind}"))
+
+    def _fail_pending(self, error: Exception | None) -> None:
+        with self._pending_lock:
+            self._closed = True
+            pending = list(self._pending.values())
+            self._pending.clear()
+        for fut, _req in pending:
+            fut.set_exception(
+                error or TH5Error("remote service connection closed with requests pending")
+            )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        with self._pending_lock:
+            self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._reader.join(timeout=10.0)
+        try:
+            self._sock.close()
+        except OSError:  # pragma: no cover
+            pass
+
+    def __enter__(self) -> "RemoteDataService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -79,6 +79,16 @@ class PingQuery:
 
 
 @dataclass(frozen=True)
+class StatsQuery:
+    """Service accounting snapshot request — answered with a
+    :class:`~repro.service.stats.ServiceStats` *inline at submit time*
+    (never queued, never accounted): observability must keep working while
+    the admission queue is full, and a stats poll must not perturb the
+    per-client traffic counters it reports.  This is how a remote client
+    (``client.py``) reads ``DataService.stats()`` over the wire."""
+
+
+@dataclass(frozen=True)
 class SteeringRequest:
     """Branch / rollback command against the run's TRS lineage.
 
@@ -114,7 +124,9 @@ class SteeringRequest:
         return SteeringRequest(op="lineage")
 
 
-Request = HyperslabQuery | WindowQuery | CatalogQuery | PingQuery | SteeringRequest
+Request = (
+    HyperslabQuery | WindowQuery | CatalogQuery | PingQuery | StatsQuery | SteeringRequest
+)
 
 
 @dataclass

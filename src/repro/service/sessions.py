@@ -57,7 +57,11 @@ class LodWindowSession:
         self.client = str(client)
         self.dataset = str(dataset)
         self.max_rows = max_rows
-        self._n_rows = service.file.meta(self.dataset).n_rows
+        # dataset_rows is the transport-neutral metadata peek: in-process it
+        # reads the shared file's meta; a RemoteDataService answers it from
+        # a cached catalog — which is what lets this class run unmodified
+        # against either broker.
+        self._n_rows = service.dataset_rows(self.dataset, client=self.client)
         self._windows = iter(windows) if windows is not None else None
         self._pending: "Future[ServiceResponse] | None" = None
         self._pending_rows: tuple[int, ...] | None = None
@@ -110,7 +114,8 @@ class LodWindowSession:
             rows = self._rows_of(next(self._windows))  # StopIteration ends playback
             fut = self._submit(rows)  # sync half: admission errors surface
         else:
-            fut, self._pending = self._pending, None
+            fut, rows = self._pending, self._pending_rows
+            self._pending = self._pending_rows = None
         # prefetch the following window best-effort BEFORE blocking on this
         # one; a full queue degrades to synchronous (counted, retried next)
         nxt = next(self._windows, None)
@@ -118,11 +123,20 @@ class LodWindowSession:
             rows_nxt = self._rows_of(nxt)
             try:
                 self._pending = self._submit(rows_nxt)
+                self._pending_rows = rows_nxt
             except AdmissionError:
                 self.prefetch_rejections += 1
                 self._windows = _chain_front(rows_nxt, self._windows)
         self.windows_served += 1
-        return fut.result().value
+        try:
+            return fut.result().value
+        except AdmissionError:
+            # A remote broker can only reject asynchronously (the BUSY frame
+            # lands in the future, after submit already returned) — same
+            # degrade contract as the sync half: count it, gather this
+            # window synchronously instead of failing playback.
+            self.prefetch_rejections += 1
+            return self.service.request(self.client, WindowQuery(self.dataset, rows)).value
 
     def __iter__(self) -> Iterator[np.ndarray]:
         while True:

@@ -67,7 +67,11 @@ class ClientStats:
     the shared-cache probes attributed to this client's gathers (so N
     viewers of one run can each see their own hit rate against the ONE
     shared cache); ``p50_ms`` / ``p99_ms`` are this client's end-to-end
-    request latencies.
+    request latencies.  ``qos_class`` is the client's scheduling class
+    (``DataService.set_client_class``); ``throttled`` counts scheduler
+    passes that skipped this client because its token bucket was in debt
+    (advisory — a measure of how hard the rate limit is biting, not a
+    request count).
     """
 
     requests: int = 0
@@ -75,6 +79,8 @@ class ClientStats:
     rejected: int = 0
     chunk_hits: int = 0
     chunk_misses: int = 0
+    qos_class: str = "interactive"
+    throttled: int = 0
     p50_ms: float = 0.0
     p99_ms: float = 0.0
 
@@ -97,8 +103,12 @@ class ServiceStats:
     logical payload bytes returned; ``requests_by_type`` the per-request-
     class totals; ``p50_ms`` / ``p99_ms`` / ``mean_ms`` end-to-end request
     latency percentiles over the reservoir; ``cache`` the SHARED chunk
-    cache's counters (one cache per file, all clients); ``clients`` the
-    per-client attribution (:class:`ClientStats`).
+    cache's counters (one cache per file, all clients); ``qos`` the
+    per-class QoS aggregates (one entry per configured
+    :class:`~repro.service.broker.QosClass`: ``weight``,
+    ``rate_bytes_per_s``, ``clients``, ``requests``, ``bytes_served``,
+    ``throttled``); ``clients`` the per-client attribution
+    (:class:`ClientStats`).
     """
 
     queue_depth: int = 0
@@ -114,6 +124,7 @@ class ServiceStats:
     p99_ms: float = 0.0
     mean_ms: float = 0.0
     cache: dict[str, Any] = field(default_factory=dict)
+    qos: dict[str, Any] = field(default_factory=dict)
     clients: dict[str, ClientStats] = field(default_factory=dict)
 
     @property

@@ -1,0 +1,359 @@
+"""ServiceServer — the socket front of a :class:`~repro.service.broker.
+DataService`.
+
+The broker is the policy layer (admission, fairness/QoS, shared cache);
+this module only moves its frames: an accept loop hands each connection to
+a reader thread that decodes :data:`~repro.service.wire.KIND_REQUEST`
+frames and feeds them straight into the *existing* admission queue via
+``DataService.submit``.  Everything the broker already guarantees therefore
+holds for remote clients unchanged:
+
+* **backpressure is typed** — a full queue raises ``AdmissionError`` at
+  submit time, which the connection answers *immediately* with a
+  :data:`~repro.service.wire.KIND_BUSY` frame carrying the queue depth and
+  client id (the client re-raises a faithful ``AdmissionError``);
+* **errors survive the hop** — request failures become
+  :data:`~repro.service.wire.KIND_ERROR` frames carrying the exception
+  class and message, so a corrupt chunk still *names* the offending chunk
+  on the far side of the socket;
+* **pipelining without head-of-line blocking** — responses are sent as
+  their futures complete (possibly out of request order; the echoed
+  ``req_id`` re-associates them): inline on the completing worker when the
+  wire is free, else by a dedicated per-connection sender thread.  A
+  worker can therefore spend time *transferring* to a live socket, but can
+  never be wedged by a dead or stalled one: every connection socket
+  carries a send timeout (``ServiceServer(send_timeout_s=...)``), and a
+  peer that stops reading for that long is disconnected (slow-consumer
+  eviction — the standard broker policy) and its worker freed.
+
+Each connection opens with a :data:`~repro.service.wire.KIND_HELLO` frame
+declaring the QoS class for the clients it carries
+(``DataService.set_client_class`` on first sight).  The server binds a
+Unix-domain socket (address = path) or TCP (address = ``(host, port)``;
+port 0 picks an ephemeral port, see :attr:`ServiceServer.address`).
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import socket
+import struct
+import threading
+
+from . import wire
+from .broker import AdmissionError, DataService
+
+_SENTINEL = None  # sender-queue shutdown marker
+
+
+class _Conn:
+    """One accepted connection: reader thread (frames → broker) + sender
+    thread (completed futures → frames)."""
+
+    def __init__(self, server: "ServiceServer", sock: socket.socket, name: str):
+        self.server = server
+        self.sock = sock
+        self.out: "queue.SimpleQueue[tuple | None]" = queue.SimpleQueue()
+        self._wlock = threading.Lock()  # one frame on the wire at a time
+        self._dead = False
+        self.qos = server.service.config.default_class
+        self._known_clients: set[str] = set()
+        self.reader = threading.Thread(
+            target=self._read_loop, name=f"{name}-rx", daemon=True
+        )
+        self.sender = threading.Thread(
+            target=self._send_loop, name=f"{name}-tx", daemon=True
+        )
+
+    def start(self) -> None:
+        """Begin serving.  Separate from construction so the server can
+        register the connection FIRST — otherwise an immediately-dying
+        peer's cleanup (``_forget``) could run before the registration and
+        leak the dead connection into the registry forever."""
+        self.reader.start()
+        self.sender.start()
+
+    # -- reader half ---------------------------------------------------------
+
+    def _read_loop(self) -> None:
+        svc = self.server.service
+        try:
+            frame = wire.recv_frame(self.sock)
+            if frame is None:
+                return
+            if frame.kind != wire.KIND_HELLO:
+                raise wire.WireError("expected HELLO as the first frame")
+            if frame.meta.get("version") != wire.WIRE_VERSION:
+                raise wire.WireError(
+                    f"client wire version {frame.meta.get('version')} !="
+                    f" {wire.WIRE_VERSION}"
+                )
+            qos = frame.meta.get("qos")
+            if qos is not None:
+                try:
+                    svc.config.qos_class(qos)  # validate before accepting
+                except KeyError:
+                    raise wire.WireError(f"unknown QoS class {qos!r}") from None
+                self.qos = str(qos)
+            while True:
+                frame = wire.recv_frame(self.sock)
+                if frame is None:
+                    return  # clean goodbye
+                if frame.kind != wire.KIND_REQUEST:
+                    raise wire.WireError(f"unexpected frame kind {frame.kind}")
+                self._dispatch(frame)
+        except (wire.WireDisconnect, ConnectionError, BrokenPipeError):
+            return  # peer vanished: nothing to answer
+        except wire.WireError as e:
+            # framing no longer trustworthy: best-effort error frame, close
+            self._put(wire.KIND_ERROR, 0, wire.encode_error(e), None)
+        except OSError:
+            return  # socket torn down under us (server close)
+        finally:
+            self.out.put(_SENTINEL)
+            self.server._forget(self)
+
+    def _dispatch(self, frame: wire.Frame) -> None:
+        svc = self.server.service
+        req_id = frame.req_id
+        try:
+            client, request = wire.decode_request(frame.meta, frame.payload)
+        except (KeyError, ValueError, TypeError) as e:
+            self._put(wire.KIND_ERROR, req_id, wire.encode_error(e), None)
+            return
+        if client not in self._known_clients:
+            self._known_clients.add(client)
+            svc.set_client_class(client, self.qos)
+        try:
+            fut = svc.submit(client, request)
+        except AdmissionError as e:
+            self._put(
+                wire.KIND_BUSY,
+                req_id,
+                {
+                    "message": str(e),
+                    "queue_depth": e.queue_depth,
+                    "client": e.client,
+                    "max_queue": svc.config.max_queue,
+                },
+                None,
+            )
+            return
+        except Exception as e:  # e.g. service closed
+            self._put(wire.KIND_ERROR, req_id, wire.encode_error(e), None)
+            return
+        fut.add_done_callback(lambda f, rid=req_id, cid=client: self._complete(rid, cid, f))
+
+    def _complete(self, req_id: int, client: str, fut) -> None:
+        """Future→frame, on whichever thread completed the future (a
+        service worker).  Fast path: if the wire is uncontended, send
+        right here and skip the sender-thread handoff (worth ~a thread
+        wakeup per response on a GIL-bound box); a contended wire — or a
+        peer slow enough to back it up — falls back to the queue so
+        workers never line up behind one connection's socket."""
+        exc = fut.exception()
+        if exc is not None:
+            self._put(wire.KIND_ERROR, req_id, wire.encode_error(exc), None)
+            return
+        resp = fut.result()
+        try:
+            desc, payload = wire.encode_value(resp.value)
+        except TypeError as e:  # pragma: no cover - un-wireable value type
+            self._put(wire.KIND_ERROR, req_id, wire.encode_error(e), None)
+            return
+        self._put(wire.KIND_OK, req_id, wire.response_meta(client, resp, desc), payload)
+
+    def _put(self, kind: int, req_id: int, meta: dict, payload) -> None:
+        if self._wlock.acquire(blocking=False):
+            try:
+                if not self._dead:
+                    wire.send_frame(self.sock, kind, req_id, meta, payload)
+            except (ConnectionError, BrokenPipeError, OSError):
+                # peer gone, or SO_SNDTIMEO fired (peer stopped reading): a
+                # frame may be half-written, so the stream is dead either
+                # way — tear it down and wake the reader
+                self._kill_locked()
+            finally:
+                self._wlock.release()
+        else:
+            self.out.put((kind, req_id, meta, payload))
+
+    def _kill_locked(self) -> None:
+        """Mark the stream unusable (caller holds ``_wlock``) and shut the
+        socket down so the reader unblocks and runs the cleanup path.  The
+        fd itself is closed only by the sender thread's exit (under
+        ``_wlock``), never concurrently with a send — a close racing a
+        late fast-path send could otherwise write a stale frame into an
+        unrelated connection that reused the fd number."""
+        self._dead = True
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+
+    # -- sender half ---------------------------------------------------------
+
+    def _send_loop(self) -> None:
+        try:
+            while True:
+                item = self.out.get()
+                if item is _SENTINEL:
+                    return
+                kind, req_id, meta, payload = item
+                with self._wlock:
+                    if self._dead:
+                        continue
+                    try:
+                        wire.send_frame(self.sock, kind, req_id, meta, payload)
+                    except (ConnectionError, BrokenPipeError, OSError):
+                        self._kill_locked()  # keep draining the queue
+        finally:
+            with self._wlock:
+                self._dead = True
+                try:
+                    self.sock.close()
+                except OSError:  # pragma: no cover
+                    pass
+
+    def shutdown(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+
+    def join(self, timeout: float | None = None) -> None:
+        self.reader.join(timeout)
+        self.sender.join(timeout)
+
+
+class ServiceServer:
+    """Accept loop serving one :class:`DataService` over sockets.
+
+    ``address`` is a filesystem path (Unix-domain socket) or a
+    ``(host, port)`` tuple (TCP; port 0 = ephemeral).  The resolved address
+    — with the real port — is :attr:`address`; hand it to
+    :class:`~repro.service.client.RemoteDataService`.  Closing the server
+    closes its connections but NOT the service (the owner does that)."""
+
+    def __init__(
+        self,
+        service: DataService,
+        address: str | tuple[str, int],
+        *,
+        backlog: int = 64,
+        sock_buf_bytes: int = 1 << 20,
+        send_timeout_s: float = 20.0,
+    ):
+        self.service = service
+        self._sock_buf = int(sock_buf_bytes)
+        self._send_timeout = float(send_timeout_s)
+        self._unix_path: str | None = None
+        if isinstance(address, (str, os.PathLike)):
+            path = os.fspath(address)
+            if os.path.exists(path):
+                os.unlink(path)  # stale socket from a previous run
+            lsock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            lsock.bind(path)
+            self._unix_path = path
+            self.address: str | tuple[str, int] = path
+        else:
+            host, port = address
+            lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            lsock.bind((host, int(port)))
+            self.address = lsock.getsockname()[:2]
+        lsock.listen(backlog)
+        self._lsock = lsock
+        self._lock = threading.Lock()
+        self._conns: set[_Conn] = set()
+        self._closed = False
+        self._n_accepted = 0
+        self._acceptor = threading.Thread(
+            target=self._accept_loop, name="th5-wire-accept", daemon=True
+        )
+        self._acceptor.start()
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _peer = self._lsock.accept()
+            except OSError:
+                return  # listener closed
+            if sock.family == socket.AF_INET:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if self._sock_buf:
+                # one LOD window is commonly larger than the default socket
+                # buffer; deeper buffers keep the payload plane moving while
+                # the GIL is elsewhere (kernel clamps to its own maximum)
+                sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, self._sock_buf)
+                sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, self._sock_buf)
+            if self._send_timeout > 0:
+                # slow-consumer eviction: a peer that stops reading for this
+                # long gets disconnected instead of wedging the thread
+                # (worker or sender) that is mid-frame on its socket
+                sec = int(self._send_timeout)
+                usec = int((self._send_timeout - sec) * 1e6)
+                sock.setsockopt(
+                    socket.SOL_SOCKET, socket.SO_SNDTIMEO,
+                    struct.pack("@ll", sec, usec),
+                )
+            with self._lock:
+                if self._closed:
+                    sock.close()
+                    return
+                self._n_accepted += 1
+                conn = _Conn(self, sock, f"th5-wire-{self._n_accepted}")
+                self._conns.add(conn)  # registered BEFORE its threads run
+            conn.start()
+
+    def _forget(self, conn: _Conn) -> None:
+        with self._lock:
+            self._conns.discard(conn)
+
+    @property
+    def n_connections(self) -> int:
+        with self._lock:
+            return len(self._conns)
+
+    def close(self) -> None:
+        """Stop accepting, tear down live connections, join their threads.
+        In-flight requests still complete inside the service; their
+        responses are dropped with the sockets."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            conns = list(self._conns)
+        try:
+            self._lsock.close()
+        except OSError:  # pragma: no cover
+            pass
+        for c in conns:
+            c.shutdown()
+        for c in conns:
+            c.join(timeout=10.0)
+        self._acceptor.join(timeout=10.0)
+        if self._unix_path and os.path.exists(self._unix_path):
+            try:
+                os.unlink(self._unix_path)
+            except OSError:  # pragma: no cover
+                pass
+
+    def __enter__(self) -> "ServiceServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve(path: str, address: str | tuple[str, int], config=None) -> tuple[DataService, ServiceServer]:
+    """Convenience: open a broker over ``path`` and serve it at
+    ``address``.  Returns ``(service, server)`` — close the server first,
+    then the service."""
+    svc = DataService(path, config)
+    try:
+        return svc, ServiceServer(svc, address)
+    except BaseException:
+        svc.close()
+        raise

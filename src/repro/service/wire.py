@@ -1,0 +1,443 @@
+"""Wire protocol of the TH5 data service — framing, request/value codecs.
+
+The broker (`broker.py`) is in-process; this module defines the byte-level
+protocol that carries its typed requests over a TCP or Unix-domain socket
+(`transport.py` serves it, `client.py` speaks it).  Design constraints, in
+order:
+
+* **zero-copy bulk planes** — a response array is never serialized through
+  a text/object encoder: the frame is a fixed ``struct`` header, a small
+  JSON metadata blob (stdlib only — no msgpack), and a *raw payload plane*
+  (the array's own buffer, handed to ``socket.sendmsg`` as one more iovec;
+  received with ``recv_into`` straight into a fresh ``bytearray`` that
+  becomes the client's writable ndarray via ``np.frombuffer``);
+* **pipelining** — every request carries a client-assigned ``req_id``
+  echoed in its response, so a connection can have many requests in
+  flight (the LOD session's prefetch) and responses may complete out of
+  order;
+* **typed backpressure** — a full admission queue is a first-class
+  :data:`KIND_BUSY` reply carrying the queue depth and client id (the
+  :class:`~repro.service.broker.AdmissionError` contract), not a socket
+  error; service-side failures travel as :data:`KIND_ERROR` frames whose
+  message is preserved end-to-end (a corrupt chunk still *names* the
+  offending chunk on the client).
+
+Frame layout (all little-endian, see ``docs/SERVICE.md``)::
+
+    offset  size  field
+    0       4     magic  b"TH5W"
+    4       1     protocol version (WIRE_VERSION)
+    5       1     kind   (KIND_* below)
+    6       2     flags  (reserved, 0)
+    8       8     req_id (client-assigned; echoed in the response; 0 = none)
+    16      4     meta_len     — JSON metadata bytes
+    20      8     payload_len  — raw payload plane bytes
+    28      ...   meta_len bytes of UTF-8 JSON, then payload_len raw bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+from dataclasses import dataclass
+from typing import Any
+
+import numpy as np
+
+from repro.core.container import CorruptFileError, TH5Error
+
+from .catalog import DatasetInfo, SnapshotCatalog
+from .requests import (
+    CatalogQuery,
+    HyperslabQuery,
+    PingQuery,
+    ServiceResponse,
+    StatsQuery,
+    SteeringRequest,
+    WindowQuery,
+)
+from .stats import ClientStats, ServiceStats
+from .steer import SteeringResult
+
+MAGIC = b"TH5W"
+WIRE_VERSION = 1
+
+# frame kinds (the protocol's status codes — every frame is one of these)
+KIND_HELLO = 1  # client → server: protocol version + QoS class for this conn
+KIND_REQUEST = 2  # client → server: one typed request
+KIND_OK = 3  # server → client: completed response (payload plane = array)
+KIND_BUSY = 4  # server → client: admission queue full (queue_depth, client)
+KIND_ERROR = 5  # server → client: request failed (etype + message end-to-end)
+
+HEADER_FMT = "<4sBBHQIQ"
+HEADER_SIZE = struct.calcsize(HEADER_FMT)  # 28 bytes
+
+# sanity caps: a corrupt/hostile header fails fast instead of allocating.
+# The payload cap bounds one response/request plane — larger reads are
+# windowed by the clients anyway (LOD sessions), and a desynchronized
+# stream claiming a multi-GiB frame must die with WireError, not OOM the
+# process serving every other connection.
+MAX_META_BYTES = 64 << 20
+MAX_PAYLOAD_BYTES = 1 << 30
+
+
+class WireError(TH5Error):
+    """Protocol-level failure (bad magic/version, oversized frame, torn
+    stream).  Connection-fatal: the peer's framing can no longer be
+    trusted."""
+
+
+class WireDisconnect(WireError):
+    """The peer vanished mid-frame (EOF with a partial header/meta/payload
+    outstanding).  A *clean* EOF between frames is not an error — it is
+    reported as ``recv_frame(...) is None``."""
+
+
+@dataclass(frozen=True)
+class Frame:
+    """One decoded frame: ``payload`` is a memoryview over a fresh, owned
+    ``bytearray`` (safe to wrap as a writable ndarray with zero copies)."""
+
+    kind: int
+    req_id: int
+    meta: dict
+    payload: memoryview
+
+
+# -- low-level socket I/O ------------------------------------------------------
+
+
+def _as_byte_view(buf: Any) -> memoryview:
+    view = memoryview(buf)
+    if view.ndim != 1 or view.itemsize != 1:
+        view = view.cast("B")
+    return view
+
+
+def sendmsg_all(sock, parts) -> int:
+    """Send every part (bytes-like, in order) with ``sendmsg`` — one
+    syscall per full send in the common case, resuming on partial sends
+    without ever concatenating (the payload plane is not copied)."""
+    views = [_as_byte_view(p) for p in parts if len(p)]
+    total = sum(len(v) for v in views)
+    while views:
+        try:
+            n = sock.sendmsg(views)
+        except InterruptedError:  # pragma: no cover - signal-dependent
+            continue
+        while views and n >= len(views[0]):
+            n -= len(views[0])
+            views.pop(0)
+        if n and views:
+            views[0] = views[0][n:]
+    return total
+
+
+def recv_exact(sock, view: memoryview, *, started: bool = True) -> bool:
+    """Fill ``view`` completely from the socket, resuming across however
+    many partial ``recv_into`` returns the kernel decides to give us.
+
+    Returns False on EOF *before the first byte* when ``started`` is False
+    (a clean between-frames close); raises :class:`WireDisconnect` on EOF
+    anywhere else (a torn frame).
+    """
+    got = 0
+    n_bytes = len(view)
+    while got < n_bytes:
+        n = sock.recv_into(view[got:])
+        if n == 0:
+            if got == 0 and not started:
+                return False
+            raise WireDisconnect(
+                f"peer closed mid-frame ({got}/{n_bytes} bytes received)"
+            )
+        got += n
+    return True
+
+
+def send_frame(sock, kind: int, req_id: int, meta: dict, payload=None) -> int:
+    """Pack and send one frame (header + JSON meta + raw payload plane)."""
+    meta_raw = json.dumps(meta, separators=(",", ":")).encode("utf-8")
+    pay = _as_byte_view(payload) if payload is not None else b""
+    header = struct.pack(
+        HEADER_FMT, MAGIC, WIRE_VERSION, kind, 0, req_id, len(meta_raw), len(pay)
+    )
+    return sendmsg_all(sock, (header, meta_raw, pay))
+
+
+def recv_frame(sock) -> Frame | None:
+    """Receive one frame; ``None`` on a clean EOF between frames.
+
+    Torn streams (EOF mid-frame), bad magic/version and frames beyond the
+    sanity caps raise :class:`WireError` — the connection is unusable."""
+    header = bytearray(HEADER_SIZE)
+    if not recv_exact(sock, memoryview(header), started=False):
+        return None
+    magic, version, kind, _flags, req_id, meta_len, payload_len = struct.unpack(
+        HEADER_FMT, header
+    )
+    if magic != MAGIC:
+        raise WireError(f"bad frame magic {bytes(magic)!r}")
+    if version != WIRE_VERSION:
+        raise WireError(f"unsupported wire version {version}")
+    if meta_len > MAX_META_BYTES or payload_len > MAX_PAYLOAD_BYTES:
+        raise WireError(f"frame too large (meta {meta_len}, payload {payload_len})")
+    meta_raw = bytearray(meta_len)
+    if meta_len:
+        recv_exact(sock, memoryview(meta_raw))
+    payload = bytearray(payload_len)
+    if payload_len:
+        recv_exact(sock, memoryview(payload))
+    try:
+        meta = json.loads(meta_raw.decode("utf-8")) if meta_len else {}
+    except ValueError as e:
+        raise WireError(f"undecodable frame metadata: {e}") from None
+    return Frame(kind=kind, req_id=req_id, meta=meta, payload=memoryview(payload))
+
+
+# -- request codec -------------------------------------------------------------
+#
+# Requests are small: everything rides in the JSON meta except WindowQuery's
+# row selection, which travels as a raw little-endian int64 payload plane
+# (LOD windows are thousands of rows; JSON-encoding them would dominate the
+# request cost).
+
+
+def encode_request(client: str, req) -> tuple[dict, Any]:
+    """→ ``(meta, payload)``.  Raises TypeError for requests that cannot
+    cross a process boundary (e.g. a gated PingQuery)."""
+    meta: dict[str, Any] = {"client": str(client), "type": type(req).__name__}
+    payload: Any = None
+    if isinstance(req, HyperslabQuery):
+        meta.update(
+            dataset=req.dataset,
+            row_start=int(req.row_start),
+            n_rows=int(req.n_rows),
+            cols=[int(req.cols[0]), int(req.cols[1])] if req.cols is not None else None,
+            verify=bool(req.verify),
+        )
+    elif isinstance(req, WindowQuery):
+        meta.update(dataset=req.dataset)
+        payload = np.asarray(req.rows, dtype="<i8")
+    elif isinstance(req, CatalogQuery):
+        meta.update(prefix=req.prefix)
+    elif isinstance(req, PingQuery):
+        if req.gate is not None:
+            raise TypeError("a gated PingQuery cannot cross the wire")
+        meta.update(delay_s=float(req.delay_s))
+    elif isinstance(req, StatsQuery):
+        pass
+    elif isinstance(req, SteeringRequest):
+        meta.update(
+            op=req.op,
+            at_step=int(req.at_step) if req.at_step is not None else None,
+            child_path=req.child_path,
+            overlay=[[k, v] for k, v in req.overlay],
+        )
+    else:
+        raise TypeError(f"request type {type(req).__name__} is not wire-encodable")
+    return meta, payload
+
+
+def decode_request(meta: dict, payload: memoryview) -> tuple[str, Any]:
+    """→ ``(client, request)`` — the exact dataclass `encode_request` saw."""
+    client = str(meta["client"])
+    rtype = meta.get("type")
+    if rtype == "HyperslabQuery":
+        cols = meta.get("cols")
+        return client, HyperslabQuery(
+            dataset=meta["dataset"],
+            row_start=int(meta["row_start"]),
+            n_rows=int(meta["n_rows"]),
+            cols=(int(cols[0]), int(cols[1])) if cols is not None else None,
+            verify=bool(meta.get("verify", False)),
+        )
+    if rtype == "WindowQuery":
+        rows = tuple(np.frombuffer(payload, dtype="<i8").tolist())
+        return client, WindowQuery(dataset=meta["dataset"], rows=rows)
+    if rtype == "CatalogQuery":
+        return client, CatalogQuery(prefix=meta.get("prefix", "/simulation"))
+    if rtype == "PingQuery":
+        return client, PingQuery(delay_s=float(meta.get("delay_s", 0.0)))
+    if rtype == "StatsQuery":
+        return client, StatsQuery()
+    if rtype == "SteeringRequest":
+        at_step = meta.get("at_step")
+        return client, SteeringRequest(
+            op=meta["op"],
+            at_step=int(at_step) if at_step is not None else None,
+            child_path=meta.get("child_path"),
+            overlay=tuple((k, v) for k, v in meta.get("overlay", [])),
+        )
+    raise WireError(f"unknown request type {rtype!r} on the wire")
+
+
+# -- value codec ---------------------------------------------------------------
+#
+# Response values: the ndarray case is the hot path and the only one with a
+# payload plane; catalog / steering / stats results are metadata-sized and
+# ride the JSON blob.
+
+
+def encode_value(value) -> tuple[dict, Any]:
+    """→ ``(descriptor, payload)`` for a ServiceResponse value."""
+    if value is None:
+        return {"kind": "none"}, None
+    if isinstance(value, np.ndarray):
+        arr = np.ascontiguousarray(value)
+        return {"kind": "ndarray", "dtype": arr.dtype.str, "shape": list(arr.shape)}, arr
+    if isinstance(value, SnapshotCatalog):
+        return {"kind": "catalog", "catalog": _catalog_to_json(value)}, None
+    if isinstance(value, SteeringResult):
+        return {"kind": "steering", "steering": _steering_to_json(value)}, None
+    if isinstance(value, ServiceStats):
+        return {"kind": "stats", "stats": _stats_to_json(value)}, None
+    raise TypeError(f"response value type {type(value).__name__} is not wire-encodable")
+
+
+def decode_value(desc: dict, payload: memoryview):
+    kind = desc.get("kind")
+    if kind == "none":
+        return None
+    if kind == "ndarray":
+        # payload is a memoryview over an owned bytearray: the resulting
+        # array is writable and shares that buffer (zero further copies)
+        return np.frombuffer(payload, dtype=np.dtype(desc["dtype"])).reshape(
+            desc["shape"]
+        )
+    if kind == "catalog":
+        return _catalog_from_json(desc["catalog"])
+    if kind == "steering":
+        return _steering_from_json(desc["steering"])
+    if kind == "stats":
+        return _stats_from_json(desc["stats"])
+    raise WireError(f"unknown response value kind {kind!r}")
+
+
+def _catalog_to_json(cat: SnapshotCatalog) -> dict:
+    return {
+        "file_path": cat.file_path,
+        "generation": int(cat.generation),
+        "steps": [int(s) for s in cat.steps],
+        "leaves_by_step": {str(s): list(v) for s, v in cat.leaves_by_step.items()},
+        "datasets": [
+            {
+                "path": d.path,
+                "dtype": d.dtype,
+                "shape": list(d.shape),
+                "codec": d.codec,
+                "chunk_rows": d.chunk_rows,
+                "n_chunks": int(d.n_chunks),
+                "nbytes": int(d.nbytes),
+                "stored_nbytes": int(d.stored_nbytes),
+            }
+            for d in cat.datasets
+        ],
+        "lineage": cat.lineage,
+    }
+
+
+def _catalog_from_json(d: dict) -> SnapshotCatalog:
+    return SnapshotCatalog(
+        file_path=d["file_path"],
+        generation=int(d["generation"]),
+        steps=tuple(int(s) for s in d["steps"]),
+        leaves_by_step={int(s): tuple(v) for s, v in d["leaves_by_step"].items()},
+        datasets=tuple(
+            DatasetInfo(
+                path=i["path"],
+                dtype=i["dtype"],
+                shape=tuple(i["shape"]),
+                codec=i["codec"],
+                chunk_rows=i["chunk_rows"],
+                n_chunks=int(i["n_chunks"]),
+                nbytes=int(i["nbytes"]),
+                stored_nbytes=int(i["stored_nbytes"]),
+            )
+            for i in d["datasets"]
+        ),
+        lineage=d.get("lineage") or {},
+    )
+
+
+def _steering_to_json(res: SteeringResult) -> dict:
+    return {
+        "op": res.op,
+        "path": res.path,
+        "child_path": res.child_path,
+        "branch_step": res.branch_step,
+        "steps": [int(s) for s in res.steps],
+        "lineage": [[p, s] for p, s in res.lineage],
+    }
+
+
+def _steering_from_json(d: dict) -> SteeringResult:
+    return SteeringResult(
+        op=d["op"],
+        path=d["path"],
+        child_path=d.get("child_path"),
+        branch_step=d.get("branch_step"),
+        steps=tuple(int(s) for s in d["steps"]),
+        lineage=tuple((p, s) for p, s in d["lineage"]),
+    )
+
+
+def _stats_to_json(st: ServiceStats) -> dict:
+    # asdict recurses into the nested ClientStats, so every field of both
+    # dataclasses crosses the wire automatically — a field added to
+    # stats.py can never be silently dropped by a hand-written mirror
+    return dataclasses.asdict(st)
+
+
+def _stats_from_json(d: dict) -> ServiceStats:
+    d = dict(d)
+    d["clients"] = {cid: ClientStats(**cs) for cid, cs in d.get("clients", {}).items()}
+    return ServiceStats(**d)
+
+
+# -- error codec ---------------------------------------------------------------
+#
+# KIND_ERROR frames carry the exception class name and message; the client
+# re-raises the closest matching class so `except CorruptFileError` works
+# identically against a remote service — and the message (which names the
+# offending chunk for every chunked-read integrity failure) survives intact.
+
+_ERROR_TYPES: dict[str, type] = {
+    "CorruptFileError": CorruptFileError,
+    "TH5Error": TH5Error,
+    "WireError": WireError,
+    "ValueError": ValueError,
+    "TypeError": TypeError,
+    "KeyError": KeyError,
+    "RuntimeError": RuntimeError,
+    "OSError": OSError,
+}
+
+
+def encode_error(exc: BaseException) -> dict:
+    return {"etype": type(exc).__name__, "message": str(exc)}
+
+
+def decode_error(meta: dict) -> Exception:
+    etype = meta.get("etype", "TH5Error")
+    message = meta.get("message", "")
+    cls = _ERROR_TYPES.get(etype)
+    if cls is None:
+        return TH5Error(f"[{etype}] {message}")
+    return cls(message)
+
+
+def response_meta(client: str, resp: ServiceResponse, desc: dict) -> dict:
+    """The OK-frame metadata: service-side accounting + the value
+    descriptor (the request itself is not echoed — the client kept it,
+    keyed by req_id)."""
+    return {
+        "client": client,
+        "queued_s": resp.queued_s,
+        "service_s": resp.service_s,
+        "chunk_hits": resp.chunk_hits,
+        "chunk_misses": resp.chunk_misses,
+        "nbytes": resp.nbytes,
+        "value": desc,
+    }

@@ -24,7 +24,9 @@ from repro.service import (
     DataService,
     HyperslabQuery,
     PingQuery,
+    QosClass,
     ServiceConfig,
+    StatsQuery,
     SteeringRequest,
     WindowQuery,
 )
@@ -198,6 +200,7 @@ def test_admission_rejects_when_queue_full(run_file):
                 for _ in range(3):  # queue holds 2: the 3rd must reject
                     queued.append(svc.submit("greedy", PingQuery()))
             assert ei.value.queue_depth == 2
+            assert ei.value.client == "greedy"  # the BUSY reply's "why"
             st = svc.stats()
             assert st.rejected >= 1
             assert st.clients["greedy"].rejected >= 1
@@ -232,6 +235,148 @@ def test_fair_scheduling_round_robin(run_file):
     # b entered the rotation with a's backlog already queued: it must be
     # served within the first two completions, not after all 8 of a's
     assert "b" in order[:2], order
+
+
+# -- QoS: weights + token-bucket rate limiting ---------------------------------
+
+
+def test_bulk_client_cannot_starve_interactive(run_file):
+    """The QoS starvation contract: with one gated worker, a bulk client's
+    12-deep backlog ahead of an interactive client's 3 requests must not
+    delay them — weight 4 vs 1 serves all interactive work within the
+    first few completions."""
+    path, _, _ = run_file
+    gate = threading.Event()
+    order = []
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=64)) as svc:
+        svc.set_client_class("replayer", "bulk")
+        svc.set_client_class("viewer", "interactive")
+        try:
+            blocker = svc.submit("replayer", PingQuery(gate=gate))
+            backlog = [svc.submit("replayer", PingQuery()) for _ in range(12)]
+            quick = [svc.submit("viewer", PingQuery()) for _ in range(3)]
+            for fut, tag in [(f, "bulk") for f in backlog] + [(f, "inter") for f in quick]:
+                fut.add_done_callback(lambda _f, t=tag: order.append(t))
+        finally:
+            gate.set()
+        for f in backlog + quick + [blocker]:
+            f.result(timeout=30)
+        st = svc.stats()
+    # all 3 interactive requests inside the first 5 completions: the bulk
+    # backlog cannot monopolize the worker (weight 4 vs 1)
+    assert order.count("inter") == 3
+    assert [t for t in order[:5]].count("inter") == 3, order
+    assert st.clients["viewer"].qos_class == "interactive"
+    assert st.clients["replayer"].qos_class == "bulk"
+    assert st.qos["bulk"]["requests"] == 13
+
+
+def test_equal_weights_still_round_robin(run_file):
+    """Two clients of the SAME class alternate exactly (the PR-4 fairness
+    behaviour is the degenerate case of weighted virtual time)."""
+    path, _, _ = run_file
+    gate = threading.Event()
+    order = []
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=64)) as svc:
+        try:
+            blocker = svc.submit("a", PingQuery(gate=gate))
+            futs = [svc.submit("a", PingQuery()) for _ in range(4)]
+            futs += [svc.submit("b", PingQuery()) for _ in range(4)]
+            for i, f in enumerate(futs):
+                f.add_done_callback(lambda _f, t="ab"[i // 4]: order.append(t))
+        finally:
+            gate.set()
+        for f in futs + [blocker]:
+            f.result(timeout=30)
+    assert order == ["b", "a"] * 4 or order == ["a", "b"] * 4, order
+
+
+def test_token_bucket_rate_limits_bulk_but_drains_on_close(run_file):
+    """A rate-limited bulk client: its first (large) read empties the
+    bucket, so its queued follow-up is DEFERRED — interactive traffic
+    submitted later still flows — and close() drains it regardless."""
+    path, u, _ = run_file
+    cfg = ServiceConfig(
+        n_workers=2,
+        qos_classes=(
+            QosClass("interactive", weight=4),
+            # 100 B/s with a 1-byte burst: one response puts the bucket
+            # ~128 KB in debt — it cannot refill within this test's lifetime
+            QosClass("bulk", weight=1, rate_bytes_per_s=100.0, burst_bytes=1),
+        ),
+    )
+    with DataService(path, cfg) as svc:
+        svc.set_client_class("replayer", "bulk")
+        first = svc.request("replayer", HyperslabQuery(DS_U, 0, 512))
+        np.testing.assert_array_equal(first.value, u[:512])
+        deferred = svc.submit("replayer", PingQuery())
+        for _ in range(5):  # later interactive traffic overtakes the debtor
+            assert svc.request("viewer", PingQuery()).value is None
+        assert not deferred.done(), "rate-limited request ran with an empty bucket"
+        # re-declaring the SAME class (what the transport does on every new
+        # connection) must NOT refill the bucket — debt survives reconnects
+        svc.set_client_class("replayer", "bulk")
+        assert svc.request("viewer", PingQuery()).value is None
+        assert not deferred.done(), "reconnect laundered the token-bucket debt"
+        # ...and debt survives class HOPPING too: bulk → interactive (the
+        # unlimited class serves the deferred ping) → bulk again must carry
+        # the negative balance, not start from a fresh burst
+        svc.set_client_class("replayer", "interactive")
+        assert deferred.result(timeout=30).value is None  # now eligible
+        svc.set_client_class("replayer", "bulk")
+        deferred = svc.submit("replayer", PingQuery())
+        assert svc.request("viewer", PingQuery()).value is None
+        assert not deferred.done(), "class hopping laundered the token-bucket debt"
+        st = svc.stats()
+        assert st.clients["replayer"].throttled > 0
+        assert st.qos["bulk"]["throttled"] > 0
+        assert st.qos["bulk"]["rate_bytes_per_s"] == 100.0
+    # close() drained the deferred request (admitted work always completes)
+    assert deferred.result(timeout=5).value is None
+
+
+def test_qos_config_validation():
+    with pytest.raises(ValueError, match="weight"):
+        QosClass("x", weight=0)
+    with pytest.raises(ValueError, match="rate_bytes_per_s"):
+        QosClass("x", rate_bytes_per_s=-1.0)
+    with pytest.raises(ValueError, match="default_class"):
+        ServiceConfig(qos_classes=(QosClass("a"),), default_class="b")
+    with pytest.raises(ValueError, match="duplicate"):
+        ServiceConfig(qos_classes=(QosClass("a"), QosClass("a")), default_class="a")
+
+
+def test_stats_query_inline_even_when_queue_full(run_file):
+    """StatsQuery short-circuits the admission queue: it answers while the
+    service is saturated and leaves no trace in the accounting."""
+    path, _, _ = run_file
+    gate = threading.Event()
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=1)) as svc:
+        try:
+            blocker = svc.submit("g", PingQuery(gate=gate))
+            while True:
+                try:
+                    queued = svc.submit("g", PingQuery())
+                    break
+                except AdmissionError:
+                    pass
+            with pytest.raises(AdmissionError):
+                for _ in range(3):
+                    svc.submit("g", PingQuery())
+            st = svc.request("observer", StatsQuery()).value  # queue is FULL
+            assert st.queue_depth >= 1 and st.rejected >= 1
+            assert "observer" not in st.clients  # not accounted
+            assert "StatsQuery" not in st.requests_by_type
+        finally:
+            gate.set()
+        blocker.result(timeout=30)
+        queued.result(timeout=30)
+    # a CLOSED service refuses StatsQuery like any other request — a
+    # monitoring loop must learn the service is gone, not read stale state
+    from repro.core.container import TH5Error
+
+    with pytest.raises(TH5Error, match="closed"):
+        svc.submit("observer", StatsQuery())
 
 
 # -- cross-client cache sharing ------------------------------------------------

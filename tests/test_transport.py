@@ -1,0 +1,478 @@
+"""Wire-layer behaviour of the TH5 data service (``repro.service``
+transport/wire/client).
+
+The contract under test: framing survives arbitrary kernel chunking
+(property-tested round-trips, torn streams raise instead of delivering
+garbage), socket reads are BIT-IDENTICAL to direct ``TH5File`` reads,
+backpressure crosses the wire as a typed BUSY carrying queue depth and
+client id, service-side integrity errors still *name* the offending chunk
+on the client, and QoS classes actually bite (a flooding bulk client
+cannot starve an interactive one)."""
+
+import os
+import socket
+import struct
+import tempfile
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AggregationConfig, ChunkPipeline
+from repro.core.checkpoint import CheckpointManager
+from repro.core.container import CorruptFileError, TH5File
+from repro.service import (
+    AdmissionError,
+    CatalogQuery,
+    DataService,
+    HyperslabQuery,
+    PingQuery,
+    RemoteDataService,
+    ServiceConfig,
+    ServiceServer,
+    StatsQuery,
+    SteeringRequest,
+    WindowQuery,
+    WireDisconnect,
+    WireError,
+)
+from repro.service import wire
+
+from tests._hyp import given, settings, st
+
+ROWS, COLS, CHUNK_ROWS = 512, 32, 64
+DS_U = "/simulation/step_00000000/state/fields/u"
+DS_FLAT = "/simulation/step_00000000/state/flat"
+
+
+@pytest.fixture()
+def run_file(tmp_path):
+    rng = np.random.default_rng(7)
+    u = rng.standard_normal((ROWS, COLS)).astype(np.float32)
+    flat = rng.random((ROWS, COLS)).astype(np.float32)
+    path = str(tmp_path / "run.th5")
+    with TH5File.create(path) as f:
+        mu = f.create_chunked_dataset(DS_U, u.shape, "<f4", CHUNK_ROWS, "shuffle+zlib")
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=2)) as pipe:
+            pipe.write(mu, u)
+        mf = f.create_dataset(DS_FLAT, flat.shape, "<f4")
+        f.write_full(mf, flat, checksum=True)
+        f.commit()
+    return path, u, flat
+
+
+@pytest.fixture()
+def sock_dir():
+    """Unix-socket paths must stay under ~100 bytes: use a short tempdir
+    (pytest's tmp_path can blow the limit)."""
+    with tempfile.TemporaryDirectory(prefix="th5w", dir="/tmp") as d:
+        yield d
+
+
+@pytest.fixture()
+def served(run_file, sock_dir):
+    """A DataService + ServiceServer on a Unix socket + one client."""
+    path, u, flat = run_file
+    with DataService(path, ServiceConfig(n_workers=2, max_queue=64)) as svc:
+        with ServiceServer(svc, os.path.join(sock_dir, "svc.sock")) as server:
+            with RemoteDataService(server.address) as remote:
+                yield svc, server, remote, u, flat
+
+
+# -- framing -------------------------------------------------------------------
+
+
+def test_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        payload = np.arange(777, dtype="<i4")
+        wire.send_frame(a, wire.KIND_OK, 42, {"x": [1, "two", None]}, payload)
+        f = wire.recv_frame(b)
+        assert (f.kind, f.req_id, f.meta) == (wire.KIND_OK, 42, {"x": [1, "two", None]})
+        np.testing.assert_array_equal(np.frombuffer(f.payload, "<i4"), payload)
+        # empty-meta, empty-payload frame
+        wire.send_frame(a, wire.KIND_BUSY, 7, {})
+        f2 = wire.recv_frame(b)
+        assert (f2.kind, f2.req_id, f2.meta, len(f2.payload)) == (wire.KIND_BUSY, 7, {}, 0)
+        a.close()
+        assert wire.recv_frame(b) is None  # clean EOF between frames
+    finally:
+        for s in (a, b):
+            s.close()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kind=st.sampled_from([wire.KIND_REQUEST, wire.KIND_OK, wire.KIND_ERROR]),
+    req_id=st.integers(min_value=0, max_value=2**63 - 1),
+    meta=st.dictionaries(
+        st.text(max_size=8),
+        st.one_of(st.integers(-1000, 1000), st.text(max_size=16), st.booleans()),
+        max_size=4,
+    ),
+    payload=st.binary(max_size=512),
+)
+def test_frame_roundtrip_property(kind, req_id, meta, payload):
+    a, b = socket.socketpair()
+    try:
+        wire.send_frame(a, kind, req_id, meta, payload)
+        f = wire.recv_frame(b)
+        assert (f.kind, f.req_id, f.meta, bytes(f.payload)) == (kind, req_id, meta, payload)
+    finally:
+        for s in (a, b):
+            s.close()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    req=st.one_of(
+        st.builds(
+            HyperslabQuery,
+            dataset=st.text(min_size=1, max_size=20),
+            row_start=st.integers(0, 10**6),
+            n_rows=st.integers(0, 10**6),
+            cols=st.one_of(st.none(), st.tuples(st.integers(0, 100), st.integers(0, 100))),
+            verify=st.booleans(),
+        ),
+        st.builds(
+            WindowQuery,
+            dataset=st.text(min_size=1, max_size=20),
+            rows=st.lists(st.integers(0, 2**40), max_size=64).map(tuple),
+        ),
+        st.builds(CatalogQuery, prefix=st.text(min_size=1, max_size=16)),
+        st.builds(PingQuery, delay_s=st.floats(0, 1, allow_nan=False)),
+        st.just(StatsQuery()),
+        st.builds(
+            SteeringRequest.branch,
+            at_step=st.integers(0, 100),
+            child_path=st.text(min_size=1, max_size=20),
+            overlay=st.dictionaries(st.text(max_size=6), st.integers(-5, 5), max_size=3),
+        ),
+    )
+)
+def test_request_codec_roundtrip_property(req):
+    meta, payload = wire.encode_request("cli-π", req)
+    # the meta blob must be JSON-serializable exactly as send_frame does it
+    import json
+
+    meta = json.loads(json.dumps(meta))
+    client, back = wire.decode_request(
+        meta, memoryview(payload.tobytes() if payload is not None else b"")
+    )
+    assert client == "cli-π"
+    assert back == req
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    dtype=st.sampled_from(["<f4", "<f8", "<i2", "<i8", "|u1"]),
+    shape=st.one_of(
+        st.tuples(st.integers(0, 40)),
+        st.tuples(st.integers(0, 12), st.integers(1, 12)),
+        st.tuples(st.integers(1, 5), st.integers(1, 5), st.integers(1, 5)),
+    ),
+)
+def test_value_codec_ndarray_roundtrip_property(dtype, shape):
+    rng = np.random.default_rng(3)
+    arr = (rng.random(shape) * 100).astype(dtype)
+    desc, payload = wire.encode_value(arr)
+    back = wire.decode_value(desc, memoryview(bytearray(payload.tobytes())))
+    assert back.dtype == arr.dtype and back.shape == arr.shape
+    np.testing.assert_array_equal(back, arr)
+    assert back.flags.writeable  # recv buffers become writable client arrays
+
+
+class _TrickleSock:
+    """recv_into wrapper returning at most ``n`` bytes per call — the
+    kernel is allowed to chunk a stream arbitrarily; the framing layer
+    must not care."""
+
+    def __init__(self, sock, n=3):
+        self._sock, self._n = sock, n
+
+    def recv_into(self, view):
+        return self._sock.recv_into(view[: self._n])
+
+
+def test_recv_resumes_across_torn_reads():
+    a, b = socket.socketpair()
+    try:
+        payload = np.arange(199, dtype="<u2")
+        meta = {"k": "v" * 50}
+        wire.send_frame(a, wire.KIND_OK, 9, meta, payload)
+        f = wire.recv_frame(_TrickleSock(b))
+        assert f.meta == meta and f.req_id == 9
+        np.testing.assert_array_equal(np.frombuffer(f.payload, "<u2"), payload)
+    finally:
+        for s in (a, b):
+            s.close()
+
+
+def test_midframe_disconnect_raises_not_garbage():
+    # partial header
+    a, b = socket.socketpair()
+    a.sendall(b"TH5W\x01")
+    a.close()
+    with pytest.raises(WireDisconnect, match="mid-frame"):
+        wire.recv_frame(b)
+    b.close()
+    # full header promising a payload that never arrives
+    a, b = socket.socketpair()
+    hdr = struct.pack(wire.HEADER_FMT, wire.MAGIC, wire.WIRE_VERSION, wire.KIND_OK, 0, 1, 2, 100)
+    a.sendall(hdr + b"{}")
+    a.close()
+    with pytest.raises(WireDisconnect):
+        wire.recv_frame(b)
+    b.close()
+
+
+def test_bad_magic_and_oversized_frames_rejected():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"X" * wire.HEADER_SIZE)
+        with pytest.raises(WireError, match="magic"):
+            wire.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    a, b = socket.socketpair()
+    try:
+        hdr = struct.pack(
+            wire.HEADER_FMT, wire.MAGIC, wire.WIRE_VERSION, wire.KIND_OK, 0, 1,
+            wire.MAX_META_BYTES + 1, 0,
+        )
+        a.sendall(hdr)
+        with pytest.raises(WireError, match="too large"):
+            wire.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_gated_ping_refuses_the_wire():
+    with pytest.raises(TypeError, match="gated PingQuery"):
+        wire.encode_request("c", PingQuery(gate=threading.Event()))
+
+
+# -- socket reads vs direct reads ----------------------------------------------
+
+
+def test_socket_reads_bit_identical_to_direct(served):
+    svc, server, remote, u, flat = served
+    path = svc.path
+    with TH5File.open(path) as direct:
+        for req in [
+            HyperslabQuery(DS_U, 0, ROWS),
+            HyperslabQuery(DS_U, 37, 200, cols=(3, 19)),
+            HyperslabQuery(DS_FLAT, 100, 50, verify=True),
+            HyperslabQuery(DS_U, 64, 128, verify=True),
+        ]:
+            got = remote.request("cli", req).value
+            want = direct.read_rows(req.dataset, req.row_start, req.n_rows)
+            if req.cols:
+                want = want[:, req.cols[0] : req.cols[1]]
+            np.testing.assert_array_equal(got, want)
+            assert got.dtype == want.dtype
+        rows = [5, 1, 63, 64, 65, 200, 511, 2, 2]
+        got = remote.request("cli", WindowQuery(DS_U, tuple(rows))).value
+        np.testing.assert_array_equal(got, direct.read_row_indices(DS_U, rows))
+
+
+def test_concurrent_remote_clients_bit_identical(served):
+    svc, server, remote, u, flat = served
+    rng = np.random.default_rng(11)
+    scripts = []
+    for c in range(4):
+        script = []
+        for _ in range(8):
+            if rng.integers(2):
+                lo = int(rng.integers(0, ROWS - 64))
+                n = min(int(rng.integers(1, 128)), ROWS - lo)
+                script.append(HyperslabQuery(DS_U if rng.integers(2) else DS_FLAT, lo, n))
+            else:
+                rows = tuple(int(r) for r in rng.choice(ROWS, size=48, replace=False))
+                script.append(WindowQuery(DS_U, rows))
+        scripts.append(script)
+
+    def expected(req):
+        src = u if req.dataset == DS_U else flat
+        if isinstance(req, HyperslabQuery):
+            return src[req.row_start : req.row_start + req.n_rows]
+        return src[list(req.rows)]
+
+    def play(c):
+        futs = [(remote.submit(f"c{c}", r), r) for r in scripts[c]]
+        for fut, req in futs:  # pipelined: all in flight before first result
+            np.testing.assert_array_equal(fut.result(timeout=60).value, expected(req))
+
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        for f in [pool.submit(play, c) for c in range(4)]:
+            f.result()
+    st_ = remote.stats()
+    assert st_.completed >= 4 * 8 and st_.failed == 0
+
+
+def test_window_session_over_socket_matches_direct(served):
+    """LodWindowSession runs UNMODIFIED against the remote client."""
+    svc, server, remote, u, _ = served
+    windows = [(lo, lo + 128) for lo in range(0, ROWS - 128 + 1, 64)]
+    with TH5File.open(svc.path) as direct:
+        want = [direct.read_row_indices(DS_U, list(range(lo, hi, 2))) for lo, hi in windows]
+    ses = remote.open_window_session("viewer", DS_U, windows, max_rows=64)
+    got = list(ses)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_tcp_transport_and_ephemeral_port(run_file):
+    path, u, _ = run_file
+    with DataService(path, ServiceConfig(n_workers=2)) as svc:
+        with ServiceServer(svc, ("127.0.0.1", 0)) as server:
+            host, port = server.address
+            assert port != 0
+            with RemoteDataService((host, port)) as remote:
+                got = remote.request("t", HyperslabQuery(DS_U, 10, 30)).value
+                np.testing.assert_array_equal(got, u[10:40])
+
+
+def test_remote_catalog_and_steering(tmp_path, sock_dir):
+    root = str(tmp_path / "root.th5")
+    with CheckpointManager(root, common={"nu": 0.01}) as mgr:
+        for s in (10, 20):
+            mgr.save(s, {"T": np.full((64, 4), float(s), np.float32)})
+    with DataService(root) as svc, ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+        with RemoteDataService(server.address) as remote:
+            cat = remote.request("b", CatalogQuery()).value
+            assert cat.steps == (10, 20)
+            assert cat.leaves_by_step[20] == ("T",)
+            assert all(d.nbytes > 0 for d in cat.datasets)
+            child = str(tmp_path / "child.th5")
+            res = remote.request("b", SteeringRequest.branch(10, child, {"nu": 0.02})).value
+            assert res.op == "branch" and res.child_path == child
+            assert res.steps == (10,)
+            assert res.lineage[-1] == (child, 10)
+
+
+# -- backpressure & errors over the wire ---------------------------------------
+
+
+def test_remote_busy_carries_queue_depth_and_client(run_file, sock_dir):
+    path, _, _ = run_file
+    cfg = ServiceConfig(n_workers=1, max_queue=1)
+    with DataService(path, cfg) as svc, ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+        with RemoteDataService(server.address) as remote:
+            # occupy the single worker, then fill the 1-deep queue
+            blocker = remote.submit("greedy", PingQuery(delay_s=3.0))
+            deadline = time.time() + 30
+            while svc.stats().inflight == 0:  # blocker picked up
+                assert time.time() < deadline
+                time.sleep(0.005)
+            futs = [remote.submit("greedy", PingQuery()) for _ in range(6)]
+            rejected = []
+            for f in futs:
+                try:
+                    f.result(timeout=60)
+                except AdmissionError as e:
+                    rejected.append(e)
+            assert rejected, "expected at least one wire BUSY"
+            assert all(e.client == "greedy" for e in rejected)
+            assert all(e.queue_depth >= 1 for e in rejected)
+            assert "queue full" in str(rejected[0])
+            blocker.result(timeout=60)
+            # service recovered: new remote requests still answered
+            assert remote.request("greedy", PingQuery()).value is None
+            assert remote.stats().rejected >= len(rejected)
+
+
+def test_remote_error_names_offending_chunk(run_file, sock_dir):
+    path, u, _ = run_file
+    with TH5File.open(path) as f:
+        rec = f.meta(DS_U).chunks[2]
+    with open(path, "r+b") as fh:  # flip bytes inside chunk 2's stored extent
+        fh.seek(rec.offset + rec.nbytes // 2)
+        fh.write(b"\xde\xad\xbe\xef")
+    with DataService(path) as svc, ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+        with RemoteDataService(server.address) as remote:
+            fut = remote.submit("v", HyperslabQuery(DS_U, 0, ROWS, verify=True))
+            with pytest.raises(CorruptFileError, match=rf"chunk 2 of {DS_U}"):
+                fut.result(timeout=60)
+            # unverified read of an untouched chunk still serves
+            got = remote.request("v", HyperslabQuery(DS_U, 0, CHUNK_ROWS)).value
+            np.testing.assert_array_equal(got, u[:CHUNK_ROWS])
+
+
+def test_client_close_fails_pending_and_server_survives(served):
+    svc, server, remote, u, _ = served
+    with RemoteDataService(server.address) as extra:
+        fut = extra.submit("doomed", PingQuery(delay_s=1.0))
+        extra.close()
+        with pytest.raises(Exception):
+            fut.result(timeout=60)
+    # the server and other connections keep working
+    got = remote.request("ok", HyperslabQuery(DS_U, 0, 8)).value
+    np.testing.assert_array_equal(got, u[:8])
+
+
+def test_hello_rejects_unknown_qos_class(served):
+    svc, server, remote, u, _ = served
+    bad = RemoteDataService(server.address, qos="platinum")
+    try:
+        with pytest.raises(Exception, match="platinum|closed"):
+            bad.request("x", PingQuery())
+    finally:
+        bad.close()
+
+
+def test_stalled_consumer_evicted_not_wedging_workers(run_file, sock_dir):
+    """Slow-consumer eviction: a peer that submits a large read and never
+    drains its socket is disconnected after the send timeout — it cannot
+    wedge the worker pool, and healthy clients keep being served."""
+    path, u, _ = run_file
+    addr = os.path.join(sock_dir, "s.sock")
+    cfg = ServiceConfig(n_workers=2, max_queue=64)
+    with DataService(path, cfg) as svc:
+        with ServiceServer(svc, addr, sock_buf_bytes=1 << 14, send_timeout_s=1.0) as server:
+            # raw stalling peer: HELLO + a ~1 MB window gather, then never recv
+            stall = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            stall.connect(addr)
+            stall.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 1 << 12)
+            try:
+                wire.send_frame(stall, wire.KIND_HELLO, 0, {"version": wire.WIRE_VERSION})
+                big = tuple(range(ROWS)) * 16  # 8192 rows × 128 B = ~1 MB reply
+                meta, payload = wire.encode_request("staller", WindowQuery(DS_U, big))
+                wire.send_frame(stall, wire.KIND_REQUEST, 1, meta, payload)
+                with RemoteDataService(server.address) as healthy:
+                    deadline = time.time() + 30
+                    # the healthy client is served the whole time...
+                    while server.n_connections > 1:
+                        got = healthy.request("ok", HyperslabQuery(DS_U, 0, 8)).value
+                        np.testing.assert_array_equal(got, u[:8])
+                        assert time.time() < deadline, "stalled peer never evicted"
+                        time.sleep(0.05)
+                    # ...and the staller's connection is gone
+                    np.testing.assert_array_equal(
+                        healthy.request("ok", HyperslabQuery(DS_U, 8, 8)).value, u[8:16]
+                    )
+            finally:
+                stall.close()
+
+
+# -- QoS over the wire ---------------------------------------------------------
+
+
+def test_hello_qos_class_lands_in_stats(run_file, sock_dir):
+    path, _, _ = run_file
+    with DataService(path) as svc, ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+        with RemoteDataService(server.address, qos="bulk") as bulk_conn:
+            with RemoteDataService(server.address) as inter_conn:
+                bulk_conn.request("replayer", PingQuery())
+                inter_conn.request("viewer", PingQuery())
+                st_ = inter_conn.stats()
+    assert st_.clients["replayer"].qos_class == "bulk"
+    assert st_.clients["viewer"].qos_class == "interactive"
+    assert st_.qos["bulk"]["clients"] == 1
+    assert st_.qos["interactive"]["clients"] == 1
+    assert st_.qos["interactive"]["weight"] > st_.qos["bulk"]["weight"]

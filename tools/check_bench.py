@@ -1,0 +1,321 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate: fresh benchmark runs vs committed baselines.
+
+Runs the smoke benchmark suite (or reads an already-produced results file
+via ``--fresh``) and compares the headline write / read / serve metrics
+against the committed ``BENCH_io.json``, failing (exit 1) on regression.
+Three kinds of checks (the full table is in ``benchmarks/README.md``):
+
+* **baseline** — ``fresh >= tolerance * committed`` (default tolerance
+  0.5×: CI-class boxes are noisy; a genuine pipeline regression loses far
+  more than half its throughput).  Scale-sensitive metrics carry a *scale
+  guard*: they are only compared when the fresh run used the same problem
+  size as the committed one (smoke runs therefore compare the scale-free
+  subset — speedups, compression ratios — plus the suites whose smoke
+  scale equals the committed scale, e.g. ``tp_sharded``); a full local run
+  (``--full``) compares everything.
+* **floor / exact** — fixed invariants that hold at every scale
+  (``zerocopy_copies == 0``, ``overlap_ratio > 1``, ``shuffle_uplift >=
+  1``) — these are the acceptance floors from ``benchmarks/README.md``.
+* **invariant** — relations inside the fresh document alone (batched
+  fetch strictly beats unbatched, zero admission rejections).
+
+Stdlib + the benchmark deps only (numpy, ml_dtypes) — runs in the CI docs
+job on every matrix Python.  Typical use::
+
+    python tools/check_bench.py                      # run smokes, compare
+    python tools/check_bench.py --fresh smoke.json   # compare existing file
+    python tools/check_bench.py --full               # full-scale local gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_BASELINE = ROOT / "BENCH_io.json"
+DEFAULT_TOLERANCE = 0.5
+
+#: benchmark commands (module, extra args) the gate runs, in order; each
+#: merges its sections into the shared --json file
+SMOKE_COMMANDS = [
+    ("benchmarks/io_bandwidth.py", ["--smoke"]),
+    ("benchmarks/io_bandwidth.py", ["--smoke", "--read"]),
+    ("benchmarks/service_load.py", ["--smoke"]),
+    ("benchmarks/service_load.py", ["--smoke", "--transport", "socket"]),
+]
+FULL_COMMANDS = [
+    ("benchmarks/io_bandwidth.py", []),
+    ("benchmarks/io_bandwidth.py", ["--read"]),
+    ("benchmarks/service_load.py", []),
+    ("benchmarks/service_load.py", ["--transport", "socket"]),
+]
+
+
+def _get(doc: dict, *path):
+    cur = doc
+    for p in path:
+        if isinstance(cur, dict):
+            if p not in cur:
+                return None
+            cur = cur[p]
+        elif isinstance(cur, list):
+            if not isinstance(p, int) or p >= len(cur) or p < -len(cur):
+                return None
+            cur = cur[p]
+        else:
+            return None
+    return cur
+
+
+def _codec_row(doc: dict, codec: str):
+    for row in doc.get("compression") or []:
+        if row.get("codec") == codec:
+            return row
+    return None
+
+
+def _serve_scale(doc: dict, section: str):
+    s = doc.get(section)
+    if not s:
+        return None
+    return (s.get("rows"), s.get("cols"), tuple(r["clients"] for r in s["traffic"]))
+
+
+# Each check: name, kind, getter(doc) -> value|None, and for "baseline"
+# kind a scale(doc) key — compared only when fresh and committed keys match
+# (None = scale-free, always compared).
+def build_checks() -> list[dict]:
+    checks: list[dict] = [
+        # -- write path --------------------------------------------------------
+        dict(
+            name="tp_sharded.speedup (zero-copy pipeline vs seed)",
+            kind="baseline",
+            get=lambda d: _get(d, "tp_sharded", "speedup"),
+            scale=lambda d: (_get(d, "tp_sharded", "bytes"), _get(d, "tp_sharded", "ranks")),
+        ),
+        dict(
+            name="tp_sharded.zerocopy_MBps",
+            kind="baseline",
+            get=lambda d: _get(d, "tp_sharded", "zerocopy_MBps"),
+            scale=lambda d: (_get(d, "tp_sharded", "bytes"), _get(d, "tp_sharded", "ranks")),
+        ),
+        dict(
+            name="tp_sharded.zerocopy_copies == 0",
+            kind="exact",
+            get=lambda d: _get(d, "tp_sharded", "zerocopy_copies"),
+            want=0,
+        ),
+        dict(
+            name="scatter_read.bw_MBps",
+            kind="baseline",
+            get=lambda d: _get(d, "scatter_read", "bw_MBps"),
+            scale=lambda d: _get(d, "scatter_read", "bytes"),
+        ),
+        # -- compression / filter pipeline ------------------------------------
+        dict(
+            name="compression[none].copies_per_byte == 0",
+            kind="exact",
+            get=lambda d: (_codec_row(d, "none") or {}).get("copies_per_byte"),
+            want=0.0,
+        ),
+        # -- read / decode pipeline -------------------------------------------
+        dict(
+            name="read.overlap_ratio > 1 (fetch overlapped inflate)",
+            kind="floor",
+            get=lambda d: _get(d, "read", "overlap_ratio"),
+            limit=1.0,
+        ),
+        dict(
+            name="read.shuffle_uplift >= 1",
+            kind="floor",
+            get=lambda d: _get(d, "read", "shuffle_uplift"),
+            limit=1.0,
+        ),
+        dict(
+            name="read.shuffle_uplift vs baseline",
+            kind="baseline",
+            get=lambda d: _get(d, "read", "shuffle_uplift"),
+            scale=lambda d: None,
+        ),
+        dict(
+            name="read.none_read_copies_per_byte == 0",
+            kind="exact",
+            get=lambda d: _get(d, "read", "none_read_copies_per_byte"),
+            want=0.0,
+        ),
+        dict(
+            name="read.fetch batching beats per-chunk fetches",
+            kind="invariant",
+            check=lambda d: (
+                _get(d, "read", "fetch_syscalls_per_mb") is None
+                or _get(d, "read", "fetch_syscalls_per_mb")
+                < _get(d, "read", "fetch_syscalls_per_mb_unbatched")
+            ),
+        ),
+        dict(
+            name="read.cold_MBps",
+            kind="baseline",
+            get=lambda d: _get(d, "read", "cold_MBps"),
+            scale=lambda d: (_get(d, "read", "rows"), _get(d, "read", "chunk_rows")),
+        ),
+        dict(
+            name="read.warm_MBps",
+            kind="baseline",
+            get=lambda d: _get(d, "read", "warm_MBps"),
+            scale=lambda d: (_get(d, "read", "rows"), _get(d, "read", "chunk_rows")),
+        ),
+    ]
+    for codec in ("zlib", "shuffle+zlib", "int8-blockq"):
+        checks.append(
+            dict(
+                name=f"compression[{codec}].ratio",
+                kind="baseline",
+                get=lambda d, c=codec: (_codec_row(d, c) or {}).get("ratio"),
+                scale=lambda d: None,  # compression ratios are scale-free
+            )
+        )
+    for section in ("serve", "serve_wire"):
+        # In-process client scaling is stable at any size (smoke ≥ 2×) so
+        # it compares scale-free; wire scaling at smoke payload sizes is
+        # dominated by per-request framing and measured-noisy (0.5–1.7×
+        # across runs on the 2-core box), so its comparison is
+        # scale-guarded — at smoke scale the wire is gated functionally
+        # (tests + the rejected==0 invariant), at committed scale by MB/s.
+        speedup_scale = (
+            (lambda d: None)
+            if section == "serve"
+            else (lambda d, s=section: _serve_scale(d, s))
+        )
+        checks.extend(
+            [
+                dict(
+                    name=f"{section}.speedup_max_clients_vs_1",
+                    kind="baseline",
+                    get=lambda d, s=section: _get(d, s, "speedup_max_clients_vs_1"),
+                    scale=speedup_scale,
+                ),
+                dict(
+                    name=f"{section}: aggregate MB/s at max clients",
+                    kind="baseline",
+                    get=lambda d, s=section: _get(d, s, "traffic", -1, "agg_MBps"),
+                    scale=lambda d, s=section: _serve_scale(d, s),
+                ),
+                dict(
+                    name=f"{section}: zero admission rejections",
+                    kind="invariant",
+                    check=lambda d, s=section: all(
+                        r.get("rejected") == 0 for r in _get(d, s, "traffic") or []
+                    ),
+                ),
+            ]
+        )
+    return checks
+
+
+def run_benchmarks(full: bool, json_path: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    for script, args in FULL_COMMANDS if full else SMOKE_COMMANDS:
+        cmd = [sys.executable, str(ROOT / script), *args, "--json", json_path]
+        print(f"check_bench: + {' '.join(cmd[1:])}")
+        subprocess.run(cmd, check=True, env=env, cwd=ROOT)
+
+
+def compare(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
+    failures: list[str] = []
+    for c in build_checks():
+        name = c["name"]
+        if c["kind"] == "invariant":
+            got = c["check"](fresh)
+            if got is False:
+                failures.append(f"{name}: violated")
+            continue
+        val = c["get"](fresh)
+        if val is None:
+            print(f"  skip  {name} (not in fresh results)")
+            continue
+        if c["kind"] == "exact":
+            if val != c["want"]:
+                failures.append(f"{name}: got {val!r}, want {c['want']!r}")
+            continue
+        if c["kind"] == "floor":
+            if not val >= c["limit"]:
+                failures.append(f"{name}: got {val}, floor {c['limit']}")
+            continue
+        # kind == "baseline"
+        base = c["get"](baseline)
+        if base is None:
+            print(f"  skip  {name} (no committed baseline yet)")
+            continue
+        f_scale, b_scale = c["scale"](fresh), c["scale"](baseline)
+        if f_scale != b_scale:
+            print(f"  skip  {name} (scale {f_scale} != committed {b_scale})")
+            continue
+        want = tolerance * base
+        status = "ok" if val >= want else "FAIL"
+        print(f"  {status:4}  {name}: {val:g} vs committed {base:g} (floor {want:g})")
+        if val < want:
+            failures.append(
+                f"{name}: {val:g} < {want:g} ({tolerance}x committed {base:g})"
+            )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="committed baselines (default: repo BENCH_io.json)")
+    ap.add_argument("--fresh", default=None, metavar="JSON",
+                    help="compare this existing results file instead of "
+                         "running the benchmarks")
+    ap.add_argument("--out", default=None, metavar="JSON",
+                    help="where to write fresh results when running "
+                         "(default: a temp file)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="baseline-relative floor: fresh >= tolerance * "
+                         "committed (default %(default)s)")
+    ap.add_argument("--full", action="store_true",
+                    help="run the full-scale suites instead of --smoke "
+                         "(enables the scale-guarded absolute comparisons)")
+    a = ap.parse_args(argv)
+
+    baseline_path = Path(a.baseline)
+    if not baseline_path.exists():
+        print(f"check_bench: no baseline at {baseline_path}")
+        return 1
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+
+    if a.fresh:
+        fresh_path = a.fresh
+    else:
+        fresh_path = a.out or os.path.join(
+            tempfile.mkdtemp(prefix="check_bench"), "bench-fresh.json"
+        )
+        run_benchmarks(a.full, fresh_path)
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+
+    print(f"check_bench: comparing {fresh_path} against {baseline_path} "
+          f"(tolerance {a.tolerance}x)")
+    failures = compare(fresh, baseline, a.tolerance)
+    if failures:
+        print("check_bench: PERF REGRESSION —")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("check_bench: all benchmark headline metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,11 @@ installed):
   * the superblock struct format string matches the spec's packed layout;
   * ``docs/SERVICE.md`` documents every ``ServiceStats`` / ``ClientStats``
     field and every request dataclass of the service layer, and
-    ``docs/ARCHITECTURE.md`` covers the ``DataService`` broker.
+    ``docs/ARCHITECTURE.md`` covers the ``DataService`` broker;
+  * the wire protocol section of ``docs/SERVICE.md`` names every frame
+    kind (``KIND_*``) and the exact header struct format of ``wire.py``,
+    every ``QosClass`` field of ``broker.py``, and the transport classes
+    (``ServiceServer`` / ``RemoteDataService``) appear in the docs.
 
 Exit status 1 with a list of misses on drift.
 """
@@ -29,6 +33,8 @@ CONTAINER = ROOT / "src" / "repro" / "core" / "container.py"
 CODECS = ROOT / "src" / "repro" / "core" / "codecs.py"
 SERVICE_STATS = ROOT / "src" / "repro" / "service" / "stats.py"
 SERVICE_REQUESTS = ROOT / "src" / "repro" / "service" / "requests.py"
+SERVICE_WIRE = ROOT / "src" / "repro" / "service" / "wire.py"
+SERVICE_BROKER = ROOT / "src" / "repro" / "service" / "broker.py"
 SPEC = ROOT / "docs" / "FORMAT.md"
 ARCH = ROOT / "docs" / "ARCHITECTURE.md"
 SERVICE_DOC = ROOT / "docs" / "SERVICE.md"
@@ -112,8 +118,35 @@ def main() -> int:
         if isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
             if f"`{node.name}`" not in service_doc:
                 missing.append(f"SERVICE.md: request/response class `{node.name}`")
+    # -- wire protocol: frame kinds + header layout + QoS ------------------
+    wtree = ast.parse(SERVICE_WIRE.read_text(encoding="utf-8"))
+    for node in wtree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id.startswith("KIND_"):
+                if f"`{tgt.id}`" not in service_doc:
+                    missing.append(f"SERVICE.md: wire frame kind `{tgt.id}`")
+    hdr_fmt = module_constant(wtree, "HEADER_FMT")
+    if f'"{hdr_fmt}"' not in service_doc:
+        missing.append(f"SERVICE.md: wire header struct format {hdr_fmt!r}")
+    wire_version = module_constant(wtree, "WIRE_VERSION")
+    if f"Wire protocol version: {wire_version}" not in service_doc:
+        missing.append(f'SERVICE.md: "Wire protocol version: {wire_version}"')
+    btree = ast.parse(SERVICE_BROKER.read_text(encoding="utf-8"))
+    for fld in dataclass_fields(btree, "QosClass", SERVICE_BROKER):
+        if f"`{fld}`" not in service_doc:
+            missing.append(f"SERVICE.md: QosClass field `{fld}`")
+
     arch = ARCH.read_text(encoding="utf-8")
-    for name in ("DataService", "SteeringEndpoint", "AdmissionError"):
+    for name in (
+        "DataService",
+        "SteeringEndpoint",
+        "AdmissionError",
+        "ServiceServer",
+        "RemoteDataService",
+        "WireError",
+        "WireDisconnect",
+    ):
         if name not in arch and name not in service_doc:
             missing.append(f"service class {name} undocumented (ARCHITECTURE.md / SERVICE.md)")
 
