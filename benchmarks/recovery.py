@@ -1,0 +1,232 @@
+"""Fault-tolerance cost model — the ``recover`` section of ``BENCH_io.json``.
+
+Two prices of the PR 6 fault-tolerance layer, measured so regressions in
+either show up in the CI gate:
+
+**Recovery scan** — a writer crashes with every chunk published to the
+sidecar journal but nothing committed (the worst salvageable case: the
+whole dataset rides the journal).  ``TH5File.recover`` must CRC-verify
+every salvaged chunk against the data file, so its wall time is an I/O +
+CRC pass over the recovered bytes; the figure tracked is that scan rate
+(``scan_MBps``) plus the invariant that NOTHING durable is lost
+(``recovered_chunks == n_chunks``, zero truncated).  The crashed state is
+produced exactly like the chaos suite does it: write through the normal
+path, snapshot data file + journal mid-session, recover the snapshot.
+
+**Reconnect window** — one closed-loop client replays LOD windows over
+the wire while the connection is severed mid-run.  The client's
+reconnect-and-replay (``RemoteDataService``) must absorb the outage: the
+run completes bit-compatible with the no-outage baseline, and the
+throughput dip (``dip_ratio = outage_MBps / baseline_MBps``) plus the
+longest response gap (``max_gap_s``, the observable outage window) are
+the tracked costs.
+
+Run::
+
+    PYTHONPATH=src python benchmarks/recovery.py           # full
+    PYTHONPATH=src python benchmarks/recovery.py --smoke   # CI seconds
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import socket
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core.container import TH5File, journal_path
+from repro.service import (
+    DataService,
+    RemoteDataService,
+    ServiceConfig,
+    ServiceServer,
+    WindowQuery,
+)
+
+BENCH_JSON = "BENCH_io.json"
+SCHEMA = 6
+DATASET = "/state/w"
+
+
+def _build_crashed(path: str, rows: int, cols: int, chunk_rows: int) -> int:
+    """Write a chunked dataset through the normal journaled path and
+    snapshot the on-disk state (data + sidecar) WITHOUT committing — the
+    exact residue of a writer killed after its last chunk landed.  Returns
+    the number of chunks published."""
+    live = path + ".live"
+    rng = np.random.default_rng(13)
+    a = rng.standard_normal((rows, cols)).astype("<f4")
+    with TH5File.create(live) as f:
+        meta = f.create_chunked_dataset(DATASET, a.shape, "<f4", chunk_rows)
+        f.write_chunked(meta, a)
+        shutil.copyfile(live, path)
+        shutil.copyfile(journal_path(live), journal_path(path))
+        n_chunks = len(meta.chunks)
+        f.commit()
+    os.unlink(live)
+    return n_chunks
+
+
+def run_scan(rows: int, cols: int, chunk_rows: int, *, repeats: int = 3) -> dict:
+    """Median-of-``repeats`` recovery of the same crashed snapshot."""
+    results = []
+    with tempfile.TemporaryDirectory() as d:
+        base = os.path.join(d, "crash.th5")
+        n_chunks = _build_crashed(base, rows, cols, chunk_rows)
+        for r in range(repeats):
+            path = os.path.join(d, f"crash{r}.th5")
+            shutil.copyfile(base, path)
+            shutil.copyfile(journal_path(base), journal_path(path))
+            f, report = TH5File.recover(path)
+            f.close()
+            assert not report.clean
+            results.append(report)
+    rep = sorted(results, key=lambda x: x.scan_s)[len(results) // 2]
+    return {
+        "rows": rows,
+        "cols": cols,
+        "chunk_rows": chunk_rows,
+        "n_chunks": n_chunks,
+        "journal_records": rep.journal_records,
+        "recovered_chunks": rep.recovered_chunks,
+        "lost_committed_chunks": n_chunks - rep.recovered_chunks,
+        "truncated_chunks": rep.truncated_chunks,
+        "recovered_mb": round(rep.recovered_bytes / 1e6, 2),
+        "scan_s": round(rep.scan_s, 5),
+        "scan_MBps": round(rep.recovered_bytes / rep.scan_s / 1e6, 1),
+    }
+
+
+def _window_replay(
+    remote, svc_rows: int, window: int, passes: int, *, sever_at: int | None
+) -> dict:
+    """Closed-loop window replay; optionally sever the client's socket
+    while request ``sever_at`` is in flight (chaos: the wire dies mid-
+    conversation, reconnect-and-replay absorbs it)."""
+    windows = [
+        tuple(range(lo, min(lo + window, svc_rows)))
+        for lo in range(0, svc_rows - window + 1, window)
+    ]
+    total = 0
+    gaps = []
+    n_req = 0
+    t0 = time.perf_counter()
+    last = t0
+    for _ in range(passes):
+        for rows in windows:
+            fut = remote.submit("viewer", WindowQuery(DATASET, rows))
+            if sever_at is not None and n_req == sever_at:
+                # sever while this request is in flight; its future must
+                # still complete via reconnect + replay
+                remote._sock.shutdown(socket.SHUT_RDWR)
+            total += fut.result(timeout=120).value.nbytes
+            now = time.perf_counter()
+            gaps.append(now - last)
+            last = now
+            n_req += 1
+    wall = time.perf_counter() - t0
+    return {
+        "requests": n_req,
+        "bytes_mb": round(total / 1e6, 2),
+        "wall_s": round(wall, 4),
+        "MBps": round(total / wall / 1e6, 1),
+        "max_gap_s": round(max(gaps), 4),
+    }
+
+
+def run_reconnect(rows: int, cols: int, chunk_rows: int, *, passes: int = 2) -> dict:
+    """Baseline vs severed-mid-run window replay over a Unix socket."""
+    rng = np.random.default_rng(17)
+    a = rng.standard_normal((rows, cols)).astype("<f4")
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "serve.th5")
+        with TH5File.create(path) as f:
+            meta = f.create_chunked_dataset(DATASET, a.shape, "<f4", chunk_rows)
+            f.write_chunked(meta, a)
+            f.commit()
+        window = max(chunk_rows * 4, 1)
+        n_windows = len(range(0, rows - window + 1, window)) * passes
+        with DataService(path, ServiceConfig(n_workers=2, max_queue=64)) as svc:
+            with ServiceServer(svc, os.path.join(d, "s.sock")) as server:
+                with RemoteDataService(server.address) as remote:
+                    base = _window_replay(remote, rows, window, passes, sever_at=None)
+                with RemoteDataService(
+                    server.address, redial_base_s=0.01, redial_cap_s=0.1
+                ) as remote:
+                    hit = _window_replay(
+                        remote, rows, window, passes, sever_at=n_windows // 2
+                    )
+                    reconnects = remote.reconnects
+    return {
+        "baseline": base,
+        "outage": hit,
+        "reconnects": reconnects,
+        "dip_ratio": round(hit["MBps"] / base["MBps"], 3) if base["MBps"] else 0.0,
+    }
+
+
+def run(
+    *,
+    scan_shapes=((16384, 512, 256), (65536, 256, 512)),
+    reconnect_shape=(16384, 256, 256),
+    passes: int = 2,
+    smoke: bool = False,
+    json_path: str | None = BENCH_JSON,
+    out=print,
+) -> dict:
+    scans = []
+    for rows, cols, chunk_rows in scan_shapes:
+        s = run_scan(rows, cols, chunk_rows)
+        scans.append(s)
+        out(
+            f"recover.scan,rows={s['rows']},chunks={s['n_chunks']},"
+            f"recovered={s['recovered_chunks']},scan={s['scan_s']*1e3:.1f}ms,"
+            f"rate={s['scan_MBps']:.0f}MB/s"
+        )
+    rows, cols, chunk_rows = reconnect_shape
+    rec = run_reconnect(rows, cols, chunk_rows, passes=passes)
+    out(
+        f"recover.reconnect,baseline={rec['baseline']['MBps']:.0f}MB/s,"
+        f"outage={rec['outage']['MBps']:.0f}MB/s,dip={rec['dip_ratio']:.2f},"
+        f"reconnects={rec['reconnects']},max_gap={rec['outage']['max_gap_s']*1e3:.0f}ms"
+    )
+    summary = {"smoke": smoke, "scan": scans, "reconnect": rec}
+    if json_path:
+        doc = {}
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as fh:
+                    doc = json.load(fh)
+            except (OSError, ValueError):
+                doc = {}
+        doc.update({"schema": SCHEMA, "generated_unix": time.time(), "recover": summary})
+        with open(json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        out(f"wrote {json_path}")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale CI smoke run (seconds, not minutes)")
+    ap.add_argument("--json", default=BENCH_JSON, help="output JSON path ('' disables)")
+    a = ap.parse_args()
+    if a.smoke:
+        res = run(scan_shapes=((2048, 64, 128),), reconnect_shape=(2048, 64, 64),
+                  passes=1, smoke=True, json_path=a.json or None)
+    else:
+        res = run(json_path=a.json or None)
+    # deterministic invariants (timing-light) — safe to enforce on CI VMs:
+    # recovery must salvage EVERY durable chunk of the crashed writer, and
+    # the severed run must complete via exactly the reconnect path
+    assert all(s["lost_committed_chunks"] == 0 for s in res["scan"]), "lost chunks"
+    assert all(s["truncated_chunks"] == 0 for s in res["scan"]), "phantom torn tail"
+    assert res["reconnect"]["reconnects"] >= 1, "outage run never reconnected"

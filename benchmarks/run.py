@@ -11,6 +11,7 @@ per-figure detail lines.  Figure map:
     trs_savings      → §4 TRS cost-saving scenario
     lm_checkpoint    → framework integration (train-state snapshots)
     service_load     → §2.3/§4 served: N-client read/steering broker load
+    recovery         → fault tolerance: crash-recovery scan + reconnect dip
 """
 
 from __future__ import annotations
@@ -26,6 +27,7 @@ def main() -> None:
         io_bandwidth,
         lm_checkpoint,
         multigrid_bench,
+        recovery,
         service_load,
         trs_savings,
     )
@@ -52,6 +54,11 @@ def main() -> None:
          lambda res: f"agg8={res['traffic'][-1]['agg_MBps']:.0f}MB/s,"
                      f"speedup_vs_1client={res['speedup_max_clients_vs_1']:.2f}x,"
                      f"p99={res['traffic'][-1]['p99_ms']:.0f}ms"),
+        # fault tolerance: crash-recovery scan rate + reconnect throughput dip
+        ("recovery_fault_tolerance", recovery.run,
+         lambda res: f"scan={res['scan'][-1]['scan_MBps']:.0f}MB/s,"
+                     f"dip={res['reconnect']['dip_ratio']:.2f},"
+                     f"reconnects={res['reconnect']['reconnects']}"),
     ]
     for name, fn, derive in suites:
         t0 = time.perf_counter()

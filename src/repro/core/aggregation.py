@@ -695,6 +695,7 @@ class ChunkPipeline:
         f = self.file
         rb = meta.row_bytes
         reqs: list[WriteRequest] = []
+        recs = []
         t0 = time.perf_counter()
         for lo, hi in chunk_ranges:
             chunk = arr[lo:hi]
@@ -709,6 +710,7 @@ class ChunkPipeline:
                 codec_id=CODEC_NONE,
             )
             reqs.append(WriteRequest(rec.offset, chunk))
+            recs.append(rec)
             stats.n_chunks += 1
             stats.raw_bytes += rec.raw_nbytes
             stats.stored_bytes += rec.nbytes
@@ -736,6 +738,10 @@ class ChunkPipeline:
             pool = self._get_pool()
             for fut in [pool.submit(drain, d) for d in domains]:
                 fut.result()
+        # publish only after every domain's vectored drain completed — the
+        # commit-mark must never outrun payload bytes (recovery invariant)
+        for rec in recs:
+            f.publish_chunk(meta, rec)
 
 
 # -- the overlapped decode (read-side filter) pipeline --------------------------

@@ -29,6 +29,13 @@ on, tuned for the paper's access pattern:
     leaves the previous superblock → previous index → all previous
     snapshots intact.  This is what makes the paper's time-reversible
     steering cheap: every committed generation remains addressable.
+    On top of the shadow paging, every appended chunk is *published* to a
+    sidecar journal (``<path>.journal``) after its stored bytes land: a
+    self-delimiting, CRC-protected commit-mark record per chunk.  A writer
+    killed at an arbitrary byte offset therefore loses at most the torn
+    tail — :meth:`TH5File.recover` replays the journal against the last
+    committed index, CRC-validates every journaled chunk, truncates the
+    torn tail and reports a :class:`RecoveryReport` instead of raising.
 
 Layout::
 
@@ -49,6 +56,7 @@ import json
 import os
 import struct
 import threading
+import time
 import zlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -70,6 +78,15 @@ DEFAULT_CHUNK_CACHE_BYTES = 32 << 20
 _SB_FMT = "<4sIIQQQQdI"  # magic, version, block_size, index_off, index_len, file_end, generation, created, flags
 _SB_FIXED = struct.calcsize(_SB_FMT)
 DEFAULT_BLOCK = 4096
+
+JOURNAL_MAGIC = b"TH5J"
+_J_HDR_FMT = "<4sII"  # magic, payload_len, crc32(payload)
+_J_HDR_SIZE = struct.calcsize(_J_HDR_FMT)
+
+
+def journal_path(path: str) -> str:
+    """Sidecar commit-mark journal for uncommitted chunk appends."""
+    return path + ".journal"
 
 ROOT = "/"
 
@@ -197,6 +214,30 @@ class ChunkRecord:
     @staticmethod
     def from_json(v: Sequence[int]) -> "ChunkRecord":
         return ChunkRecord(*(int(x) for x in v))
+
+
+@dataclass
+class RecoveryReport:
+    """What :meth:`TH5File.recover` found and salvaged.
+
+    ``recover`` never raises on *partial* state (a torn journal tail, a
+    half-written final chunk) — it truncates and reports here instead.  It
+    still raises :class:`CorruptFileError` when the committed state itself
+    (superblock / committed index) is unreadable, since there is nothing
+    consistent to fall back to.
+    """
+
+    path: str  # container path the recovery ran against
+    clean: bool  # True = no journal / empty journal: nothing to replay
+    committed_generation: int  # generation of the last shadow-paged commit
+    generation: int  # generation after recovery (== committed when clean)
+    journal_records: int  # well-formed journal records scanned
+    torn_journal: bool  # journal ended in a torn / CRC-failing record
+    recovered_datasets: int  # uncommitted dataset shells re-added to the index
+    recovered_chunks: int  # journaled chunks whose payload CRC-validated
+    recovered_bytes: int  # stored payload bytes across recovered chunks
+    truncated_chunks: int  # journaled chunks dropped (torn tail)
+    scan_s: float  # wall-clock spent scanning + CRC-validating
 
 
 @dataclass
@@ -460,6 +501,17 @@ class TH5File:
         self._alloc_lock = threading.Lock()
         self._dirty = False
         self._closed = False
+        # crash-consistent chunk publication (sidecar journal; docs/FORMAT.md
+        # "Recovery invariants").  ``journaling`` may be switched off for
+        # throwaway files; ``journal_sync`` adds the strict fsync ordering
+        # (data fsync before each commit-mark) needed for whole-OS-crash
+        # consistency — off by default, process-kill is the threat model.
+        self.journaling = True
+        self.journal_sync = False
+        self._journal_fd: int | None = None
+        self._journal_off = 0
+        self._journal_lock = threading.Lock()
+        self._journaled_datasets: set[str] = set()
         self.chunk_cache = ChunkCache()
         # read-side decode pipeline (aggregation.DecodePipeline), created
         # lazily on the first chunked read; per-read + cumulative FilterStats
@@ -498,6 +550,128 @@ class TH5File:
             raise
         return cls(path, fd, mode, block_size, index, file_end, created)
 
+    @classmethod
+    def recover(cls, path: str) -> tuple["TH5File", RecoveryReport]:
+        """Open ``path`` writable and salvage uncommitted-but-published
+        chunks from the sidecar journal.
+
+        The committed shadow-paged state is loaded first (a corrupt
+        superblock or committed index still raises
+        :class:`CorruptFileError` — there is no consistent fallback).  The
+        journal is then scanned record by record; scanning stops at the
+        first torn / CRC-failing record.  Records from a different
+        generation than the committed superblock are stale (a crash landed
+        between the superblock flip and the journal truncate) and are
+        skipped.  Each applicable chunk record is replayed only if its
+        stored payload is fully inside the file AND matches
+        ``stored_crc32`` — the first failure marks the torn tail and every
+        later chunk record is dropped (journal order is publication order,
+        so nothing after the tear is trustworthy).  Anything salvaged is
+        committed as a fresh generation; the journal is reset either way.
+        Never raises on partial state — the outcome is the returned
+        :class:`RecoveryReport`.
+        """
+        t0 = time.perf_counter()
+        f = cls.open(path, mode="r+")
+        jpath = journal_path(path)
+        try:
+            with open(jpath, "rb") as fh:
+                raw = fh.read()
+        except FileNotFoundError:
+            raw = b""
+
+        records: list[dict] = []
+        torn_journal = False
+        pos = 0
+        while pos + _J_HDR_SIZE <= len(raw):
+            magic, plen, crc = struct.unpack_from(_J_HDR_FMT, raw, pos)
+            body = raw[pos + _J_HDR_SIZE : pos + _J_HDR_SIZE + plen]
+            if magic != JOURNAL_MAGIC or len(body) < plen:
+                torn_journal = True
+                break
+            if (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+                torn_journal = True
+                break
+            try:
+                records.append(json.loads(body.decode("utf-8")))
+            except (ValueError, UnicodeDecodeError):
+                torn_journal = True
+                break
+            pos += _J_HDR_SIZE + plen
+        if pos != len(raw) and not torn_journal:
+            torn_journal = True  # trailing partial header
+
+        committed_gen = f._index.generation
+        applicable = [r for r in records if r.get("gen") == committed_gen]
+        fsize = os.fstat(f._fd).st_size
+        recovered_datasets = recovered_chunks = truncated = 0
+        recovered_bytes = 0
+        torn = False  # first bad chunk record seen: drop everything after it
+        for doc in applicable:
+            op = doc.get("op")
+            if torn:
+                if op == "chunk":
+                    truncated += 1
+                continue
+            if op == "dataset":
+                name = _norm(str(doc["name"]))
+                if name not in f._index.datasets:
+                    meta = DatasetMeta.from_json(doc["meta"])
+                    meta.path = name
+                    for parent in _parents(name):
+                        f._index.groups.setdefault(parent, {})
+                    f._index.datasets[name] = meta
+                    recovered_datasets += 1
+            elif op == "chunk":
+                name = _norm(str(doc["name"]))
+                meta = f._index.datasets.get(name)
+                if meta is None or meta.chunks is None or len(meta.chunks) >= meta.n_chunks_expected:
+                    torn = True
+                    truncated += 1
+                    continue
+                rec = ChunkRecord.from_json(doc["rec"])
+                ok = 0 <= rec.offset and rec.offset + rec.nbytes <= fsize
+                if ok:
+                    stored = os.pread(f._fd, rec.nbytes, rec.offset)
+                    ok = (
+                        len(stored) == rec.nbytes
+                        and (zlib.crc32(stored) & 0xFFFFFFFF) == rec.stored_crc32
+                    )
+                if not ok:
+                    torn = True
+                    truncated += 1
+                    continue
+                meta.chunks.append(rec)
+                recovered_chunks += 1
+                recovered_bytes += rec.nbytes
+                with f._alloc_lock:
+                    f._file_end = max(f._file_end, rec.offset + rec.nbytes)
+
+        clean = not records and not torn_journal
+        if not clean:
+            f._dirty = True
+            f._commit()  # publish the salvaged tree as a fresh generation
+        # reset the sidecar: everything salvageable is now committed
+        try:
+            os.unlink(jpath)
+        except OSError:
+            pass
+        report = RecoveryReport(
+            path=path,
+            clean=clean,
+            committed_generation=committed_gen,
+            generation=f._index.generation,
+            journal_records=len(records),
+            torn_journal=torn_journal,
+            recovered_datasets=recovered_datasets,
+            recovered_chunks=recovered_chunks,
+            recovered_bytes=recovered_bytes,
+            truncated_chunks=truncated,
+            scan_s=time.perf_counter() - t0,
+        )
+        f.last_recovery = report
+        return f, report
+
     def close(self) -> None:
         if self._closed:
             return
@@ -506,6 +680,15 @@ class TH5File:
             self._decode_pipe = None
         if self._dirty and self.mode != "r":
             self._commit()
+        if self._journal_fd is not None:
+            empty = self._journal_off == 0
+            os.close(self._journal_fd)
+            self._journal_fd = None
+            if empty:  # clean close: don't leave a zero-byte sidecar behind
+                try:
+                    os.unlink(journal_path(self.path))
+                except OSError:
+                    pass
         os.close(self._fd)
         self._closed = True
 
@@ -768,7 +951,63 @@ class TH5File:
             codec_id=codec_id,
         )
         pwrite_full(self._fd, payload, rec.offset)
+        self.publish_chunk(meta, rec)
         return rec
+
+    # -- crash-consistent publication (sidecar journal) ------------------------
+
+    def _journal_ensure_fd(self) -> int:
+        """Open (and reset) the sidecar journal lazily on first publication.
+
+        A plain re-open of the container discards any uncommitted state by
+        shadow-paging rules, so stale records from a crashed writer are
+        truncated here — :meth:`recover` is the opt-in salvage path and runs
+        *before* the file is written to again."""
+        fd = self._journal_fd
+        if fd is None:
+            fd = os.open(journal_path(self.path), os.O_RDWR | os.O_CREAT, 0o644)
+            os.ftruncate(fd, 0)
+            self._journal_fd = fd
+            self._journal_off = 0
+        return fd
+
+    def _journal_append(self, doc: Mapping[str, Any]) -> None:
+        payload = json.dumps(doc, separators=(",", ":")).encode("utf-8")
+        rec = (
+            struct.pack(_J_HDR_FMT, JOURNAL_MAGIC, len(payload), zlib.crc32(payload) & 0xFFFFFFFF)
+            + payload
+        )
+        if self.journal_sync:
+            os.fsync(self._fd)  # stored bytes durable BEFORE their commit-mark
+        with self._journal_lock:
+            fd = self._journal_ensure_fd()
+            off = self._journal_off
+            self._journal_off = off + len(rec)
+        pwrite_full(fd, rec, off)
+        if self.journal_sync:
+            os.fsync(fd)
+
+    def publish_chunk(self, meta: DatasetMeta, rec: ChunkRecord) -> None:
+        """Journal the commit-mark for one written chunk.
+
+        Ordering contract (docs/FORMAT.md "Recovery invariants"): the stored
+        payload must already be on disk (or at least issued — the record's
+        ``stored_crc32`` is re-validated against the file at recovery time,
+        so a mark that outruns its payload is detected, not trusted).
+        :meth:`append_chunk` / :meth:`write_chunked` call this internally;
+        external writers that drain payloads themselves against
+        :meth:`alloc_chunk` offsets (``aggregation.ChunkPipeline``) call it
+        once per record *after* the payload write completes."""
+        if not self.journaling or self.mode == "r":
+            return
+        name = self._name_of(meta)
+        gen = self._index.generation
+        if name not in self._journaled_datasets:
+            shell = meta.to_json()
+            shell["chunks"] = []  # chunk records are journaled individually
+            self._journal_append({"op": "dataset", "gen": gen, "name": name, "meta": shell})
+            self._journaled_datasets.add(name)
+        self._journal_append({"op": "chunk", "gen": gen, "name": name, "rec": rec.to_json()})
 
     def write_chunked(self, name_or_meta: str | DatasetMeta, array: np.ndarray) -> int:
         """Synchronous whole-array chunked write (encode → append, one chunk
@@ -1092,6 +1331,20 @@ class TH5File:
         pwrite_full(self._fd, sb, 0)
         os.fsync(self._fd)
         self._dirty = False
+        # the committed index supersedes every journaled commit-mark: reset
+        # the sidecar so the next interval starts empty (a crash between the
+        # superblock flip and this truncate is harmless — stale records carry
+        # the pre-commit generation and are skipped by recover())
+        with self._journal_lock:
+            if self._journal_fd is not None:
+                os.ftruncate(self._journal_fd, 0)
+                self._journal_off = 0
+            else:
+                try:  # stale sidecar from a crashed predecessor session
+                    os.unlink(journal_path(self.path))
+                except OSError:
+                    pass
+            self._journaled_datasets.clear()
         return self._index.generation
 
     def _check_writable(self) -> None:

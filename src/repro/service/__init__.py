@@ -39,6 +39,7 @@ from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
+    RetryableError,
     ServiceResponse,
     StatsQuery,
     SteeringRequest,
@@ -55,6 +56,7 @@ __all__ = [
     "DataService",
     "QosClass",
     "RemoteDataService",
+    "RetryableError",
     "ServiceConfig",
     "ServiceServer",
     "serve",

@@ -53,6 +53,7 @@ from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
+    RetryableError,
     ServiceResponse,
     StatsQuery,
     SteeringRequest,
@@ -199,14 +200,16 @@ def _release_shared(key: str) -> None:
 
 
 class _Job:
-    __slots__ = ("client", "request", "future", "t_submit", "t_start")
+    __slots__ = ("client", "request", "future", "t_submit", "t_start", "t_deadline")
 
-    def __init__(self, client: str, request: Any):
+    def __init__(self, client: str, request: Any, deadline_s: float | None = None):
         self.client = client
         self.request = request
         self.future: "Future[ServiceResponse]" = Future()
         self.t_submit = time.perf_counter()
         self.t_start = 0.0
+        # absolute expiry (perf_counter domain); None = no deadline
+        self.t_deadline = self.t_submit + deadline_s if deadline_s else None
 
 
 class _Sched:
@@ -309,13 +312,22 @@ class DataService:
 
     # -- submission ----------------------------------------------------------
 
-    def submit(self, client: str, request: Any) -> "Future[ServiceResponse]":
+    def submit(
+        self, client: str, request: Any, *, deadline_s: float | None = None
+    ) -> "Future[ServiceResponse]":
         """Admit one request for ``client``.  Raises :class:`AdmissionError`
         when the bounded queue is full (backpressure) — nothing is queued in
         that case.  :class:`~repro.service.requests.StatsQuery` is answered
         inline (never queued, never accounted): observability keeps working
-        during overload and does not perturb the counters it reports."""
-        job = _Job(str(client), request)
+        during overload and does not perturb the counters it reports.
+
+        ``deadline_s`` bounds the time the request may spend *queued*: a
+        job whose deadline has already expired when a worker picks it up is
+        shed with a typed :class:`~repro.service.requests.RetryableError`
+        (it never executed — resubmitting is safe) instead of serving a
+        stale interactive read.  The deadline is pre-execution only: a job
+        that starts executing always runs to completion."""
+        job = _Job(str(client), request, deadline_s)
         if isinstance(request, StatsQuery):
             with self._cv:
                 if self._shutdown:  # same contract as every other request
@@ -374,9 +386,11 @@ class DataService:
         attributed to ``client``)."""
         return self._shared.file.meta(dataset).n_rows
 
-    def request(self, client: str, request: Any) -> ServiceResponse:
+    def request(
+        self, client: str, request: Any, *, deadline_s: float | None = None
+    ) -> ServiceResponse:
         """Synchronous :meth:`submit` (admission errors still raise)."""
-        return self.submit(client, request).result()
+        return self.submit(client, request, deadline_s=deadline_s).result()
 
     def open_window_session(
         self,
@@ -459,6 +473,20 @@ class DataService:
                     self._cv.wait(wait_s)
                 self._inflight += 1
             job.t_start = time.perf_counter()
+            if job.t_deadline is not None and job.t_start > job.t_deadline:
+                # expired while queued: shed it (typed, safe to resubmit)
+                with self._cv:
+                    self._inflight -= 1
+                    self._failed += 1
+                    self._account_locked(job, None)
+                job.future.set_exception(
+                    RetryableError(
+                        f"request deadline expired after "
+                        f"{job.t_start - job.t_submit:.3f}s in queue"
+                        f" (deadline {job.t_deadline - job.t_submit:.3f}s)"
+                    )
+                )
+                continue
             try:
                 resp = self._execute(job)
             except BaseException as e:

@@ -21,22 +21,44 @@ Differences a caller can observe, by design:
 * ``dataset_rows`` is answered from a cached :class:`~repro.service.
   catalog.SnapshotCatalog` (one CatalogQuery on first use) instead of the
   broker's in-process metadata peek.
+
+Fault tolerance (``docs/SERVICE.md`` "Failure modes"):
+
+* **reconnect-and-replay** — when the connection dies with requests in
+  flight, the client re-dials with exponential backoff + jitter (up to
+  ``max_redials`` attempts) and *replays* the idempotent in-flight reads
+  (Hyperslab/Window/Catalog/Stats/Ping) on the fresh connection with
+  their original ``req_id``\\ s — callers' futures complete as if the drop
+  never happened, bit-identical.  Non-idempotent
+  :class:`~repro.service.requests.SteeringRequest` futures fail
+  immediately with a typed
+  :class:`~repro.service.requests.RetryableError` (the command's outcome
+  is unknown; only the caller can decide to re-issue it).
+* **heartbeat liveness** — with ``heartbeat_s`` set, a background thread
+  sends :data:`~repro.service.wire.KIND_PING` probes; a server silent for
+  ``heartbeat_timeout_s`` is declared dead and the reconnect path runs
+  (half-open TCP connections otherwise hang a pipelined client forever).
+* **BUSY retry helper** — ``request(..., busy_retries=N)`` resubmits on
+  admission rejection with jittered backoff, counted per client and
+  surfaced as ``ClientStats.retries`` in :meth:`stats` snapshots.
 """
 
 from __future__ import annotations
 
 import itertools
+import random
 import socket
 import threading
+import time
 from concurrent.futures import Future
 from typing import Iterable, Sequence
 
 from repro.core.container import TH5Error
 
 from . import wire
-from .requests import CatalogQuery, ServiceResponse, StatsQuery
+from .requests import CatalogQuery, RetryableError, ServiceResponse, StatsQuery, SteeringRequest
 from .sessions import LodWindowSession
-from .stats import ServiceStats
+from .stats import ClientStats, ServiceStats
 
 
 class RemoteDataService:
@@ -46,7 +68,9 @@ class RemoteDataService:
     :class:`~repro.service.transport.ServiceServer`'s resolved
     ``.address``.  ``qos`` names the broker-side
     :class:`~repro.service.broker.QosClass` every client id on this
-    connection is assigned to."""
+    connection is assigned to.  ``reconnect=False`` restores the PR 5
+    fail-fast behaviour (any connection error fails every pending
+    future)."""
 
     def __init__(
         self,
@@ -55,59 +79,146 @@ class RemoteDataService:
         qos: str = "interactive",
         connect_timeout: float | None = 30.0,
         sock_buf_bytes: int = 1 << 20,
+        reconnect: bool = True,
+        max_redials: int = 5,
+        redial_base_s: float = 0.05,
+        redial_cap_s: float = 2.0,
+        heartbeat_s: float | None = None,
+        heartbeat_timeout_s: float | None = None,
     ):
-        if isinstance(address, (tuple, list)):
-            sock = socket.create_connection(tuple(address), timeout=connect_timeout)
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        else:
-            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-            sock.settimeout(connect_timeout)
-            sock.connect(address)
-        if sock_buf_bytes:
-            # response planes are window-sized; see ServiceServer on buffers
-            sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, int(sock_buf_bytes))
-            sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, int(sock_buf_bytes))
-        sock.settimeout(None)
-        self._sock = sock
+        self._address = address
+        self._qos = str(qos)
+        self._connect_timeout = connect_timeout
+        self._sock_buf = int(sock_buf_bytes)
+        self._reconnect = bool(reconnect)
+        self._max_redials = int(max_redials)
+        self._redial_base = float(redial_base_s)
+        self._redial_cap = float(redial_cap_s)
+        self._heartbeat_s = float(heartbeat_s) if heartbeat_s else None
+        self._heartbeat_timeout = float(
+            heartbeat_timeout_s if heartbeat_timeout_s else 3.0 * (self._heartbeat_s or 1.0)
+        )
         self._send_lock = threading.Lock()
         self._pending_lock = threading.Lock()
-        self._pending: dict[int, tuple[Future, object]] = {}
+        # req_id → (future, request, frame_meta, frame_payload) — the frame
+        # halves are kept verbatim so a reconnect can replay byte-identical
+        # requests under their original req_ids
+        self._pending: dict[int, tuple[Future, object, dict, object]] = {}
         self._req_ids = itertools.count(1)
         self._closed = False
+        self._stop = threading.Event()
         self._catalog_cache = None
-        wire.send_frame(
-            sock, wire.KIND_HELLO, 0, {"version": wire.WIRE_VERSION, "qos": qos}
-        )
+        self._last_rx = time.monotonic()
+        self._hb_expired = False  # heartbeat severed the socket on purpose
+        self._fruitless = 0  # consecutive re-dials that never received a frame
+        self.reconnects = 0  # completed re-dials over this client's lifetime
+        self._retry_lock = threading.Lock()
+        self._retries: dict[str, int] = {}  # BUSY resubmissions per client id
+        self._sock = self._dial()
         self._reader = threading.Thread(
             target=self._read_loop, name="th5-wire-client-rx", daemon=True
         )
         self._reader.start()
+        self._heartbeat = None
+        if self._heartbeat_s:
+            self._heartbeat = threading.Thread(
+                target=self._heartbeat_loop, name="th5-wire-client-hb", daemon=True
+            )
+            self._heartbeat.start()
+
+    def _dial(self) -> socket.socket:
+        """Connect + socket options + HELLO — one fresh wire session."""
+        address = self._address
+        if isinstance(address, (tuple, list)):
+            sock = socket.create_connection(tuple(address), timeout=self._connect_timeout)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        else:
+            sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            sock.settimeout(self._connect_timeout)
+            sock.connect(address)
+        if self._sock_buf:
+            # response planes are window-sized; see ServiceServer on buffers
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, self._sock_buf)
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, self._sock_buf)
+        sock.settimeout(None)
+        try:
+            wire.send_frame(
+                sock, wire.KIND_HELLO, 0, {"version": wire.WIRE_VERSION, "qos": self._qos}
+            )
+        except BaseException:
+            sock.close()
+            raise
+        self._last_rx = time.monotonic()
+        return sock
 
     # -- submission (the DataService surface) --------------------------------
 
-    def submit(self, client: str, request) -> "Future[ServiceResponse]":
+    def submit(
+        self, client: str, request, *, deadline_s: float | None = None
+    ) -> "Future[ServiceResponse]":
         """Send one request; the returned future completes when its
         response frame arrives (admission rejections complete it with
-        :class:`~repro.service.broker.AdmissionError`)."""
+        :class:`~repro.service.broker.AdmissionError`).  ``deadline_s``
+        rides the frame metadata and bounds broker-side queueing (an
+        expired job is shed with :class:`~repro.service.requests.
+        RetryableError` — see ``DataService.submit``)."""
         meta, payload = wire.encode_request(client, request)  # raises on un-wireable
+        if deadline_s:
+            meta["deadline_s"] = float(deadline_s)
         req_id = next(self._req_ids)
         fut: "Future[ServiceResponse]" = Future()
+        replayable = self._reconnect and not isinstance(request, SteeringRequest)
         with self._pending_lock:
             if self._closed:
                 raise TH5Error("remote service connection closed")
-            self._pending[req_id] = (fut, request)
+            self._pending[req_id] = (fut, request, meta, payload)
         try:
             with self._send_lock:
                 wire.send_frame(self._sock, wire.KIND_REQUEST, req_id, meta, payload)
         except BaseException as e:
+            if replayable:
+                # the wire is down but the reader's reconnect will replay
+                # everything pending — including this entry — on the fresh
+                # connection; the future stays live
+                return fut
             with self._pending_lock:
                 self._pending.pop(req_id, None)
             raise TH5Error(f"wire send failed: {e}") from e
         return fut
 
-    def request(self, client: str, request) -> ServiceResponse:
-        """Synchronous :meth:`submit` (broker-side errors re-raise here)."""
-        return self.submit(client, request).result()
+    def request(
+        self,
+        client: str,
+        request,
+        *,
+        busy_retries: int = 0,
+        deadline_s: float | None = None,
+        retry_base_s: float = 0.01,
+        retry_cap_s: float = 0.5,
+    ) -> ServiceResponse:
+        """Synchronous :meth:`submit` (broker-side errors re-raise here).
+
+        ``busy_retries`` opts this request into bounded jittered-backoff
+        resubmission on admission rejection (BUSY): up to that many extra
+        attempts, each delayed ``min(retry_cap_s, retry_base_s * 2**k)``
+        scaled by a uniform [0.5, 1.5) jitter so a thundering herd of
+        rejected clients decorrelates.  Every resubmission is counted per
+        client and surfaced as ``ClientStats.retries`` in :meth:`stats`."""
+        from .broker import AdmissionError  # deferred: broker imports sessions
+
+        attempt = 0
+        while True:
+            try:
+                return self.submit(client, request, deadline_s=deadline_s).result()
+            except AdmissionError:
+                if attempt >= busy_retries:
+                    raise
+                attempt += 1
+                with self._retry_lock:
+                    self._retries[client] = self._retries.get(client, 0) + 1
+                delay = min(retry_cap_s, retry_base_s * (2 ** (attempt - 1)))
+                if self._stop.wait(delay * (0.5 + random.random())):
+                    raise
 
     def open_window_session(
         self,
@@ -125,8 +236,18 @@ class RemoteDataService:
     def stats(self) -> ServiceStats:
         """The broker's ``ServiceStats`` snapshot, via a
         :class:`~repro.service.requests.StatsQuery` (answered inline
-        broker-side: works during overload, perturbs no counters)."""
-        return self.request("__stats__", StatsQuery()).value
+        broker-side: works during overload, perturbs no counters), with
+        this client's BUSY-resubmission counters merged in as
+        ``ClientStats.retries`` (client-side knowledge the broker cannot
+        have)."""
+        st = self.request("__stats__", StatsQuery()).value
+        with self._retry_lock:
+            for cid, n in self._retries.items():
+                cs = st.clients.get(cid)
+                if cs is None:
+                    cs = st.clients[cid] = ClientStats()
+                cs.retries = n
+        return st
 
     def dataset_rows(self, dataset: str, *, client: str | None = None) -> int:
         """Row count of one dataset, from a cached catalog (the single
@@ -143,28 +264,114 @@ class RemoteDataService:
     # -- response demultiplexing ---------------------------------------------
 
     def _read_loop(self) -> None:
-        error: Exception | None = None
-        try:
-            while True:
-                frame = wire.recv_frame(self._sock)
-                if frame is None:
-                    break  # clean server close
-                self._complete(frame)
-        except Exception as e:  # wire/socket/connection-level failure
-            error = e if not self._closed else None
-        finally:
-            self._fail_pending(error)
+        while True:
+            error: Exception | None = None
+            try:
+                while True:
+                    frame = wire.recv_frame(self._sock)
+                    if frame is None:
+                        break  # clean server close
+                    self._last_rx = time.monotonic()
+                    self._fruitless = 0  # the peer is really talking to us
+                    self._complete(frame)
+            except Exception as e:  # wire/socket/connection-level failure
+                error = e if not self._closed else None
+            if error is None:
+                with self._pending_lock:
+                    have_pending = bool(self._pending)
+                if self._closed or (not have_pending and not self._reconnect):
+                    self._fail_pending(None)
+                    return
+                # EOF the caller didn't ask for: the server went away (maybe
+                # mid-conversation) — same recovery as a torn connection; an
+                # idle client re-dials so its NEXT submit finds a live wire
+                error = TH5Error(
+                    "server closed the connection"
+                    + (" with requests pending" if have_pending else "")
+                )
+            if self._hb_expired:
+                # the "EOF" was the heartbeat severing a silent socket —
+                # name the real failure (a local shutdown reads as clean EOF)
+                self._hb_expired = False
+                error = TH5Error(
+                    f"server unresponsive: no frame for {self._heartbeat_timeout:.3g}s "
+                    f"(heartbeat liveness timeout); last error: {error}"
+                )
+            fatal = getattr(error, "_th5_fatal", False)
+            # a re-dial that "succeeds" against a peer that then never sends
+            # a single frame is not progress: after max_redials consecutive
+            # fruitless sessions, stop looping and surface the failure
+            if self._fruitless >= self._max_redials:
+                fatal = True
+            if fatal or not self._reconnect or not self._recover(error):
+                self._fail_pending(error)
+                return
+            self._fruitless += 1
+            # reconnected + replayed: resume reading on the fresh socket
+
+    def _recover(self, error: Exception) -> bool:
+        """Re-dial with exponential backoff + jitter and replay the
+        idempotent pending requests.  Returns True when a fresh session is
+        live (the read loop resumes), False to give up (pending futures
+        then fail with the original error)."""
+        # non-idempotent steering futures fail NOW, typed: their outcome on
+        # the dead connection is unknowable and must not be replayed
+        doomed: list[Future] = []
+        with self._pending_lock:
+            if self._closed:
+                return False
+            for rid in [r for r, e in self._pending.items() if isinstance(e[1], SteeringRequest)]:
+                doomed.append(self._pending.pop(rid)[0])
+        for fut in doomed:
+            fut.set_exception(
+                RetryableError(f"connection lost with steering request in flight: {error}")
+            )
+        for attempt in range(self._max_redials):
+            delay = min(self._redial_cap, self._redial_base * (2**attempt))
+            if self._stop.wait(delay * (0.5 + random.random())):
+                return False
+            if self._closed:
+                return False
+            try:
+                sock = self._dial()
+            except (OSError, wire.WireError):
+                continue
+            try:
+                with self._send_lock:
+                    old, self._sock = self._sock, sock
+                    try:
+                        old.close()
+                    except OSError:
+                        pass
+                    # snapshot under the send lock: a submit that raced the
+                    # outage either landed in pending before this (replayed
+                    # here) or blocks on the lock and sends on the new
+                    # socket itself
+                    with self._pending_lock:
+                        replay = sorted(self._pending.items())
+                    for rid, (_fut, _req, meta, payload) in replay:
+                        wire.send_frame(sock, wire.KIND_REQUEST, rid, meta, payload)
+            except (OSError, wire.WireError):
+                continue  # new socket died during replay: next attempt
+            self.reconnects += 1
+            return True
+        return False
 
     def _complete(self, frame: wire.Frame) -> None:
+        if frame.kind == wire.KIND_PONG:
+            return  # liveness echo: receiving it already refreshed _last_rx
         if frame.kind == wire.KIND_ERROR and frame.req_id == 0:
-            # connection-level failure (bad HELLO, torn framing server-side):
-            # nothing specific to answer — every pending request is dead
-            raise wire.decode_error(frame.meta)
+            # connection-level rejection (bad HELLO, torn framing server-side).
+            # Deterministic: a re-dial would present the same HELLO and be
+            # rejected again, so mark it fatal — reconnect must not loop on it.
+            err = wire.decode_error(frame.meta)
+            err._th5_fatal = True
+            raise err
         with self._pending_lock:
             entry = self._pending.pop(frame.req_id, None)
         if entry is None:
             return  # response for a request we gave up on
-        fut, request = entry
+        fut, request, _meta, _payload = entry
         if frame.kind == wire.KIND_OK:
             meta = frame.meta
             try:
@@ -204,21 +411,47 @@ class RemoteDataService:
             self._closed = True
             pending = list(self._pending.values())
             self._pending.clear()
-        for fut, _req in pending:
+        for fut, _req, _meta, _payload in pending:
             fut.set_exception(
                 error or TH5Error("remote service connection closed with requests pending")
             )
+
+    # -- liveness --------------------------------------------------------------
+
+    def _heartbeat_loop(self) -> None:
+        """PING the server every ``heartbeat_s``; a peer silent past
+        ``heartbeat_timeout_s`` is declared dead and its socket severed so
+        the reader runs the reconnect path (a half-open TCP connection
+        otherwise blocks ``recv`` indefinitely)."""
+        while not self._stop.wait(self._heartbeat_s):
+            if self._closed:
+                return
+            if time.monotonic() - self._last_rx > self._heartbeat_timeout:
+                self._hb_expired = True
+                try:
+                    self._sock.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+                continue  # the reader takes it from here
+            try:
+                with self._send_lock:
+                    wire.send_frame(self._sock, wire.KIND_PING, 0, {})
+            except Exception:
+                pass  # wire down: the reader is already on it
 
     # -- lifecycle -----------------------------------------------------------
 
     def close(self) -> None:
         with self._pending_lock:
             self._closed = True
+        self._stop.set()
         try:
             self._sock.shutdown(socket.SHUT_RDWR)
         except OSError:
             pass
         self._reader.join(timeout=10.0)
+        if self._heartbeat is not None:
+            self._heartbeat.join(timeout=10.0)
         try:
             self._sock.close()
         except OSError:  # pragma: no cover

@@ -20,6 +20,20 @@ from typing import Any, Mapping
 
 import numpy as np
 
+from repro.core.container import TH5Error
+
+
+class RetryableError(TH5Error):
+    """The request did not execute — resubmitting it is safe.
+
+    Raised (typed, end-to-end across the wire) when the service layer can
+    prove the request never touched shared state: a queued job shed because
+    its ``deadline_s`` expired before a worker picked it up, or a
+    non-idempotent :class:`SteeringRequest` that was in flight when the
+    connection died (the reconnect logic replays idempotent reads
+    transparently but will not guess at a steering command's outcome — the
+    caller decides whether to re-issue it)."""
+
 
 @dataclass(frozen=True)
 class HyperslabQuery:

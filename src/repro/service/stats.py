@@ -71,7 +71,10 @@ class ClientStats:
     (``DataService.set_client_class``); ``throttled`` counts scheduler
     passes that skipped this client because its token bucket was in debt
     (advisory — a measure of how hard the rate limit is biting, not a
-    request count).
+    request count); ``retries`` counts client-side BUSY resubmissions
+    (``RemoteDataService.request(busy_retries=...)``) — recorded by the
+    CLIENT and merged into its stats snapshots, since the broker cannot
+    distinguish a retry from a fresh request.
     """
 
     requests: int = 0
@@ -81,6 +84,7 @@ class ClientStats:
     chunk_misses: int = 0
     qos_class: str = "interactive"
     throttled: int = 0
+    retries: int = 0
     p50_ms: float = 0.0
     p99_ms: float = 0.0
 

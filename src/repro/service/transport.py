@@ -35,16 +35,20 @@ port 0 picks an ephemeral port, see :attr:`ServiceServer.address`).
 
 from __future__ import annotations
 
+import logging
 import os
 import queue
 import socket
 import struct
 import threading
+import time
 
 from . import wire
 from .broker import AdmissionError, DataService
 
 _SENTINEL = None  # sender-queue shutdown marker
+
+log = logging.getLogger("repro.service.transport")
 
 
 class _Conn:
@@ -59,6 +63,11 @@ class _Conn:
         self._dead = False
         self.qos = server.service.config.default_class
         self._known_clients: set[str] = set()
+        # admitted-but-unanswered requests on this connection (drain gauge):
+        # incremented after a successful submit, decremented once the
+        # response frame is handed to the wire
+        self.inflight = 0
+        self._inflight_lock = threading.Lock()
         self.reader = threading.Thread(
             target=self._read_loop, name=f"{name}-rx", daemon=True
         )
@@ -78,6 +87,7 @@ class _Conn:
 
     def _read_loop(self) -> None:
         svc = self.server.service
+        hello_done = False
         try:
             frame = wire.recv_frame(self.sock)
             if frame is None:
@@ -96,17 +106,27 @@ class _Conn:
                 except KeyError:
                     raise wire.WireError(f"unknown QoS class {qos!r}") from None
                 self.qos = str(qos)
+            hello_done = True
             while True:
                 frame = wire.recv_frame(self.sock)
                 if frame is None:
                     return  # clean goodbye
+                if frame.kind == wire.KIND_PING:
+                    # liveness probe: answered inline, never queued — PONGs
+                    # must keep flowing while the admission queue is full
+                    self._put(wire.KIND_PONG, frame.req_id, {}, None)
+                    continue
                 if frame.kind != wire.KIND_REQUEST:
                     raise wire.WireError(f"unexpected frame kind {frame.kind}")
                 self._dispatch(frame)
         except (wire.WireDisconnect, ConnectionError, BrokenPipeError):
+            if not hello_done:
+                self.server._count_hello_failure("peer vanished during HELLO")
             return  # peer vanished: nothing to answer
         except wire.WireError as e:
             # framing no longer trustworthy: best-effort error frame, close
+            if not hello_done:
+                self.server._count_hello_failure(str(e))
             self._put(wire.KIND_ERROR, 0, wire.encode_error(e), None)
         except OSError:
             return  # socket torn down under us (server close)
@@ -125,8 +145,11 @@ class _Conn:
         if client not in self._known_clients:
             self._known_clients.add(client)
             svc.set_client_class(client, self.qos)
+        deadline = frame.meta.get("deadline_s")
         try:
-            fut = svc.submit(client, request)
+            fut = svc.submit(
+                client, request, deadline_s=float(deadline) if deadline else None
+            )
         except AdmissionError as e:
             self._put(
                 wire.KIND_BUSY,
@@ -143,6 +166,8 @@ class _Conn:
         except Exception as e:  # e.g. service closed
             self._put(wire.KIND_ERROR, req_id, wire.encode_error(e), None)
             return
+        with self._inflight_lock:
+            self.inflight += 1
         fut.add_done_callback(lambda f, rid=req_id, cid=client: self._complete(rid, cid, f))
 
     def _complete(self, req_id: int, client: str, fut) -> None:
@@ -152,17 +177,21 @@ class _Conn:
         wakeup per response on a GIL-bound box); a contended wire — or a
         peer slow enough to back it up — falls back to the queue so
         workers never line up behind one connection's socket."""
-        exc = fut.exception()
-        if exc is not None:
-            self._put(wire.KIND_ERROR, req_id, wire.encode_error(exc), None)
-            return
-        resp = fut.result()
         try:
-            desc, payload = wire.encode_value(resp.value)
-        except TypeError as e:  # pragma: no cover - un-wireable value type
-            self._put(wire.KIND_ERROR, req_id, wire.encode_error(e), None)
-            return
-        self._put(wire.KIND_OK, req_id, wire.response_meta(client, resp, desc), payload)
+            exc = fut.exception()
+            if exc is not None:
+                self._put(wire.KIND_ERROR, req_id, wire.encode_error(exc), None)
+                return
+            resp = fut.result()
+            try:
+                desc, payload = wire.encode_value(resp.value)
+            except TypeError as e:  # pragma: no cover - un-wireable value type
+                self._put(wire.KIND_ERROR, req_id, wire.encode_error(e), None)
+                return
+            self._put(wire.KIND_OK, req_id, wire.response_meta(client, resp, desc), payload)
+        finally:
+            with self._inflight_lock:
+                self.inflight -= 1
 
     def _put(self, kind: int, req_id: int, meta: dict, payload) -> None:
         if self._wlock.acquire(blocking=False):
@@ -244,10 +273,13 @@ class ServiceServer:
         backlog: int = 64,
         sock_buf_bytes: int = 1 << 20,
         send_timeout_s: float = 20.0,
+        drain_timeout_s: float = 5.0,
     ):
         self.service = service
         self._sock_buf = int(sock_buf_bytes)
         self._send_timeout = float(send_timeout_s)
+        self._drain_timeout = float(drain_timeout_s)
+        self._hello_failures = 0
         self._unix_path: str | None = None
         if isinstance(address, (str, os.PathLike)):
             path = os.fspath(address)
@@ -280,24 +312,18 @@ class ServiceServer:
                 sock, _peer = self._lsock.accept()
             except OSError:
                 return  # listener closed
-            if sock.family == socket.AF_INET:
-                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            if self._sock_buf:
-                # one LOD window is commonly larger than the default socket
-                # buffer; deeper buffers keep the payload plane moving while
-                # the GIL is elsewhere (kernel clamps to its own maximum)
-                sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, self._sock_buf)
-                sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, self._sock_buf)
-            if self._send_timeout > 0:
-                # slow-consumer eviction: a peer that stops reading for this
-                # long gets disconnected instead of wedging the thread
-                # (worker or sender) that is mid-frame on its socket
-                sec = int(self._send_timeout)
-                usec = int((self._send_timeout - sec) * 1e6)
-                sock.setsockopt(
-                    socket.SOL_SOCKET, socket.SO_SNDTIMEO,
-                    struct.pack("@ll", sec, usec),
-                )
+            try:
+                self._setup_conn(sock)
+            except OSError as e:
+                # one bad accept (peer already gone before setsockopt, fd
+                # pressure, ...) must never take down the listener serving
+                # every other client
+                log.warning("connection setup failed: %s", e)
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                continue
             with self._lock:
                 if self._closed:
                     sock.close()
@@ -306,6 +332,31 @@ class ServiceServer:
                 conn = _Conn(self, sock, f"th5-wire-{self._n_accepted}")
                 self._conns.add(conn)  # registered BEFORE its threads run
             conn.start()
+
+    def _setup_conn(self, sock: socket.socket) -> None:
+        if sock.family == socket.AF_INET:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        if self._sock_buf:
+            # one LOD window is commonly larger than the default socket
+            # buffer; deeper buffers keep the payload plane moving while
+            # the GIL is elsewhere (kernel clamps to its own maximum)
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, self._sock_buf)
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, self._sock_buf)
+        if self._send_timeout > 0:
+            # slow-consumer eviction: a peer that stops reading for this
+            # long gets disconnected instead of wedging the thread
+            # (worker or sender) that is mid-frame on its socket
+            sec = int(self._send_timeout)
+            usec = int((self._send_timeout - sec) * 1e6)
+            sock.setsockopt(
+                socket.SOL_SOCKET, socket.SO_SNDTIMEO,
+                struct.pack("@ll", sec, usec),
+            )
+
+    def _count_hello_failure(self, reason: str) -> None:
+        with self._lock:
+            self._hello_failures += 1
+        log.info("connection rejected before HELLO completed: %s", reason)
 
     def _forget(self, conn: _Conn) -> None:
         with self._lock:
@@ -316,19 +367,50 @@ class ServiceServer:
         with self._lock:
             return len(self._conns)
 
+    def stats(self) -> dict:
+        """Transport-level gauges: ``accepted`` connections over the
+        server's lifetime, currently ``active`` ones, admitted-but-
+        unanswered ``inflight`` requests across them, and ``hello_failures``
+        (connections dropped before completing HELLO — garbage, version
+        mismatch, or a peer dying mid-handshake)."""
+        with self._lock:
+            conns = list(self._conns)
+            return {
+                "accepted": self._n_accepted,
+                "active": len(conns),
+                "inflight": sum(c.inflight for c in conns),
+                "hello_failures": self._hello_failures,
+            }
+
     def close(self) -> None:
-        """Stop accepting, tear down live connections, join their threads.
-        In-flight requests still complete inside the service; their
-        responses are dropped with the sockets."""
+        """Stop accepting, drain, tear down connections, join threads.
+
+        Drain-on-shutdown: after the listener closes, live connections get
+        up to ``drain_timeout_s`` for their admitted requests to finish and
+        their response frames to reach the wire before the sockets are
+        severed — a shutdown ordered while replies are in flight must not
+        turn completed work into torn frames."""
         with self._lock:
             if self._closed:
                 return
             self._closed = True
             conns = list(self._conns)
         try:
+            # shutdown BEFORE close: closing the fd does not wake a thread
+            # blocked in accept(); shutdown does, so the acceptor exits now
+            # instead of leaking past its join timeout
+            self._lsock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
             self._lsock.close()
         except OSError:  # pragma: no cover
             pass
+        deadline = time.monotonic() + self._drain_timeout
+        while time.monotonic() < deadline:
+            if all(c.inflight == 0 for c in conns):
+                break
+            time.sleep(0.005)
         for c in conns:
             c.shutdown()
         for c in conns:

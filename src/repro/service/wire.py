@@ -52,6 +52,7 @@ from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
+    RetryableError,
     ServiceResponse,
     StatsQuery,
     SteeringRequest,
@@ -69,6 +70,8 @@ KIND_REQUEST = 2  # client → server: one typed request
 KIND_OK = 3  # server → client: completed response (payload plane = array)
 KIND_BUSY = 4  # server → client: admission queue full (queue_depth, client)
 KIND_ERROR = 5  # server → client: request failed (etype + message end-to-end)
+KIND_PING = 6  # client → server: liveness probe (answered inline, never queued)
+KIND_PONG = 7  # server → client: PING echo (req_id mirrored back)
 
 HEADER_FMT = "<4sBBHQIQ"
 HEADER_SIZE = struct.calcsize(HEADER_FMT)  # 28 bytes
@@ -406,6 +409,7 @@ def _stats_from_json(d: dict) -> ServiceStats:
 _ERROR_TYPES: dict[str, type] = {
     "CorruptFileError": CorruptFileError,
     "TH5Error": TH5Error,
+    "RetryableError": RetryableError,
     "WireError": WireError,
     "ValueError": ValueError,
     "TypeError": TypeError,

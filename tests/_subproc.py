@@ -31,3 +31,26 @@ def run_with_devices(code: str, n_devices: int, timeout: int = 600) -> str:
             f"subprocess failed (rc={proc.returncode})\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
         )
     return proc.stdout
+
+
+def run_expecting_death(code: str, expect_rc: int, timeout: int = 600) -> str:
+    """Run a snippet that is EXPECTED to die (chaos harness: the
+    kill-at-byte-k writer calls ``os._exit(expect_rc)`` mid-write).  Raises
+    AssertionError when the child survives or dies with a different code;
+    returns its stdout (flushed before the kill) otherwise."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=REPO,
+    )
+    if proc.returncode != expect_rc:
+        raise AssertionError(
+            f"expected the child to die with rc={expect_rc}, got rc={proc.returncode}\n"
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+        )
+    return proc.stdout

@@ -1,0 +1,213 @@
+"""Fault-injection toolkit for the chaos suite (``tests/test_chaos.py``).
+
+Three injectors, each deterministic and scoped so the suite stays
+reproducible:
+
+``failing_pwrites``
+    Context manager that patches ``os.pwrite`` with a byte budget.  Once
+    the budget is exhausted further writes either raise ``OSError(EIO)``
+    (``mode="fail"``) or land only partially and then return 0
+    (``mode="short"`` — the torn-write case ``pwrite_full`` must surface).
+    Optionally filtered to a single fd so the journal / data file can be
+    targeted independently.
+
+``FlakySocket``
+    Wrapper around a connected socket that injects faults on the *send*
+    side: per-send delay, or an abrupt mid-frame disconnect after a byte
+    budget (the peer sees a torn frame).  ``recv_into`` passes through, so
+    the wrapped socket still works as a wire endpoint until the fault
+    fires.
+
+``kill_writer_code`` / ``KILL_RC``
+    Source template for a child process (run via
+    ``tests/_subproc.run_expecting_death``) that creates a chunked TH5
+    dataset and calls ``os._exit(KILL_RC)`` the moment cumulative
+    data-file ``pwrite`` traffic crosses ``kill_after_bytes`` — the last
+    write lands only partially, exactly like a power cut at byte k.  The
+    parent recomputes the expected array with ``expected_array`` (same
+    seed, same formula) and asserts ``TH5File.recover`` round-trips every
+    committed/salvaged chunk bit-identically.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+import time
+from unittest import mock
+
+from tests._subproc import SRC
+
+# Exit code the kill-at-byte-k writer dies with.  Distinct from every rc
+# python itself produces (0, 1, 2) so an unrelated crash in the child is
+# never mistaken for the injected kill.
+KILL_RC = 87
+
+
+@contextlib.contextmanager
+def failing_pwrites(*, after_bytes: int, mode: str = "fail", fd: int | None = None):
+    """Patch ``os.pwrite`` to fail once ``after_bytes`` have been written.
+
+    ``mode="fail"``  -> raise ``OSError(EIO)`` on the first over-budget write.
+    ``mode="short"`` -> the straddling write lands only up to the budget,
+    subsequent writes return 0 (``pwrite_full`` treats that as ENOSPC).
+    ``fd`` filters the injection to one descriptor; other fds pass through.
+
+    Yields the mutable state dict (``state["left"]``) so a test can watch
+    the budget drain.
+    """
+    if mode not in ("fail", "short"):
+        raise ValueError(f"unknown failure mode: {mode!r}")
+    real = os.pwrite
+    state = {"left": int(after_bytes)}
+    lock = threading.Lock()
+
+    def fake(wfd, buf, off):
+        if fd is not None and wfd != fd:
+            return real(wfd, buf, off)
+        mv = memoryview(buf).cast("B")
+        with lock:
+            left = state["left"]
+            if left <= 0:
+                if mode == "fail":
+                    raise OSError(5, "injected I/O error (chaos)")
+                return 0  # persistent short write: caller must not loop forever
+            take = min(len(mv), left)
+            state["left"] = left - take
+        if take < len(mv):
+            # Torn write: only the first `take` bytes reach the disk.
+            real(wfd, mv[:take], off)
+            if mode == "fail":
+                raise OSError(5, "injected torn write (chaos)")
+            return take
+        return real(wfd, buf, off)
+
+    with mock.patch("os.pwrite", side_effect=fake):
+        yield state
+
+
+class FlakySocket:
+    """Socket wrapper that injects send-side faults.
+
+    ``drop_after_bytes`` — after that many bytes have been pushed, the
+    next send tears mid-frame: the bytes that fit are sent, the socket is
+    closed, and ``ConnectionResetError`` is raised locally.  The peer sees
+    a frame cut off at an arbitrary byte.
+
+    ``delay_s`` — sleep before every send (slow-network shaping for the
+    reconnect-window benchmark and heartbeat tests).
+
+    Only the methods ``wire.py`` uses are interposed; everything else
+    proxies to the wrapped socket.
+    """
+
+    def __init__(self, sock, *, drop_after_bytes: int | None = None, delay_s: float = 0.0):
+        self._sock = sock
+        self._sent = 0
+        self.drop_after_bytes = drop_after_bytes
+        self.delay_s = delay_s
+
+    def _budget(self) -> int | None:
+        if self.drop_after_bytes is None:
+            return None
+        return self.drop_after_bytes - self._sent
+
+    def sendmsg(self, buffers):
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        budget = self._budget()
+        if budget is None:
+            n = self._sock.sendmsg(buffers)
+            self._sent += n
+            return n
+        flat = b"".join(bytes(memoryview(b)) for b in buffers)
+        if budget <= 0:
+            self._sock.close()
+            raise ConnectionResetError("injected disconnect (chaos)")
+        if len(flat) > budget:
+            self._sock.sendall(flat[:budget])
+            self._sent += budget
+            self._sock.close()
+            raise ConnectionResetError("injected mid-frame disconnect (chaos)")
+        self._sock.sendall(flat)
+        self._sent += len(flat)
+        return len(flat)
+
+    def sendall(self, data):
+        self.sendmsg([data])
+
+    def recv_into(self, view):
+        return self._sock.recv_into(view)
+
+    def __getattr__(self, name):
+        return getattr(self._sock, name)
+
+
+def expected_array(rows: int, cols: int, seed: int):
+    """The exact array the kill-at-byte-k writer writes (same seed/formula
+    here and in the child template — keep the two in lockstep)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((rows, cols)).astype("<f4")
+
+
+def kill_writer_code(
+    path: str,
+    *,
+    kill_after_bytes: int,
+    rows: int = 256,
+    cols: int = 16,
+    chunk_rows: int = 32,
+    codec: str = "zlib",
+    seed: int = 7,
+    commit_rows: int = 0,
+) -> str:
+    """Source for a child that writes a chunked dataset and dies at byte k.
+
+    The byte budget starts counting only AFTER ``TH5File.create`` returns
+    (a kill inside superblock creation models a mkfs crash, not a writer
+    crash — out of scope).  ``commit_rows`` > 0 writes that many rows to a
+    second dataset and commits first, so recovery layers journal replay on
+    top of a non-empty committed generation.  The child prints the data
+    file's committed generation before the throttled phase begins.
+    """
+    return f"""
+import os, sys
+sys.path.insert(0, {SRC!r})
+import numpy as np
+from repro.core.container import TH5File
+
+f = TH5File.create({path!r})
+f.journal_sync = True  # crash realism: mark must not outrun payload bytes
+
+if {commit_rows} > 0:
+    base = f.create_chunked_dataset(
+        "/committed", ({commit_rows}, {cols}), "<f4", {chunk_rows}, codec={codec!r})
+    rng0 = np.random.default_rng({seed} + 1)
+    f.write_chunked(base, rng0.standard_normal(({commit_rows}, {cols})).astype("<f4"))
+    f.commit()
+
+print("GEN", f._index.generation, flush=True)
+
+budget = [{kill_after_bytes}]
+_real = os.pwrite
+def _counting(fd, buf, off):
+    mv = memoryview(buf).cast("B")
+    if len(mv) >= budget[0]:
+        k = budget[0]
+        if k > 0:
+            _real(fd, mv[:k], off)  # the torn tail: first k bytes land
+        os._exit({KILL_RC})
+    budget[0] -= len(mv)
+    return _real(fd, buf, off)
+os.pwrite = _counting
+
+meta = f.create_chunked_dataset(
+    "/victim", ({rows}, {cols}), "<f4", {chunk_rows}, codec={codec!r})
+rng = np.random.default_rng({seed})
+f.write_chunked(meta, rng.standard_normal(({rows}, {cols})).astype("<f4"))
+f.commit()
+os._exit({KILL_RC})  # budget outlived the write: still report the kill rc
+"""

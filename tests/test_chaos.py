@@ -1,0 +1,433 @@
+"""Chaos suite: end-to-end fault tolerance of the TH5 stack.
+
+Storage plane — a writer killed at an arbitrary byte offset (the
+``tests/chaos.py`` kill-at-byte-k child) must leave a file
+``TH5File.recover`` can always open: every committed chunk survives
+bit-identically, every journaled-and-durable chunk is salvaged, at most
+the torn tail is truncated, and recovery itself never raises on partial
+state.
+
+Wire plane — a connection severed mid-conversation must be survivable:
+the client re-dials and replays idempotent reads bit-identically,
+non-idempotent steering fails fast with a typed
+:class:`~repro.service.requests.RetryableError`, expired-in-queue jobs
+are shed the same way, BUSY storms are absorbed by the bounded retry
+helper, heartbeats flag a silent peer, and none of it leaks broker
+threads or connections (asserted through ``ServiceServer.stats()``).
+"""
+
+import os
+import shutil
+import socket
+import struct
+import tempfile
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core.aggregation import AggregationConfig, ChunkPipeline
+from repro.core.container import (
+    JOURNAL_MAGIC,
+    TH5File,
+    journal_path,
+)
+from repro.service import (
+    DataService,
+    HyperslabQuery,
+    PingQuery,
+    RemoteDataService,
+    RetryableError,
+    ServiceConfig,
+    ServiceServer,
+    SteeringRequest,
+    WindowQuery,
+)
+from repro.service import wire
+
+from tests import chaos
+from tests._subproc import run_expecting_death
+
+ROWS, COLS, CHUNK_ROWS = 256, 16, 32
+N_CHUNKS = ROWS // CHUNK_ROWS
+SEED = 7
+
+
+# -- storage plane: kill-at-byte-k ---------------------------------------------
+
+
+def _recover_and_check(path: str, expect: np.ndarray):
+    """Shared postcondition of every storage-chaos scenario: recovery never
+    raises, whatever was salvaged is a bit-identical PREFIX of the written
+    data, and the file afterwards reopens as an ordinary committed
+    container."""
+    f, report = TH5File.recover(path)
+    try:
+        assert report.generation >= report.committed_generation
+        if "/victim" in f.datasets():
+            recs = f.meta("/victim").chunks
+            assert len(recs) <= N_CHUNKS
+            if recs:
+                got = f.read_rows("/victim", 0, len(recs) * CHUNK_ROWS)
+                np.testing.assert_array_equal(got, expect[: len(recs) * CHUNK_ROWS])
+    finally:
+        f.close()
+    assert not os.path.exists(journal_path(path))  # sidecar reset either way
+    with TH5File.open(path) as back:  # committed state: plain open works
+        if "/victim" in back.datasets():
+            recs = back.meta("/victim").chunks
+            if recs:
+                got = back.read_rows("/victim", 0, len(recs) * CHUNK_ROWS)
+                np.testing.assert_array_equal(got, expect[: len(recs) * CHUNK_ROWS])
+    return report
+
+
+@pytest.mark.parametrize("kill_after", [200, 1500, 4000, 9000, 20000, 10**9])
+def test_writer_killed_at_byte_k_always_recovers(tmp_path, kill_after):
+    """Sweep the kill point across the whole write: early (no dataset
+    journaled yet), mid-chunk, mid-journal-record, and past the end
+    (budget outlives the write → everything committed)."""
+    path = str(tmp_path / "crash.th5")
+    run_expecting_death(
+        chaos.kill_writer_code(path, kill_after_bytes=kill_after, rows=ROWS,
+                               cols=COLS, chunk_rows=CHUNK_ROWS, seed=SEED),
+        expect_rc=chaos.KILL_RC,
+    )
+    expect = chaos.expected_array(ROWS, COLS, SEED)
+    report = _recover_and_check(path, expect)
+    if kill_after >= 10**9:
+        # the child committed before its deliberate exit: nothing to salvage
+        assert report.clean and report.recovered_chunks == 0
+
+
+def test_killed_writer_preserves_committed_base(tmp_path):
+    """A committed dataset must survive ANY later crash bit-identically —
+    the salvage pass layers on top of the committed generation, never
+    rewrites it."""
+    path = str(tmp_path / "crash.th5")
+    commit_rows = 2 * CHUNK_ROWS
+    run_expecting_death(
+        chaos.kill_writer_code(path, kill_after_bytes=6000, rows=ROWS, cols=COLS,
+                               chunk_rows=CHUNK_ROWS, seed=SEED, commit_rows=commit_rows),
+        expect_rc=chaos.KILL_RC,
+    )
+    expect = chaos.expected_array(ROWS, COLS, SEED)
+    base = np.random.default_rng(SEED + 1).standard_normal((commit_rows, COLS)).astype("<f4")
+    f, report = TH5File.recover(path)
+    try:
+        assert report.committed_generation >= 1
+        np.testing.assert_array_equal(f.read_rows("/committed", 0, commit_rows), base)
+        if "/victim" in f.datasets():
+            recs = f.meta("/victim").chunks
+            if recs:
+                got = f.read_rows("/victim", 0, len(recs) * CHUNK_ROWS)
+                np.testing.assert_array_equal(got, expect[: len(recs) * CHUNK_ROWS])
+    finally:
+        f.close()
+
+
+def test_recover_clean_file_is_a_noop(tmp_path):
+    path = str(tmp_path / "clean.th5")
+    a = chaos.expected_array(ROWS, COLS, SEED)
+    with TH5File.create(path) as f:
+        m = f.create_chunked_dataset("/victim", a.shape, "<f4", CHUNK_ROWS)
+        f.write_chunked(m, a)
+        f.commit()
+    gen_before = TH5File.open(path).generation
+    f, report = TH5File.recover(path)
+    try:
+        assert report.clean
+        assert report.journal_records == 0 and not report.torn_journal
+        assert report.recovered_chunks == 0 and report.truncated_chunks == 0
+        assert f.generation == gen_before  # clean recovery commits nothing
+        np.testing.assert_array_equal(f.read_rows("/victim", 0, ROWS), a)
+    finally:
+        f.close()
+
+
+def test_pipeline_writer_crash_recovers_published_chunks(tmp_path):
+    """The overlapped ChunkPipeline path publishes chunks too (payload
+    drained to disk BEFORE the journal mark).  Snapshot the on-disk state
+    mid-session — data file + sidecar, no commit, no close — exactly what
+    a crash leaves behind, and recover the snapshot."""
+    path = str(tmp_path / "live.th5")
+    crash = str(tmp_path / "crashed.th5")
+    a = chaos.expected_array(ROWS, COLS, SEED)
+    with TH5File.create(path) as f:
+        m = f.create_chunked_dataset("/victim", a.shape, "<f4", CHUNK_ROWS)
+        with ChunkPipeline(f, AggregationConfig(n_aggregators=2)) as pipe:
+            pipe.write(m, a)
+        # crash point: chunks published, nothing committed
+        shutil.copyfile(path, crash)
+        shutil.copyfile(journal_path(path), journal_path(crash))
+        f.commit()
+    report = _recover_and_check(crash, a)
+    assert not report.clean
+    assert report.recovered_datasets == 1
+    assert report.recovered_chunks == N_CHUNKS and report.truncated_chunks == 0
+    with TH5File.open(crash) as back:
+        np.testing.assert_array_equal(back.read_rows("/victim", 0, ROWS), a)
+
+
+def test_stale_generation_journal_is_skipped(tmp_path):
+    """A crash between the superblock flip and the journal truncate leaves
+    records stamped with the PREVIOUS generation — replaying them against
+    the new index would duplicate chunks, so recovery must skip them."""
+    path = str(tmp_path / "stale.th5")
+    a = chaos.expected_array(ROWS, COLS, SEED)
+    with TH5File.create(path) as f:
+        m = f.create_chunked_dataset("/victim", a.shape, "<f4", CHUNK_ROWS)
+        f.write_chunked(m, a)
+        # capture the pre-commit sidecar (records carry the OLD generation),
+        # then commit — and put the stale sidecar back, as if the truncate
+        # never happened
+        stale = open(journal_path(path), "rb").read()
+        assert stale
+        f.commit()
+    # plant the stale sidecar after close (a clean close unlinks the reset
+    # journal — the crash we model never closed, so the sidecar survived)
+    with open(journal_path(path), "wb") as fh:
+        fh.write(stale)
+    f, report = TH5File.recover(path)
+    try:
+        assert report.journal_records > 0
+        assert report.recovered_chunks == 0 and report.recovered_datasets == 0
+        assert len(f.meta("/victim").chunks) == N_CHUNKS  # no duplicates
+        np.testing.assert_array_equal(f.read_rows("/victim", 0, ROWS), a)
+    finally:
+        f.close()
+
+
+def test_garbage_journal_tail_marks_torn_not_crash(tmp_path):
+    path = str(tmp_path / "torn.th5")
+    a = chaos.expected_array(ROWS, COLS, SEED)
+    with TH5File.create(path) as f:
+        m = f.create_chunked_dataset("/victim", a.shape, "<f4", CHUNK_ROWS)
+        f.write_chunked(m, a)
+        f.commit()
+    # a full journal whose single record fails its CRC, plus trailing junk
+    body = b'{"op":"chunk","gen":999}'
+    rec = struct.pack("<4sII", JOURNAL_MAGIC, len(body), zlib.crc32(body) ^ 0xFFFF) + body
+    with open(journal_path(path), "wb") as fh:
+        fh.write(rec + b"\x7f partial")
+    f, report = TH5File.recover(path)
+    try:
+        assert report.torn_journal and not report.clean
+        assert report.journal_records == 0
+        np.testing.assert_array_equal(f.read_rows("/victim", 0, ROWS), a)
+    finally:
+        f.close()
+
+
+def test_injected_write_failure_surfaces_and_file_recovers(tmp_path):
+    """A failing disk mid-write raises cleanly out of ``write_chunked``;
+    everything already committed stays recoverable."""
+    path = str(tmp_path / "eio.th5")
+    a = chaos.expected_array(ROWS, COLS, SEED)
+    f = TH5File.create(path)
+    m = f.create_chunked_dataset("/victim", a.shape, "<f4", CHUNK_ROWS)
+    with chaos.failing_pwrites(after_bytes=3000, mode="fail", fd=f.fd):
+        with pytest.raises(OSError, match="injected"):
+            f.write_chunked(m, a)
+    os.close(f._fd)  # abandon the handle crash-style (close() would commit)
+    if f._journal_fd is not None:
+        os.close(f._journal_fd)
+    _recover_and_check(path, a)
+
+
+def test_short_writes_do_not_loop_forever(tmp_path):
+    """``pwrite_full`` must treat a persistent 0-byte write as an error
+    (ENOSPC-style), not spin."""
+    path = str(tmp_path / "short.th5")
+    a = chaos.expected_array(ROWS, COLS, SEED)
+    f = TH5File.create(path)
+    m = f.create_chunked_dataset("/victim", a.shape, "<f4", CHUNK_ROWS)
+    with chaos.failing_pwrites(after_bytes=2048, mode="short", fd=f.fd):
+        with pytest.raises(OSError):
+            f.write_chunked(m, a)
+    os.close(f._fd)
+    if f._journal_fd is not None:
+        os.close(f._journal_fd)
+    _recover_and_check(path, a)
+
+
+# -- wire plane: severed connections, liveness, shedding -----------------------
+
+
+@pytest.fixture()
+def run_file(tmp_path):
+    rng = np.random.default_rng(SEED)
+    u = rng.standard_normal((ROWS, COLS)).astype(np.float32)
+    path = str(tmp_path / "run.th5")
+    with TH5File.create(path) as f:
+        m = f.create_chunked_dataset("/u", u.shape, "<f4", CHUNK_ROWS)
+        f.write_chunked(m, u)
+        f.commit()
+    return path, u
+
+
+@pytest.fixture()
+def sock_dir():
+    with tempfile.TemporaryDirectory(prefix="th5c", dir="/tmp") as d:
+        yield d
+
+
+def _wait(predicate, timeout=30.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not predicate():
+        assert time.monotonic() < deadline, f"timed out waiting for {what}"
+        time.sleep(0.005)
+
+
+def test_severed_socket_reconnects_and_replays_bit_identical(run_file, sock_dir):
+    path, u = run_file
+    with DataService(path, ServiceConfig(n_workers=2, max_queue=64)) as svc:
+        with ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+            with RemoteDataService(
+                server.address, redial_base_s=0.01, redial_cap_s=0.1
+            ) as remote:
+                # a slow job pins the outage mid-conversation: everything
+                # behind it is provably in flight when the wire dies
+                futs = [remote.submit("c", PingQuery(delay_s=0.3))]
+                reqs = [
+                    WindowQuery("/u", tuple(range(0, ROWS, 3))),
+                    HyperslabQuery("/u", 17, 100),
+                    WindowQuery("/u", (5, 1, 63, 64, 65, 200, 2, 2)),
+                    HyperslabQuery("/u", 0, ROWS, verify=True),
+                ]
+                futs += [remote.submit("c", r) for r in reqs]
+                remote._sock.shutdown(socket.SHUT_RDWR)  # chaos: sever the wire
+                # every read completes bit-identically, as if nothing happened
+                assert futs[0].result(timeout=60).value is None
+                for fut, req in zip(futs[1:], reqs):
+                    got = fut.result(timeout=60).value
+                    if isinstance(req, WindowQuery):
+                        want = u[list(req.rows)]
+                    else:
+                        want = u[req.row_start : req.row_start + req.n_rows]
+                    np.testing.assert_array_equal(got, want)
+                assert remote.reconnects >= 1
+                # zero leaks: the dead connection is reaped, nothing inflight
+                _wait(lambda: server.stats()["active"] == 1, what="conn reap")
+                _wait(lambda: server.stats()["inflight"] == 0, what="drain")
+                assert svc.stats().queue_depth == 0
+            _wait(lambda: server.stats()["active"] == 0, what="close reap")
+
+
+def test_steering_in_flight_fails_typed_on_disconnect(run_file, sock_dir):
+    path, _ = run_file
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=8)) as svc:
+        with ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+            with RemoteDataService(
+                server.address, redial_base_s=0.01, redial_cap_s=0.1
+            ) as remote:
+                blocker = remote.submit("c", PingQuery(delay_s=0.4))
+                _wait(lambda: svc.stats().inflight == 1, what="worker busy")
+                steer = remote.submit("c", SteeringRequest.lineage())
+                read = remote.submit("c", HyperslabQuery("/u", 0, 8))
+                remote._sock.shutdown(socket.SHUT_RDWR)
+                with pytest.raises(RetryableError, match="steering request in flight"):
+                    steer.result(timeout=60)
+                # the idempotent read rode the reconnect instead
+                assert read.result(timeout=60).value.shape == (8, COLS)
+                blocker.result(timeout=60)
+                assert remote.reconnects >= 1
+
+
+def test_queue_deadline_shed_is_typed_and_preexecution(run_file, sock_dir):
+    path, _ = run_file
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=8)) as svc:
+        with ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+            with RemoteDataService(server.address) as remote:
+                blocker = remote.submit("c", PingQuery(delay_s=0.5))
+                _wait(lambda: svc.stats().inflight == 1, what="worker busy")
+                doomed = remote.submit("c", PingQuery(), deadline_s=0.05)
+                with pytest.raises(RetryableError, match="deadline"):
+                    doomed.result(timeout=60)
+                blocker.result(timeout=60)
+                # shed job never executed; the service stays healthy
+                assert remote.request("c", HyperslabQuery("/u", 0, 4)).value.shape == (4, COLS)
+
+
+def test_busy_retry_helper_absorbs_admission_storm(run_file, sock_dir):
+    path, _ = run_file
+    with DataService(path, ServiceConfig(n_workers=1, max_queue=1)) as svc:
+        with ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+            with RemoteDataService(server.address) as remote:
+                blocker = remote.submit("greedy", PingQuery(delay_s=0.5))
+                _wait(lambda: svc.stats().inflight == 1, what="worker busy")
+                filler = remote.submit("greedy", PingQuery())  # fills the 1-deep queue
+                # opt-in retry: resubmits through the BUSY storm and lands
+                resp = remote.request("patient", PingQuery(), busy_retries=50)
+                assert resp.value is None
+                blocker.result(timeout=60)
+                try:
+                    filler.result(timeout=60)
+                except Exception:
+                    pass  # the filler may itself have been rejected
+                st = remote.stats()
+                assert st.clients["patient"].retries >= 1
+
+
+def test_heartbeat_flags_silent_server(sock_dir):
+    """A peer that accepts and then never speaks again must be declared
+    dead by the liveness probe — without it a pipelined client blocks in
+    recv forever."""
+    addr = os.path.join(sock_dir, "dead.sock")
+    lsock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    lsock.bind(addr)
+    lsock.listen(4)
+    sinks = []
+
+    def black_hole():
+        while True:
+            try:
+                s, _ = lsock.accept()
+            except OSError:
+                return
+            sinks.append(s)  # read nothing, answer nothing
+
+    t = threading.Thread(target=black_hole, daemon=True)
+    t.start()
+    try:
+        t0 = time.monotonic()
+        with RemoteDataService(
+            addr,
+            heartbeat_s=0.05,
+            heartbeat_timeout_s=0.2,
+            max_redials=1,
+            redial_base_s=0.01,
+        ) as remote:
+            fut = remote.submit("c", PingQuery())
+            with pytest.raises(Exception, match="unresponsive|heartbeat"):
+                fut.result(timeout=30)
+            # the client noticed the silence, re-dialed once (fruitlessly),
+            # then refused to loop forever against a peer that never talks
+            assert remote.reconnects >= 1
+        assert time.monotonic() - t0 < 20.0  # liveness, not a hung recv
+    finally:
+        lsock.close()
+        for s in sinks:
+            s.close()
+
+
+def test_flaky_socket_torn_request_does_not_kill_server(run_file, sock_dir):
+    """A peer whose frame tears mid-send is just dropped; the listener and
+    every other connection keep serving."""
+    path, u = run_file
+    addr = os.path.join(sock_dir, "s.sock")
+    with DataService(path) as svc:
+        with ServiceServer(svc, addr) as server:
+            raw = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            raw.connect(addr)
+            flaky = chaos.FlakySocket(raw, drop_after_bytes=60)
+            wire.send_frame(flaky, wire.KIND_HELLO, 0, {"version": wire.WIRE_VERSION})
+            meta, payload = wire.encode_request("flaky", WindowQuery("/u", tuple(range(64))))
+            with pytest.raises(ConnectionResetError):
+                wire.send_frame(flaky, wire.KIND_REQUEST, 1, meta, payload)
+            with RemoteDataService(server.address) as healthy:
+                got = healthy.request("ok", HyperslabQuery("/u", 0, 8)).value
+                np.testing.assert_array_equal(got, u[:8])
+            _wait(lambda: server.stats()["active"] == 0, what="flaky conn reap")

@@ -228,6 +228,58 @@ def test_midframe_disconnect_raises_not_garbage():
     b.close()
 
 
+def _captured_frame_bytes() -> bytes:
+    """The exact on-wire bytes of one representative OK frame (header +
+    meta + payload), captured from ``send_frame`` itself so the torn-stream
+    tests cut real encoder output, not a hand-rolled imitation."""
+    a, b = socket.socketpair()
+    try:
+        wire.send_frame(a, wire.KIND_OK, 11, {"k": "v" * 40}, np.arange(64, dtype="<u4"))
+        a.close()
+        blob = b""
+        while True:
+            part = b.recv(1 << 16)
+            if not part:
+                return blob
+            blob += part
+    finally:
+        b.close()
+
+
+_FRAME_BYTES = _captured_frame_bytes()
+
+
+@settings(max_examples=60, deadline=None)
+@given(cut=st.integers(min_value=1, max_value=len(_FRAME_BYTES) - 1))
+def test_torn_stream_any_cut_point_raises_wiredisconnect(cut):
+    """A peer dying at ANY byte of a frame — mid-header, mid-meta or
+    mid-payload — must surface as WireDisconnect, never as garbage data
+    and never as a clean EOF."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(_FRAME_BYTES[:cut])
+        a.close()
+        with pytest.raises(WireDisconnect):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_torn_stream_boundary_cuts():
+    """Deterministic anchors for the property above: last header byte,
+    first meta byte, mid-meta, and last payload byte."""
+    hdr, meta_len = wire.HEADER_SIZE, len(b'{"k": "' + b"v" * 40 + b'"}')
+    for cut in (1, hdr - 1, hdr, hdr + 1, hdr + meta_len // 2, len(_FRAME_BYTES) - 1):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(_FRAME_BYTES[:cut])
+            a.close()
+            with pytest.raises(WireDisconnect):
+                wire.recv_frame(b)
+        finally:
+            b.close()
+
+
 def test_bad_magic_and_oversized_frames_rejected():
     a, b = socket.socketpair()
     try:
@@ -476,3 +528,47 @@ def test_hello_qos_class_lands_in_stats(run_file, sock_dir):
     assert st_.qos["bulk"]["clients"] == 1
     assert st_.qos["interactive"]["clients"] == 1
     assert st_.qos["interactive"]["weight"] > st_.qos["bulk"]["weight"]
+
+
+# -- accept/HELLO hardening ----------------------------------------------------
+
+
+def test_garbage_and_midhello_death_do_not_kill_listener(run_file, sock_dir):
+    """Hostile or dying peers before HELLO: pure garbage, a connection cut
+    mid-HELLO frame, and a silent connect-then-vanish.  Each is closed and
+    counted without taking down the listener, leaking a connection, or
+    leaking threads."""
+    path, u, _ = run_file
+    addr = os.path.join(sock_dir, "s.sock")
+    with DataService(path) as svc, ServiceServer(svc, addr) as server:
+        n_threads = threading.active_count()
+
+        def raw_conn():
+            s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            s.connect(addr)
+            return s
+
+        g = raw_conn()  # garbage where the HELLO frame should be
+        g.sendall(b"\x00not-a-frame\xff" * 8)
+        g.close()
+        h = raw_conn()  # death mid-HELLO (partial frame header)
+        h.sendall(wire.MAGIC + b"\x01")
+        h.close()
+        v = raw_conn()  # connect and vanish without a byte
+        v.close()
+
+        deadline = time.time() + 30
+        while server.stats()["hello_failures"] < 2 or server.n_connections > 0:
+            assert time.time() < deadline, f"stats never settled: {server.stats()}"
+            time.sleep(0.01)
+        # the listener still serves real clients afterwards
+        with RemoteDataService(server.address) as ok:
+            got = ok.request("ok", HyperslabQuery(DS_U, 0, 8)).value
+            np.testing.assert_array_equal(got, u[:8])
+        st_ = server.stats()
+        assert st_["accepted"] >= 4 and st_["active"] == 0 and st_["inflight"] == 0
+        # the doomed connections' reader/sender threads are gone too
+        deadline = time.time() + 30
+        while threading.active_count() > n_threads:
+            assert time.time() < deadline, "leaked connection threads"
+            time.sleep(0.01)

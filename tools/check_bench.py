@@ -49,12 +49,14 @@ SMOKE_COMMANDS = [
     ("benchmarks/io_bandwidth.py", ["--smoke", "--read"]),
     ("benchmarks/service_load.py", ["--smoke"]),
     ("benchmarks/service_load.py", ["--smoke", "--transport", "socket"]),
+    ("benchmarks/recovery.py", ["--smoke"]),
 ]
 FULL_COMMANDS = [
     ("benchmarks/io_bandwidth.py", []),
     ("benchmarks/io_bandwidth.py", ["--read"]),
     ("benchmarks/service_load.py", []),
     ("benchmarks/service_load.py", ["--transport", "socket"]),
+    ("benchmarks/recovery.py", []),
 ]
 
 
@@ -86,6 +88,13 @@ def _serve_scale(doc: dict, section: str):
     if not s:
         return None
     return (s.get("rows"), s.get("cols"), tuple(r["clients"] for r in s["traffic"]))
+
+
+def _recover_scan_scale(doc: dict):
+    row = _get(doc, "recover", "scan", -1)
+    if not row:
+        return None
+    return (row.get("rows"), row.get("cols"), row.get("chunk_rows"))
 
 
 # Each check: name, kind, getter(doc) -> value|None, and for "baseline"
@@ -216,6 +225,48 @@ def build_checks() -> list[dict]:
                 ),
             ]
         )
+    # -- fault tolerance (the `recover` section) ---------------------------
+    checks.extend(
+        [
+            dict(
+                # durability is absolute: a crashed writer's journaled chunks
+                # are ALL salvaged, at every scale — never a lost or phantom-
+                # torn chunk on a kill-after-publish crash
+                name="recover.scan: zero lost committed chunks",
+                kind="invariant",
+                check=lambda d: (
+                    _get(d, "recover", "scan") is None
+                    or all(
+                        s.get("lost_committed_chunks") == 0
+                        and s.get("truncated_chunks") == 0
+                        for s in _get(d, "recover", "scan")
+                    )
+                ),
+            ),
+            dict(
+                name="recover.reconnect: the severed run really reconnected",
+                kind="invariant",
+                check=lambda d: (
+                    _get(d, "recover", "reconnect") is None
+                    or _get(d, "recover", "reconnect", "reconnects") >= 1
+                ),
+            ),
+            dict(
+                name="recover.scan_MBps (journal replay + CRC verify rate)",
+                kind="baseline",
+                get=lambda d: _get(d, "recover", "scan", -1, "scan_MBps"),
+                scale=_recover_scan_scale,
+            ),
+            dict(
+                # a one-sever outage on a multi-second replay must not halve
+                # throughput: reconnect-and-replay bounds the dip, any scale
+                name="recover.reconnect.dip_ratio >= 0.2",
+                kind="floor",
+                get=lambda d: _get(d, "recover", "reconnect", "dip_ratio"),
+                limit=0.2,
+            ),
+        ]
+    )
     return checks
 
 

@@ -6,8 +6,9 @@ installed):
 
   * the ``VERSION`` / ``MIN_READ_VERSION`` constants in ``container.py``
     appear in the spec ("Format version: N", version floor mentioned);
-  * every dataclass field name of ``DatasetMeta`` and ``ChunkRecord`` is
-    documented;
+  * every dataclass field name of ``DatasetMeta``, ``ChunkRecord`` and
+    ``RecoveryReport`` is documented, and the spec carries a "Recovery
+    invariants" section naming the journal sidecar magic;
   * every codec name and id registered in ``codecs.py`` is documented;
   * the superblock struct format string matches the spec's packed layout;
   * ``docs/SERVICE.md`` documents every ``ServiceStats`` / ``ClientStats``
@@ -81,10 +82,20 @@ def main() -> int:
     if f'"{sb_fmt}"' not in spec:
         missing.append(f"superblock struct format {sb_fmt!r}")
 
-    for cls in ("DatasetMeta", "ChunkRecord"):
+    for cls in ("DatasetMeta", "ChunkRecord", "RecoveryReport"):
         for fld in dataclass_fields(ctree, cls):
             if f"`{fld}`" not in spec:
                 missing.append(f"{cls} field `{fld}`")
+
+    # -- crash consistency: journal sidecar + recovery contract ------------
+    if "## Recovery invariants" not in spec:
+        missing.append('FORMAT.md: "## Recovery invariants" section')
+    j_magic = module_constant(ctree, "JOURNAL_MAGIC")
+    if f"`{j_magic.decode('ascii')}`" not in spec:
+        missing.append(f"FORMAT.md: journal magic `{j_magic.decode('ascii')}`")
+    j_fmt = module_constant(ctree, "_J_HDR_FMT")
+    if f'"{j_fmt}"' not in spec:
+        missing.append(f"FORMAT.md: journal record header format {j_fmt!r}")
 
     # codec names + ids: the CODEC_* constants and registered names
     for node in ast.walk(ktree):
@@ -136,6 +147,9 @@ def main() -> int:
     for fld in dataclass_fields(btree, "QosClass", SERVICE_BROKER):
         if f"`{fld}`" not in service_doc:
             missing.append(f"SERVICE.md: QosClass field `{fld}`")
+    # -- failure semantics: the fault-tolerance contract -------------------
+    if "## Failure modes" not in service_doc:
+        missing.append('SERVICE.md: "## Failure modes" section')
 
     arch = ARCH.read_text(encoding="utf-8")
     for name in (
