@@ -49,7 +49,7 @@ from repro.service import (
 )
 
 BENCH_JSON = "BENCH_io.json"
-SCHEMA = 6
+SCHEMA = 7
 DATASET = "/state/w"
 
 

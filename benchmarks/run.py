@@ -12,6 +12,7 @@ per-figure detail lines.  Figure map:
     lm_checkpoint    → framework integration (train-state snapshots)
     service_load     → §2.3/§4 served: N-client read/steering broker load
     recovery         → fault tolerance: crash-recovery scan + reconnect dip
+    streaming        → live subscriptions: push fan-out rate + latency
 """
 
 from __future__ import annotations
@@ -29,6 +30,7 @@ def main() -> None:
         multigrid_bench,
         recovery,
         service_load,
+        streaming,
         trs_savings,
     )
 
@@ -59,6 +61,12 @@ def main() -> None:
          lambda res: f"scan={res['scan'][-1]['scan_MBps']:.0f}MB/s,"
                      f"dip={res['reconnect']['dip_ratio']:.2f},"
                      f"reconnects={res['reconnect']['reconnects']}"),
+        # live subscriptions: N-viewer push fan-out over the wire
+        ("streaming_push_fanout", streaming.run,
+         lambda res: f"fanout{res['fanout'][-1]['subscribers']}="
+                     f"{res['fanout'][-1]['fanout_MBps']:.0f}MB/s,"
+                     f"p99={res['fanout'][-1]['push_p99_ms']:.1f}ms,"
+                     f"writer_ratio={res['fanout'][-1]['writer_ratio']:.2f}"),
     ]
     for name, fn, derive in suites:
         t0 = time.perf_counter()

@@ -1,0 +1,213 @@
+"""Subscription push plane — the ``stream`` section of ``BENCH_io.json``.
+
+The PR 7 live-streaming layer (``DataService.subscribe`` / wire ``PUSH``
+frames) costs two things worth gating:
+
+**Fan-out throughput and push latency** — a writer appends and commits
+chunks at full speed while N ``lossless`` remote subscribers consume over
+a Unix socket.  Tracked: aggregate delivered bandwidth (``fanout_MBps``),
+commit-to-receipt push latency (``push_p50_ms`` / ``push_p99_ms``,
+measured per chunk from the writer's commit timestamp to each
+subscriber's receipt), and the completeness invariants — a lossless
+subscriber receives EVERY committed chunk exactly once (``lost == 0``)
+with nothing dropped (``dropped == 0``).
+
+**Writer isolation** — the same append+commit loop is timed solo (no
+subscribers attached, so the observer bus is cold) and again with the N
+subscribers live.  ``writer_ratio = solo_s / live_s`` is the writer's
+throughput retention under fan-out; the push plane is decoupled per
+subscriber, so the ratio must stay near 1 (gated >= 0.2, the same
+retention style as ``recover.dip_ratio``).
+
+Run::
+
+    PYTHONPATH=src python benchmarks/streaming.py           # full
+    PYTHONPATH=src python benchmarks/streaming.py --smoke   # CI seconds
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import codecs as _codecs
+from repro.core.container import TH5File
+from repro.service import DataService, RemoteDataService, ServiceServer
+from repro.service.stats import LatencyRecorder
+
+BENCH_JSON = "BENCH_io.json"
+SCHEMA = 7
+DS_WARM = "/stream/warmup"
+DS_LIVE = "/stream/u"
+CODEC = _codecs.get_codec("zlib")
+
+
+def _encode(data: np.ndarray, chunk_rows: int) -> list[tuple]:
+    """Pre-encode every chunk so the timed loops measure the push plane
+    (append, commit, fan-out), not the codec."""
+    out = []
+    for lo in range(0, data.shape[0], chunk_rows):
+        out.append(_codecs.encode_chunk(CODEC, data[lo : lo + chunk_rows]))
+    return out
+
+
+def _write_all(f, meta, encoded, commit_t: list | None = None) -> float:
+    """Append + commit one chunk per step (the streaming write model);
+    optionally record each commit's timestamp for latency attribution."""
+    t0 = time.perf_counter()
+    for payload, raw_n, raw_crc, stored_crc, cid in encoded:
+        f.append_chunk(meta, payload, raw_nbytes=raw_n, raw_crc32=raw_crc,
+                       stored_crc32=stored_crc, codec_id=cid)
+        f.commit()
+        if commit_t is not None:
+            commit_t.append(time.perf_counter())
+    return time.perf_counter() - t0
+
+
+def _consume(sub, n_chunks: int, recv: list, errs: list) -> None:
+    try:
+        for _ in range(n_chunks):
+            p = sub.get(timeout=120)
+            recv.append((p.chunk_index, time.perf_counter(), p.rows.nbytes, p.dropped))
+    except Exception as e:  # surfaced by the caller's completeness check
+        errs.append(e)
+
+
+def run_fanout(n_subs: int, rows: int, cols: int, chunk_rows: int) -> dict:
+    """Solo-vs-subscribed writer timing + N-subscriber lossless fan-out."""
+    rng = np.random.default_rng(23)
+    data = rng.standard_normal((rows, cols)).astype("<f4")
+    encoded = _encode(data, chunk_rows)
+    n_chunks = len(encoded)
+    with tempfile.TemporaryDirectory(prefix="th5stream", dir="/tmp") as d:
+        path = os.path.join(d, "run.th5")
+        f = TH5File.create(path)
+        warm = f.create_chunked_dataset(DS_WARM, data.shape, "<f4", chunk_rows)
+        live = f.create_chunked_dataset(DS_LIVE, data.shape, "<f4", chunk_rows)
+        f.commit()
+        with DataService(path) as svc, \
+             ServiceServer(svc, os.path.join(d, "s.sock")) as server:
+            # solo baseline: no subscribers, observer bus still cold
+            solo_s = _write_all(f, warm, encoded)
+
+            remotes = [RemoteDataService(server.address) for _ in range(n_subs)]
+            subs = [
+                r.subscribe(f"sub{i}", DS_LIVE, policy="lossless")
+                for i, r in enumerate(remotes)
+            ]
+            recv = [[] for _ in range(n_subs)]
+            errs: list = []
+            threads = [
+                threading.Thread(target=_consume, args=(s, n_chunks, rv, errs))
+                for s, rv in zip(subs, recv)
+            ]
+            for t in threads:
+                t.start()
+            commit_t: list = []
+            t_start = time.perf_counter()
+            live_s = _write_all(f, live, encoded, commit_t)
+            for t in threads:
+                t.join()
+            for r in remotes:
+                r.close()
+            # pump-exit accounting trails the last client receipt: wait for
+            # every pump to finish before snapshotting the counters
+            deadline = time.perf_counter() + 30
+            while svc.stats().subscribers and time.perf_counter() < deadline:
+                time.sleep(0.01)
+            stats = svc.stats()
+        f.close()
+    if errs:
+        raise errs[0]
+    lat = LatencyRecorder(capacity=1 << 16)
+    total_bytes = 0
+    last_recv = t_start
+    lost = 0
+    for rv in recv:
+        got = sorted(ci for ci, _, _, _ in rv)
+        lost += n_chunks - len(set(got) & set(range(n_chunks)))
+        for ci, t_recv, nbytes, _ in rv:
+            lat.add(t_recv - commit_t[ci])
+            total_bytes += nbytes
+            last_recv = max(last_recv, t_recv)
+    wall = max(last_recv - t_start, 1e-9)
+    return {
+        "rows": rows,
+        "cols": cols,
+        "chunk_rows": chunk_rows,
+        "n_chunks": n_chunks,
+        "subscribers": n_subs,
+        "lost": lost,
+        "dropped": int(stats.dropped_chunks),
+        "pushed_chunks": int(stats.pushed_chunks),
+        "pushed_mb": round(total_bytes / 1e6, 2),
+        "solo_s": round(solo_s, 4),
+        "live_s": round(live_s, 4),
+        "writer_ratio": round(solo_s / live_s, 3) if live_s else 0.0,
+        "wall_s": round(wall, 4),
+        "fanout_MBps": round(total_bytes / wall / 1e6, 1),
+        "push_p50_ms": round(lat.percentile(50) * 1e3, 3),
+        "push_p99_ms": round(lat.percentile(99) * 1e3, 3),
+    }
+
+
+def run(
+    *,
+    shape=(98304, 64, 1024),
+    fleet=(1, 2, 4),
+    smoke: bool = False,
+    json_path: str | None = BENCH_JSON,
+    out=print,
+) -> dict:
+    rows, cols, chunk_rows = shape
+    fanout = []
+    for n in fleet:
+        r = run_fanout(n, rows, cols, chunk_rows)
+        fanout.append(r)
+        out(
+            f"stream.fanout,subs={n},chunks={r['n_chunks']},lost={r['lost']},"
+            f"dropped={r['dropped']},rate={r['fanout_MBps']:.0f}MB/s,"
+            f"p50={r['push_p50_ms']:.1f}ms,p99={r['push_p99_ms']:.1f}ms,"
+            f"writer_ratio={r['writer_ratio']:.2f}"
+        )
+    summary = {"smoke": smoke, "fanout": fanout}
+    if json_path:
+        doc = {}
+        if os.path.exists(json_path):
+            try:
+                with open(json_path) as fh:
+                    doc = json.load(fh)
+            except (OSError, ValueError):
+                doc = {}
+        doc.update({"schema": SCHEMA, "generated_unix": time.time(), "stream": summary})
+        with open(json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+        out(f"wrote {json_path}")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale CI smoke run (seconds, not minutes)")
+    ap.add_argument("--json", default=BENCH_JSON, help="output JSON path ('' disables)")
+    a = ap.parse_args()
+    if a.smoke:
+        res = run(shape=(4096, 32, 128), fleet=(2,), smoke=True,
+                  json_path=a.json or None)
+    else:
+        res = run(json_path=a.json or None)
+    # deterministic invariants (timing-light) — safe to enforce on CI VMs:
+    # a lossless subscriber misses NOTHING and drops NOTHING, at any scale
+    assert all(r["lost"] == 0 for r in res["fanout"]), "lossless stream lost chunks"
+    assert all(r["dropped"] == 0 for r in res["fanout"]), "lossless stream dropped"
+    assert all(
+        r["pushed_chunks"] == r["n_chunks"] * r["subscribers"] for r in res["fanout"]
+    ), "push accounting drifted from chunks * subscribers"

@@ -91,6 +91,51 @@ def journal_path(path: str) -> str:
 ROOT = "/"
 
 
+# -- publish/commit observer bus ------------------------------------------------
+#
+# Process-wide, realpath-keyed observers of chunk publication and commits.
+# This is the live-streaming feed: a writable TH5File notifies registered
+# hooks (a) per published chunk (``on_chunk``) and (b) per committed
+# generation (``on_commit``), so a broker in the same process can fan
+# committed chunks out to subscribers without polling the index.  Hooks are
+# observers only — they run on the WRITER's thread and must be O(1) and
+# non-blocking; any exception they raise is swallowed (a misbehaving
+# subscriber must never corrupt or stall the write path).
+
+_PUBLISH_HOOKS: dict[str, list[Any]] = {}
+_HOOK_LOCK = threading.Lock()
+
+
+def register_publish_hook(path: str, hook: Any) -> None:
+    """Register ``hook`` for chunk/commit events on ``path`` (realpath-keyed).
+
+    ``hook`` duck-types two methods, both optional:
+    ``on_chunk(name, meta, chunk_index, rec)`` — called after a chunk's
+    stored payload is on disk (possibly before it is committed);
+    ``on_commit(generation)`` — called after a superblock flip makes every
+    published chunk durable/visible."""
+    key = os.path.realpath(path)
+    with _HOOK_LOCK:
+        _PUBLISH_HOOKS.setdefault(key, []).append(hook)
+
+
+def unregister_publish_hook(path: str, hook: Any) -> None:
+    key = os.path.realpath(path)
+    with _HOOK_LOCK:
+        hooks = _PUBLISH_HOOKS.get(key)
+        if hooks is not None and hook in hooks:
+            hooks.remove(hook)
+            if not hooks:
+                del _PUBLISH_HOOKS[key]
+
+
+def _hooks_for(key: str) -> list[Any]:
+    if not _PUBLISH_HOOKS:  # common case: nobody listening, zero locking
+        return []
+    with _HOOK_LOCK:
+        return list(_PUBLISH_HOOKS.get(key, ()))
+
+
 class TH5Error(RuntimeError):
     pass
 
@@ -512,6 +557,7 @@ class TH5File:
         self._journal_off = 0
         self._journal_lock = threading.Lock()
         self._journaled_datasets: set[str] = set()
+        self._hook_key = os.path.realpath(path)  # publish/commit observer bus key
         self.chunk_cache = ChunkCache()
         # read-side decode pipeline (aggregation.DecodePipeline), created
         # lazily on the first chunked read; per-read + cumulative FilterStats
@@ -997,10 +1043,33 @@ class TH5File:
         :meth:`append_chunk` / :meth:`write_chunked` call this internally;
         external writers that drain payloads themselves against
         :meth:`alloc_chunk` offsets (``aggregation.ChunkPipeline``) call it
-        once per record *after* the payload write completes."""
-        if not self.journaling or self.mode == "r":
+        once per record *after* the payload write completes.
+
+        Registered publish hooks (:func:`register_publish_hook`) are
+        notified regardless of ``journaling`` — the live-subscription feed
+        and the crash journal are independent consumers of the same
+        publication event."""
+        if self.mode == "r":
             return
         name = self._name_of(meta)
+        hooks = _hooks_for(self._hook_key)
+        if hooks:
+            # chunk_index by reverse identity scan: O(1) for the in-order
+            # common case, still correct when a pipeline publishes records
+            # out of append order
+            ci = len(meta.chunks) - 1
+            if meta.chunks[ci] is not rec:
+                for i in range(len(meta.chunks) - 2, -1, -1):
+                    if meta.chunks[i] is rec:
+                        ci = i
+                        break
+            for h in hooks:
+                try:
+                    h.on_chunk(name, meta, ci, rec)
+                except Exception:  # observers must never break the writer
+                    pass
+        if not self.journaling:
+            return
         gen = self._index.generation
         if name not in self._journaled_datasets:
             shell = meta.to_json()
@@ -1345,6 +1414,11 @@ class TH5File:
                 except OSError:
                     pass
             self._journaled_datasets.clear()
+        for h in _hooks_for(self._hook_key):
+            try:
+                h.on_commit(self._index.generation)
+            except Exception:  # observers must never break the writer
+                pass
         return self._index.generation
 
     def _check_writable(self) -> None:

@@ -24,6 +24,9 @@ requests               :class:`HyperslabQuery`, :class:`WindowQuery`,
                        TCP / Unix socket (``transport.py`` + ``wire.py``)
 :class:`RemoteDataService`  socket client with the broker's exact API —
                        sessions and benchmarks run unmodified against it
+:class:`Subscription`  live push stream: committed chunks of one dataset
+                       fanned out to N subscribers (:class:`SubscribeRequest`
+                       → :class:`PushedChunk`; lossless or drop-oldest)
 =====================  ========================================================
 
 Ownership / backpressure model, the full request reference and the wire
@@ -32,17 +35,19 @@ service_load.py`` (the ``serve`` / ``serve_wire`` sections of
 ``BENCH_io.json``).
 """
 
-from .broker import AdmissionError, DataService, QosClass, ServiceConfig
+from .broker import AdmissionError, DataService, QosClass, ServiceConfig, Subscription
 from .catalog import DatasetInfo, SnapshotCatalog, build_catalog
-from .client import RemoteDataService
+from .client import RemoteDataService, RemoteSubscription
 from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
+    PushedChunk,
     RetryableError,
     ServiceResponse,
     StatsQuery,
     SteeringRequest,
+    SubscribeRequest,
     WindowQuery,
 )
 from .sessions import LodWindowSession, plan_window_rows
@@ -69,8 +74,12 @@ __all__ = [
     "CatalogQuery",
     "HyperslabQuery",
     "PingQuery",
+    "PushedChunk",
+    "RemoteSubscription",
     "ServiceResponse",
     "SteeringRequest",
+    "SubscribeRequest",
+    "Subscription",
     "WindowQuery",
     "LodWindowSession",
     "plan_window_rows",

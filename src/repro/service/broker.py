@@ -36,16 +36,20 @@ code paths don't know the service exists.  See ``docs/SERVICE.md``.
 from __future__ import annotations
 
 import os
+import queue
 import threading
 import time
+import zlib
 from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass
-from typing import Any, Iterable, Sequence
+from typing import Any, Callable, Iterable, Sequence
 
 import numpy as np
 
-from repro.core.container import TH5Error, TH5File
+from repro.core import container as _container
+from repro.core.codecs import codec_by_id
+from repro.core.container import CorruptFileError, TH5Error, TH5File
 from repro.core.aggregation import AggregationConfig
 
 from .catalog import build_catalog
@@ -53,10 +57,12 @@ from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
+    PushedChunk,
     RetryableError,
     ServiceResponse,
     StatsQuery,
     SteeringRequest,
+    SubscribeRequest,
     WindowQuery,
     response_nbytes,
 )
@@ -164,6 +170,7 @@ class _SharedFile:
         self.file = file
         self.refs = 1
         self.steering: SteeringEndpoint | None = None
+        self.fanout: "ChunkFanout | None" = None  # lazy, like steering
 
 
 _REGISTRY: dict[str, _SharedFile] = {}
@@ -196,7 +203,384 @@ def _release_shared(key: str) -> None:
         shared.refs -= 1
         if shared.refs <= 0:
             del _REGISTRY[key]
+            if shared.fanout is not None:
+                shared.fanout.close()  # pumps stop BEFORE their fd disappears
+                shared.fanout = None
             shared.file.close()
+
+
+# -- live subscription fan-out -------------------------------------------------
+#
+# The writer (a separate writable TH5File handle on the same path, same
+# process) notifies the container's publish/commit observer bus; ChunkFanout
+# folds those events into per-dataset feeds of COMMITTED chunk records and
+# one pump thread per subscription walks a cursor over its feed.  The file
+# itself is the replayable log: a lossless subscriber that lags (or
+# resubscribes after a reconnect with ``from_chunk``) just reads older
+# chunks back off disk — no per-subscriber payload buffering, no way for a
+# slow viewer to hold writer or broker memory hostage.
+
+
+class _Feed:
+    """Chunk log of ONE dataset: records in chunk order, ``committed_n`` =
+    length of the durable prefix subscribers may be served (records past it
+    are published-but-uncommitted).  All fields mutate under the owning
+    fan-out's condition."""
+
+    __slots__ = (
+        "name", "dtype", "row_shape", "chunk_rows", "n_rows",
+        "records", "committed_n", "generation",
+    )
+
+    def __init__(self, name: str, meta, generation: int):
+        self.name = name
+        self.dtype = meta.dtype
+        self.row_shape = tuple(meta.shape[1:])
+        self.chunk_rows = int(meta.chunk_rows or 1)
+        self.n_rows = int(meta.n_rows)
+        self.records: list = []  # ChunkRecord | None (None = event gap)
+        self.committed_n = 0
+        self.generation = int(generation)
+
+    def chunk_rows_range(self, ci: int) -> tuple[int, int]:
+        lo = ci * self.chunk_rows
+        return lo, min(lo + self.chunk_rows, self.n_rows)
+
+
+class Subscription:
+    """One live push subscription (``DataService.subscribe``).
+
+    Delivery is either a ``sink`` callable — ``sink(push_meta, rows) ->
+    bool`` (the wire transport's frame sender; False = consumer gone) — or,
+    with no sink, an internal bounded-latency local queue consumed via
+    :meth:`get` / iteration, yielding :class:`~repro.service.requests.
+    PushedChunk` items (``None`` ends the stream; a delivery failure
+    re-raises).  ``cursor`` is the next chunk index the pump will consider;
+    ``pushed`` / ``dropped`` are this subscription's delivery counters."""
+
+    def __init__(
+        self,
+        service: "DataService",
+        client: str,
+        request: SubscribeRequest,
+        sink: Callable[[dict, np.ndarray], bool] | None = None,
+        on_error: Callable[[Exception | None], None] | None = None,
+    ):
+        self.service = service
+        self.client = client
+        self.request = request
+        self.cursor = int(request.from_chunk)
+        self.pushed = 0
+        self.dropped = 0
+        self._sink = sink
+        self._on_error = on_error
+        self._queue: "queue.Queue | None" = queue.Queue() if sink is None else None
+        self._closed = threading.Event()
+        self._exited = False  # pump accounting ran (guarded by service._cv)
+        self._thread: threading.Thread | None = None
+
+    @property
+    def closed(self) -> bool:
+        return self._closed.is_set()
+
+    def close(self) -> None:
+        self.service.unsubscribe(self)
+
+    def _deliver(self, push_meta: dict, rows: np.ndarray) -> bool:
+        if self._sink is not None:
+            return bool(self._sink(push_meta, rows))
+        self._queue.put(
+            PushedChunk(
+                dataset=push_meta["dataset"],
+                chunk_index=push_meta["chunk_index"],
+                row_start=push_meta["row_start"],
+                rows=rows,
+                generation=push_meta["generation"],
+                seq=push_meta["seq"],
+                dropped=push_meta["dropped"],
+            )
+        )
+        return True
+
+    def _finish(self, error: Exception | None) -> None:
+        if self._queue is not None:
+            self._queue.put(error)  # error or the None end-of-stream sentinel
+        elif self._on_error is not None:
+            # sink-backed: the callback is the only terminal channel, so it
+            # fires for the clean end (None) too — the transport turns that
+            # into an end-of-stream frame instead of leaving the remote
+            # iterator waiting forever
+            try:
+                self._on_error(error)
+            except Exception:
+                pass
+
+    # -- local consumption (sink=None) ---------------------------------------
+
+    def get(self, timeout: float | None = None) -> PushedChunk | None:
+        """Next :class:`PushedChunk`; ``None`` = stream ended.  Raises
+        ``queue.Empty`` on timeout, or the subscription's failure."""
+        if self._queue is None:
+            raise TH5Error("sink-backed subscription has no local queue")
+        item = self._queue.get(timeout=timeout)
+        if item is None or isinstance(item, Exception):
+            self._queue.put(item)  # keep the terminal state observable
+            if isinstance(item, Exception):
+                raise item
+            return None
+        return item
+
+    def __iter__(self) -> "Subscription":
+        return self
+
+    def __next__(self) -> PushedChunk:
+        item = self.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+
+class ChunkFanout:
+    """Per-file subscription fan-out (one per :class:`_SharedFile`, created
+    lazily on the first subscribe, closed when the last service releases
+    the file).
+
+    Registered on the container's observer bus
+    (:func:`repro.core.container.register_publish_hook`): ``on_chunk`` /
+    ``on_commit`` run on the WRITER's thread and only append a record /
+    advance the committed watermark + notify — O(1), never blocking on any
+    subscriber.  Each subscription gets its own pump thread that waits on
+    the feed, clamps its lag (drop-oldest) or doesn't (lossless), decodes
+    the chunk once through the file's SHARED :class:`~repro.core.container.
+    ChunkCache` (N subscribers of one window cost ~1 decode — same key
+    space as the read path) and hands the intersecting rows to the
+    subscription's sink."""
+
+    def __init__(self, path: str, file: TH5File):
+        self.path = path
+        self._file = file
+        self._cache = file.chunk_cache
+        self._cv = threading.Condition()
+        self._feeds: dict[str, _Feed] = {}
+        self._subs: list[Subscription] = []
+        self._closed = False
+        self._generation = 0
+        self._refresh_from_snapshot()  # chunks committed before we attached
+        _container.register_publish_hook(path, self)
+
+    # -- observer-bus half (writer's thread; O(1), non-blocking) --------------
+
+    def on_chunk(self, name: str, meta, chunk_index: int, rec) -> None:
+        with self._cv:
+            feed = self._feeds.get(name)
+            if feed is None:
+                feed = self._feeds[name] = _Feed(name, meta, self._generation)
+            feed.n_rows = max(feed.n_rows, int(meta.n_rows))
+            while len(feed.records) <= chunk_index:
+                feed.records.append(None)
+            feed.records[chunk_index] = rec
+            # no notify: published ≠ committed — subscribers only ever see
+            # chunks a superblock flip has made durable
+
+    def on_commit(self, generation: int) -> None:
+        gap = False
+        with self._cv:
+            self._generation = max(self._generation, generation)
+            for feed in self._feeds.values():
+                n = feed.committed_n
+                recs = feed.records
+                while n < len(recs) and recs[n] is not None:
+                    n += 1
+                if n > feed.committed_n:
+                    feed.committed_n = n
+                    feed.generation = generation
+                if n < len(recs):
+                    gap = True  # hole in the prefix: events predate us
+            self._cv.notify_all()
+        if gap:
+            try:
+                self._refresh_from_snapshot()
+            except (OSError, TH5Error):
+                pass  # the next commit retries the heal
+
+    def _refresh_from_snapshot(self) -> None:
+        """Fold the committed on-disk index into the feeds: seeds the
+        fan-out at attach time and heals event gaps (chunks published
+        before this fan-out existed)."""
+        snap = TH5File.open(self.path, mode="r")
+        try:
+            gen = snap.generation
+            metas = [(name, snap.meta(name)) for name in snap.datasets()]
+        finally:
+            snap.close()
+        with self._cv:
+            self._generation = max(self._generation, gen)
+            for name, meta in metas:
+                if not meta.is_chunked:
+                    continue
+                feed = self._feeds.get(name)
+                if feed is None:
+                    if not meta.chunks:
+                        continue
+                    feed = self._feeds[name] = _Feed(name, meta, gen)
+                feed.n_rows = max(feed.n_rows, int(meta.n_rows))
+                for i, rec in enumerate(meta.chunks or ()):
+                    if i < len(feed.records):
+                        if feed.records[i] is None:
+                            feed.records[i] = rec
+                    else:
+                        feed.records.append(rec)
+                n = feed.committed_n
+                while n < len(feed.records) and feed.records[n] is not None:
+                    n += 1
+                if n > feed.committed_n:
+                    feed.committed_n = n
+                    feed.generation = max(feed.generation, gen)
+            self._cv.notify_all()
+
+    # -- subscription half ----------------------------------------------------
+
+    def validate(self, request: SubscribeRequest) -> None:
+        """Reject a subscription the feed can never serve: the dataset
+        exists and is contiguous (subscribing to a dataset that does not
+        exist YET is allowed — the solver may create it later)."""
+        with self._cv:
+            if request.dataset in self._feeds:
+                return
+        try:
+            meta = self._file.meta(request.dataset)
+        except KeyError:
+            return
+        if not meta.is_chunked:
+            raise TH5Error(
+                f"cannot subscribe to contiguous dataset {request.dataset!r}"
+                " (live pushes follow the chunk index)"
+            )
+
+    def add(self, sub: Subscription) -> None:
+        with self._cv:
+            if self._closed:
+                raise TH5Error("service closed")
+            self._subs.append(sub)
+        t = threading.Thread(
+            target=self._pump, args=(sub,), name=f"th5-push-{sub.client}", daemon=True
+        )
+        sub._thread = t
+        t.start()
+
+    def remove(self, sub: Subscription) -> None:
+        sub._closed.set()
+        with self._cv:
+            if sub in self._subs:
+                self._subs.remove(sub)
+            self._cv.notify_all()
+
+    @property
+    def n_subscriptions(self) -> int:
+        with self._cv:
+            return len(self._subs)
+
+    def close(self) -> None:
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            subs = list(self._subs)
+            self._cv.notify_all()
+        _container.unregister_publish_hook(self.path, self)
+        for s in subs:
+            s._closed.set()
+        for s in subs:
+            if s._thread is not None:
+                s._thread.join(timeout=5.0)
+
+    # -- the pump (one thread per subscription) -------------------------------
+
+    def _decode_chunk(self, feed: _Feed, ci: int, rec) -> np.ndarray:
+        """Decoded rows of one committed chunk, through the shared cache."""
+        key = (feed.name, ci)
+        arr = self._cache.get(key)
+        if arr is not None:
+            return arr
+        blob = os.pread(self._file.fd, rec.nbytes, rec.offset)
+        if len(blob) != rec.nbytes or (zlib.crc32(blob) & 0xFFFFFFFF) != rec.stored_crc32:
+            raise CorruptFileError(
+                f"push read of {feed.name} chunk {ci} failed its stored CRC"
+            )
+        dt = np.dtype(feed.dtype)
+        lo, hi = feed.chunk_rows_range(ci)
+        flat = codec_by_id(rec.codec_id).decode(blob, dt, rec.raw_nbytes // dt.itemsize)
+        arr = flat.reshape((hi - lo,) + feed.row_shape)
+        self._cache.put(key, arr)
+        return arr
+
+    def _pump(self, sub: Subscription) -> None:
+        svc = sub.service
+        req = sub.request
+        error: Exception | None = None
+        try:
+            while True:
+                skipped = 0
+                with self._cv:
+                    item = None
+                    while item is None:
+                        if sub.closed or self._closed:
+                            return
+                        feed = self._feeds.get(req.dataset)
+                        if feed is not None and sub.cursor < feed.committed_n:
+                            if req.policy == "drop-oldest":
+                                lag = feed.committed_n - sub.cursor
+                                if lag > req.max_pending:
+                                    # clamp: jump the cursor forward, count
+                                    # the gap — the stream stays monotonic
+                                    skipped = lag - req.max_pending
+                                    sub.cursor += skipped
+                                    sub.dropped += skipped
+                            ci = sub.cursor
+                            sub.cursor += 1
+                            item = (ci, feed.records[ci], feed.generation)
+                        else:
+                            # timed wait: survives a missed notify and polls
+                            # cheaply while the writer is idle
+                            self._cv.wait(0.5)
+                ci, rec, gen = item
+                if skipped:
+                    svc._note_dropped(skipped)
+                lo, hi = feed.chunk_rows_range(ci)
+                if req.rows is not None:
+                    ilo, ihi = max(lo, req.rows[0]), min(hi, req.rows[1])
+                    if ilo >= ihi:
+                        continue  # outside the window: advance silently
+                else:
+                    ilo, ihi = lo, hi
+                arr = self._decode_chunk(feed, ci, rec)
+                rows = arr[ilo - lo : ihi - lo]
+                # QoS token-bucket gate: a rate-limited viewer's pump sleeps
+                # here (drop-oldest then clamps the accumulated lag) — the
+                # writer and every other subscription keep running
+                while True:
+                    wait = svc._push_gate(sub.client)
+                    if wait <= 0:
+                        break
+                    if sub._closed.wait(min(wait, 0.05)):
+                        return
+                push_meta = {
+                    "dataset": feed.name,
+                    "chunk_index": ci,
+                    "row_start": ilo,
+                    "n_rows": ihi - ilo,
+                    "generation": gen,
+                    "seq": sub.pushed,
+                    "dropped": sub.dropped,
+                }
+                if not sub._deliver(push_meta, rows):
+                    return  # consumer gone: the finally block cleans up
+                sub.pushed += 1
+                svc._push_account(sub.client, rows.nbytes)
+        except Exception as e:  # corrupt chunk, sink blow-up: fail typed
+            error = e
+        finally:
+            svc._sub_exit(sub, error)
 
 
 class _Job:
@@ -277,6 +661,12 @@ class DataService:
         self._latency = LatencyRecorder()
         self._client_latency: dict[str, LatencyRecorder] = {}
         self._clients: dict[str, ClientStats] = {}
+        # subscription fan-out accounting (also under _cv's lock)
+        self._n_subs = 0
+        self._pushed_chunks = 0
+        self._pushed_bytes = 0
+        self._dropped_chunks = 0
+        self._my_subs: set[Subscription] = set()
         self._workers = [
             threading.Thread(target=self._worker, name=f"th5-service-{i}", daemon=True)
             for i in range(self.config.n_workers)
@@ -293,7 +683,10 @@ class DataService:
             if self._shutdown:
                 return
             self._shutdown = True
+            subs = list(self._my_subs)
             self._cv.notify_all()
+        for sub in subs:  # cancel OUR pushes; other services' subs live on
+            self.unsubscribe(sub)
         for w in self._workers:
             w.join()
         _release_shared(self._key)
@@ -412,6 +805,107 @@ class DataService:
             if self._shared.steering is None:
                 self._shared.steering = SteeringEndpoint(self.path)
             return self._shared.steering
+
+    # -- subscriptions -------------------------------------------------------
+
+    def subscribe(
+        self,
+        client: str,
+        request: SubscribeRequest,
+        *,
+        sink: Callable[[dict, np.ndarray], bool] | None = None,
+        on_error: Callable[[Exception | None], None] | None = None,
+    ) -> Subscription:
+        """Register a live push subscription (see :class:`~repro.service.
+        requests.SubscribeRequest` for the delivery contract).
+
+        With no ``sink`` the returned :class:`Subscription` is consumed
+        locally (iterate it / call ``get``).  The wire transport passes a
+        ``sink(push_meta, rows) -> bool`` that frames each push onto the
+        connection (False = connection gone, which ends the subscription);
+        ``on_error`` observes the terminal event for sink-backed
+        subscriptions, whose outcomes have no queue to land in: a pump
+        failure (e.g. a corrupt chunk) as the exception, or ``None`` for a
+        clean end (unsubscribe / service shutdown).
+
+        Pushes are throttled by the SAME per-client token bucket as request
+        responses — a rate-limited viewer's pushes and reads draw from one
+        budget, and ``drop-oldest`` turns the induced lag into skips."""
+        if not isinstance(request, SubscribeRequest):
+            raise TypeError(f"subscribe wants a SubscribeRequest, got {type(request).__name__}")
+        fanout = self._fanout()
+        fanout.validate(request)
+        sub = Subscription(self, str(client), request, sink=sink, on_error=on_error)
+        with self._cv:
+            if self._shutdown:
+                raise TH5Error("service closed")
+            self._sched_for(sub.client)  # QoS state exists before first push
+            self._n_subs += 1
+            self._my_subs.add(sub)
+        try:
+            fanout.add(sub)
+        except Exception:
+            with self._cv:
+                self._n_subs -= 1
+                self._my_subs.discard(sub)
+                sub._exited = True
+            raise
+        return sub
+
+    def unsubscribe(self, sub: Subscription) -> None:
+        """End one subscription: its pump exits, the local queue (if any)
+        gets the ``None`` end-of-stream sentinel.  Idempotent."""
+        sub._closed.set()
+        fanout = self._shared.fanout
+        if fanout is not None:
+            fanout.remove(sub)
+
+    def _fanout(self) -> ChunkFanout:
+        with _REG_LOCK:
+            if self._shared.fanout is None:
+                self._shared.fanout = ChunkFanout(self.path, self._shared.file)
+            return self._shared.fanout
+
+    def _push_gate(self, cid: str) -> float:
+        """Token-bucket gate for one push: 0.0 = send now, else seconds the
+        pump should back off before re-checking."""
+        with self._cv:
+            if self._shutdown:
+                return 0.0  # draining: let the pump reach its exit check
+            sched = self._sched_for(cid)
+            sched.refill(self._clock())
+            if sched.eligible():
+                return 0.0
+            sched.throttled += 1
+            return sched.wait_s()
+
+    def _push_account(self, cid: str, nbytes: int) -> None:
+        """Debit one delivered push against the subscriber's bucket and the
+        service totals (same post-paid model as response accounting)."""
+        with self._cv:
+            self._pushed_chunks += 1
+            self._pushed_bytes += nbytes
+            sched = self._sched_for(cid)
+            if sched.cls.rate_bytes_per_s is not None:
+                sched.tokens -= max(nbytes, 1)
+
+    def _note_dropped(self, n: int) -> None:
+        with self._cv:
+            self._dropped_chunks += n
+
+    def _sub_exit(self, sub: Subscription, error: Exception | None) -> None:
+        """Pump-exit bookkeeping (runs exactly once per subscription)."""
+        with self._cv:
+            if sub._exited:
+                return
+            sub._exited = True
+            self._n_subs -= 1
+            self._my_subs.discard(sub)
+        sub._closed.set()
+        fanout = self._shared.fanout
+        if fanout is not None:
+            fanout.remove(sub)
+        sub._finish(error)
 
     # -- scheduling ----------------------------------------------------------
 
@@ -654,6 +1148,10 @@ class DataService:
                 completed=self._completed,
                 failed=self._failed,
                 bytes_served=self._bytes_served,
+                subscribers=self._n_subs,
+                pushed_chunks=self._pushed_chunks,
+                pushed_bytes=self._pushed_bytes,
+                dropped_chunks=self._dropped_chunks,
                 requests_by_type=dict(self._by_type),
                 p50_ms=self._latency.percentile(50) * 1e3,
                 p99_ms=self._latency.percentile(99) * 1e3,

@@ -45,7 +45,9 @@ Fault tolerance (``docs/SERVICE.md`` "Failure modes"):
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
+import queue
 import random
 import socket
 import threading
@@ -56,9 +58,80 @@ from typing import Iterable, Sequence
 from repro.core.container import TH5Error
 
 from . import wire
-from .requests import CatalogQuery, RetryableError, ServiceResponse, StatsQuery, SteeringRequest
+from .requests import (
+    CatalogQuery,
+    PushedChunk,
+    RetryableError,
+    ServiceResponse,
+    StatsQuery,
+    SteeringRequest,
+    SubscribeRequest,
+)
 from .sessions import LodWindowSession
 from .stats import ClientStats, ServiceStats
+
+
+class RemoteSubscription:
+    """Client half of one live push subscription
+    (:meth:`RemoteDataService.subscribe`).
+
+    Iterate it (or call :meth:`get`) to consume :class:`~repro.service.
+    requests.PushedChunk` items as the broker's fan-out delivers them;
+    ``None`` / ``StopIteration`` means the stream ended (client or service
+    closed), a subscription failure re-raises typed.  ``next_chunk`` is the
+    resume cursor — on a reconnect the client re-subscribes from it, so a
+    ``lossless`` subscriber observes every committed chunk exactly once
+    even across connection drops (the broker replays the missed ones from
+    the chunk index)."""
+
+    def __init__(self, service: "RemoteDataService", sub_id: int, client: str, request: SubscribeRequest):
+        self.client = client
+        self.request = request
+        self.next_chunk = int(request.from_chunk)  # resume cursor
+        self.pushed = 0
+        self.dropped = 0  # cumulative drop-oldest skips, from the frames
+        self.generation = 0  # latest commit generation seen
+        self._service = service
+        self._sub_id = sub_id
+        self._queue: "queue.Queue" = queue.Queue()
+        self._finished = False
+
+    def _on_push(self, item: PushedChunk) -> None:
+        self.next_chunk = item.chunk_index + 1
+        self.pushed += 1
+        self.dropped = item.dropped
+        self.generation = max(self.generation, item.generation)
+        self._queue.put(item)
+
+    def _finish(self, error: Exception | None) -> None:
+        if not self._finished:
+            self._finished = True
+            self._queue.put(error)
+
+    def get(self, timeout: float | None = None) -> PushedChunk | None:
+        """Next :class:`PushedChunk`; ``None`` = stream ended.  Raises
+        ``queue.Empty`` on timeout, or the subscription's failure."""
+        item = self._queue.get(timeout=timeout)
+        if item is None or isinstance(item, Exception):
+            self._queue.put(item)  # keep the terminal state observable
+            if isinstance(item, Exception):
+                raise item
+            return None
+        return item
+
+    def __iter__(self) -> "RemoteSubscription":
+        return self
+
+    def __next__(self) -> PushedChunk:
+        item = self.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        """Stop the stream (sends UNSUBSCRIBE; local ``None`` sentinel
+        either way).  Idempotent."""
+        self._service._unsubscribe(self)
 
 
 class RemoteDataService:
@@ -114,6 +187,10 @@ class RemoteDataService:
         self.reconnects = 0  # completed re-dials over this client's lifetime
         self._retry_lock = threading.Lock()
         self._retries: dict[str, int] = {}  # BUSY resubmissions per client id
+        self._subs_lock = threading.Lock()
+        # sub_id → RemoteSubscription; sub_ids share the req_id counter (a
+        # PUSH frame's req_id is its subscription's SUBSCRIBE req_id)
+        self._subs: dict[int, RemoteSubscription] = {}
         self._sock = self._dial()
         self._reader = threading.Thread(
             target=self._read_loop, name="th5-wire-client-rx", daemon=True
@@ -261,6 +338,67 @@ class RemoteDataService:
                 return int(info.shape[0]) if info.shape else 0
         raise KeyError(f"no dataset {dataset!r} in remote catalog")
 
+    # -- subscriptions -------------------------------------------------------
+
+    def subscribe(
+        self,
+        client: str,
+        dataset: str,
+        *,
+        rows: tuple[int, int] | None = None,
+        policy: str = "lossless",
+        max_pending: int = 64,
+        from_chunk: int = 0,
+    ) -> RemoteSubscription:
+        """Stream committed chunks of ``dataset`` live (see
+        :class:`~repro.service.requests.SubscribeRequest` for the window /
+        policy semantics).  Returns immediately; iterate the subscription
+        to consume pushes.  With ``reconnect=True`` (the default) a
+        connection drop is transparent: the client re-dials and
+        re-subscribes from ``next_chunk``, so a ``lossless`` stream misses
+        nothing."""
+        request = SubscribeRequest(
+            dataset=dataset,
+            rows=rows,
+            policy=policy,
+            max_pending=max_pending,
+            from_chunk=from_chunk,
+        )
+        meta, payload = wire.encode_request(client, request)
+        sub_id = next(self._req_ids)
+        sub = RemoteSubscription(self, sub_id, str(client), request)
+        with self._pending_lock:
+            if self._closed:
+                raise TH5Error("remote service connection closed")
+        with self._subs_lock:
+            self._subs[sub_id] = sub  # registered BEFORE the send: a send
+            # racing an outage is healed by the reconnect resubscribe
+        try:
+            with self._send_lock:
+                wire.send_frame(self._sock, wire.KIND_SUBSCRIBE, sub_id, meta, payload)
+        except BaseException as e:
+            if not self._reconnect:
+                with self._subs_lock:
+                    self._subs.pop(sub_id, None)
+                raise TH5Error(f"wire send failed: {e}") from e
+        return sub
+
+    def _unsubscribe(self, sub: RemoteSubscription) -> None:
+        with self._subs_lock:
+            if self._subs.pop(sub._sub_id, None) is None:
+                return  # already ended
+        try:
+            with self._send_lock:
+                wire.send_frame(
+                    self._sock,
+                    wire.KIND_UNSUBSCRIBE,
+                    next(self._req_ids),
+                    {"sub_id": sub._sub_id},
+                )
+        except BaseException:
+            pass  # wire down: the server's conn-death cleanup handles it
+        sub._finish(None)
+
     # -- response demultiplexing ---------------------------------------------
 
     def _read_loop(self) -> None:
@@ -351,6 +489,16 @@ class RemoteDataService:
                         replay = sorted(self._pending.items())
                     for rid, (_fut, _req, meta, payload) in replay:
                         wire.send_frame(sock, wire.KIND_REQUEST, rid, meta, payload)
+                    # re-subscribe live streams from their resume cursors,
+                    # under the SAME sub_ids: the broker replays committed
+                    # chunks the outage swallowed from the chunk index, so
+                    # a lossless subscriber misses nothing
+                    with self._subs_lock:
+                        resubs = sorted(self._subs.items())
+                    for sid, sub in resubs:
+                        req = dataclasses.replace(sub.request, from_chunk=sub.next_chunk)
+                        smeta, spayload = wire.encode_request(sub.client, req)
+                        wire.send_frame(sock, wire.KIND_SUBSCRIBE, sid, smeta, spayload)
             except (OSError, wire.WireError):
                 continue  # new socket died during replay: next attempt
             self.reconnects += 1
@@ -367,10 +515,49 @@ class RemoteDataService:
             err = wire.decode_error(frame.meta)
             err._th5_fatal = True
             raise err
+        if frame.kind == wire.KIND_PUSH:
+            with self._subs_lock:
+                sub = self._subs.get(frame.req_id)
+            if sub is None:
+                return  # push raced our UNSUBSCRIBE: drop it
+            meta = frame.meta
+            try:
+                arr = wire.decode_value(meta["value"], frame.payload)
+                item = PushedChunk(
+                    dataset=meta["dataset"],
+                    chunk_index=int(meta["chunk_index"]),
+                    row_start=int(meta["row_start"]),
+                    rows=arr,
+                    generation=int(meta.get("generation", 0)),
+                    seq=int(meta.get("seq", 0)),
+                    dropped=int(meta.get("dropped", 0)),
+                )
+            except Exception as e:  # undecodable push: fail THIS stream
+                with self._subs_lock:
+                    self._subs.pop(frame.req_id, None)
+                sub._finish(e)
+                return
+            sub._on_push(item)
+            return
         with self._pending_lock:
             entry = self._pending.pop(frame.req_id, None)
         if entry is None:
-            return  # response for a request we gave up on
+            with self._subs_lock:
+                sub = self._subs.get(frame.req_id)
+            if sub is not None:
+                if frame.kind == wire.KIND_ERROR:
+                    # subscription rejected or its pump failed, typed
+                    with self._subs_lock:
+                        self._subs.pop(frame.req_id, None)
+                    sub._finish(wire.decode_error(frame.meta))
+                elif frame.kind == wire.KIND_OK and frame.meta.get("eos"):
+                    # broker ended the stream cleanly (unsubscribe on its
+                    # side, or service shutdown): end-of-stream, not an ack
+                    with self._subs_lock:
+                        self._subs.pop(frame.req_id, None)
+                    sub._finish(None)
+                # any other KIND_OK on a sub_id = the subscribe ack: no-op
+            return  # else: response for a request we gave up on
         fut, request, _meta, _payload = entry
         if frame.kind == wire.KIND_OK:
             meta = frame.meta
@@ -415,6 +602,11 @@ class RemoteDataService:
             fut.set_exception(
                 error or TH5Error("remote service connection closed with requests pending")
             )
+        with self._subs_lock:
+            subs = list(self._subs.values())
+            self._subs.clear()
+        for sub in subs:  # error ends the stream typed; None = clean close
+            sub._finish(error)
 
     # -- liveness --------------------------------------------------------------
 

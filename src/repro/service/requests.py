@@ -138,6 +138,72 @@ class SteeringRequest:
         return SteeringRequest(op="lineage")
 
 
+#: Delivery policies a :class:`SubscribeRequest` may pick.
+SUBSCRIBE_POLICIES = ("lossless", "drop-oldest")
+
+
+@dataclass(frozen=True)
+class SubscribeRequest:
+    """Live push subscription: stream committed chunks of one dataset.
+
+    Unlike the query classes above this is NOT submitted through the
+    admission queue — it rides a dedicated ``KIND_SUBSCRIBE`` frame and
+    registers a long-lived fan-out with ``DataService.subscribe``: every
+    chunk the writer commits whose rows intersect ``rows`` (a half-open
+    ``(row_lo, row_hi)`` LOD window; ``None`` = the whole dataset) is
+    pushed to the subscriber as a :class:`PushedChunk`.
+
+    ``policy`` selects the delivery contract when the subscriber is slower
+    than the writer: ``"lossless"`` (bulk consumers) never skips a chunk —
+    the chunked container is the replayable log, so the subscriber just
+    lags; ``"drop-oldest"`` (interactive viewers) bounds the lag at
+    ``max_pending`` committed-but-undelivered chunks by skipping the oldest
+    ones (counted in ``PushedChunk.dropped`` — the stream stays
+    monotonically advancing, with gaps).  ``from_chunk`` starts delivery at
+    that chunk index instead of 0 — the resubscribe cursor a reconnecting
+    lossless client uses to resume exactly where its last session stopped.
+    """
+
+    dataset: str
+    rows: tuple[int, int] | None = None  # half-open (row_lo, row_hi) window
+    policy: str = "lossless"  # "lossless" | "drop-oldest"
+    max_pending: int = 64  # drop-oldest: max committed-but-undelivered lag
+    from_chunk: int = 0  # first chunk index to deliver (resume cursor)
+
+    def __post_init__(self) -> None:
+        if self.policy not in SUBSCRIBE_POLICIES:
+            raise ValueError(
+                f"unknown subscribe policy {self.policy!r} (want one of {SUBSCRIBE_POLICIES})"
+            )
+        if self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        if self.from_chunk < 0:
+            raise ValueError("from_chunk must be >= 0")
+        if self.rows is not None and not self.rows[0] < self.rows[1]:
+            raise ValueError(f"empty subscription window {self.rows}")
+
+
+@dataclass(frozen=True)
+class PushedChunk:
+    """One delivered subscription push: the rows of a committed chunk that
+    intersect the subscriber's window.
+
+    ``chunk_index`` is the chunk's position in the dataset's chunk index
+    (the resubscribe cursor is ``chunk_index + 1``); ``row_start`` the
+    absolute dataset row of ``rows[0]``; ``generation`` the commit that
+    made the chunk durable; ``seq`` this subscription's 0-based delivery
+    counter; ``dropped`` the cumulative chunks skipped so far under the
+    ``drop-oldest`` policy (always 0 for lossless)."""
+
+    dataset: str
+    chunk_index: int
+    row_start: int
+    rows: Any  # np.ndarray — the intersecting rows, native dtype
+    generation: int
+    seq: int
+    dropped: int
+
+
 Request = (
     HyperslabQuery | WindowQuery | CatalogQuery | PingQuery | StatsQuery | SteeringRequest
 )

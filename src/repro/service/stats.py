@@ -105,7 +105,11 @@ class ServiceStats:
     controller's totals (rejected = backpressure, the bounded queue was
     full); ``completed`` / ``failed`` terminal counts; ``bytes_served`` the
     logical payload bytes returned; ``requests_by_type`` the per-request-
-    class totals; ``p50_ms`` / ``p99_ms`` / ``mean_ms`` end-to-end request
+    class totals; ``subscribers`` the live push subscriptions registered
+    through this service (gauge); ``pushed_chunks`` / ``pushed_bytes`` the
+    subscription fan-out's delivered totals and ``dropped_chunks`` the
+    chunks its ``drop-oldest`` policy skipped for lagging viewers
+    (lossless subscribers never contribute here); ``p50_ms`` / ``p99_ms`` / ``mean_ms`` end-to-end request
     latency percentiles over the reservoir; ``cache`` the SHARED chunk
     cache's counters (one cache per file, all clients); ``qos`` the
     per-class QoS aggregates (one entry per configured
@@ -123,6 +127,10 @@ class ServiceStats:
     completed: int = 0
     failed: int = 0
     bytes_served: int = 0
+    subscribers: int = 0
+    pushed_chunks: int = 0
+    pushed_bytes: int = 0
+    dropped_chunks: int = 0
     requests_by_type: dict[str, int] = field(default_factory=dict)
     p50_ms: float = 0.0
     p99_ms: float = 0.0

@@ -45,6 +45,7 @@ import time
 
 from . import wire
 from .broker import AdmissionError, DataService
+from .requests import SubscribeRequest
 
 _SENTINEL = None  # sender-queue shutdown marker
 
@@ -68,6 +69,10 @@ class _Conn:
         # response frame is handed to the wire
         self.inflight = 0
         self._inflight_lock = threading.Lock()
+        # live subscriptions keyed by the SUBSCRIBE frame's req_id (the
+        # sub_id PUSH frames echo); mutated only on the reader thread,
+        # including the conn-death cleanup in _read_loop's finally
+        self._subs: dict[int, object] = {}
         self.reader = threading.Thread(
             target=self._read_loop, name=f"{name}-rx", daemon=True
         )
@@ -116,6 +121,12 @@ class _Conn:
                     # must keep flowing while the admission queue is full
                     self._put(wire.KIND_PONG, frame.req_id, {}, None)
                     continue
+                if frame.kind == wire.KIND_SUBSCRIBE:
+                    self._subscribe(frame)
+                    continue
+                if frame.kind == wire.KIND_UNSUBSCRIBE:
+                    self._unsubscribe(frame)
+                    continue
                 if frame.kind != wire.KIND_REQUEST:
                     raise wire.WireError(f"unexpected frame kind {frame.kind}")
                 self._dispatch(frame)
@@ -131,6 +142,15 @@ class _Conn:
         except OSError:
             return  # socket torn down under us (server close)
         finally:
+            # a dead connection must leak NO broker state: every live
+            # subscription it carried is torn down with it (a reconnecting
+            # client re-subscribes from its cursor on the new connection)
+            subs, self._subs = list(self._subs.values()), {}
+            for sub in subs:
+                try:
+                    svc.unsubscribe(sub)
+                except Exception:  # pragma: no cover - teardown best-effort
+                    pass
             self.out.put(_SENTINEL)
             self.server._forget(self)
 
@@ -192,6 +212,93 @@ class _Conn:
         finally:
             with self._inflight_lock:
                 self.inflight -= 1
+
+    # -- subscriptions -------------------------------------------------------
+
+    def _subscribe(self, frame: wire.Frame) -> None:
+        """Register a push subscription: the frame's ``req_id`` becomes the
+        sub_id every PUSH frame echoes.  A SUBSCRIBE reusing a live sub_id
+        replaces it (the reconnect path re-subscribes under the same id on
+        a fresh connection; same-connection reuse behaves identically)."""
+        svc = self.server.service
+        sub_id = frame.req_id
+        try:
+            client, request = wire.decode_request(frame.meta, frame.payload)
+            if not isinstance(request, SubscribeRequest):
+                raise TypeError(
+                    f"SUBSCRIBE frame carried {type(request).__name__},"
+                    " want SubscribeRequest"
+                )
+        except (KeyError, ValueError, TypeError) as e:
+            self._put(wire.KIND_ERROR, sub_id, wire.encode_error(e), None)
+            return
+        if client not in self._known_clients:
+            self._known_clients.add(client)
+            svc.set_client_class(client, self.qos)
+
+        def sink(push_meta: dict, rows, _sid=sub_id) -> bool:
+            desc, payload = wire.encode_value(rows)
+            return self.send_push(_sid, {**push_meta, "value": desc}, payload)
+
+        def on_error(exc: Exception | None, _sid=sub_id) -> None:
+            # terminal event for the stream: a pump failure becomes the
+            # typed error; a clean end (broker unsubscribe / shutdown)
+            # becomes an explicit end-of-stream frame so the remote
+            # iterator stops instead of waiting forever
+            if exc is None:
+                self._put(
+                    wire.KIND_OK, _sid, {"value": {"kind": "none"}, "eos": True}, None
+                )
+            else:
+                self._put(wire.KIND_ERROR, _sid, wire.encode_error(exc), None)
+
+        old = self._subs.pop(sub_id, None)
+        if old is not None:
+            svc.unsubscribe(old)
+        try:
+            sub = svc.subscribe(client, request, sink=sink, on_error=on_error)
+        except Exception as e:
+            self._put(wire.KIND_ERROR, sub_id, wire.encode_error(e), None)
+            return
+        self._subs[sub_id] = sub
+        # the pump may already be framing pushes; the client treats any OK
+        # on a sub_id as the ack and PUSH frames are self-describing, so
+        # ack/push ordering does not matter
+        self._put(
+            wire.KIND_OK,
+            sub_id,
+            {"client": client, "value": {"kind": "none"}, "subscribed": True},
+            None,
+        )
+
+    def _unsubscribe(self, frame: wire.Frame) -> None:
+        svc = self.server.service
+        sub_id = frame.meta.get("sub_id")
+        sub = self._subs.pop(sub_id, None) if sub_id is not None else None
+        if sub is not None:
+            svc.unsubscribe(sub)
+        self._put(
+            wire.KIND_OK,
+            frame.req_id,
+            {"client": "", "value": {"kind": "none"}, "unsubscribed": sub is not None},
+            None,
+        )
+
+    def send_push(self, sub_id: int, meta: dict, payload) -> bool:
+        """Frame one PUSH onto the wire, BLOCKING on the write lock (unlike
+        ``_put``'s queue fallback): backpressure from a slow socket must
+        reach the pump thread, not pile frames into the unbounded sender
+        queue.  SO_SNDTIMEO still bounds the stall (slow-consumer
+        eviction).  False = connection dead, the subscription should end."""
+        with self._wlock:
+            if self._dead:
+                return False
+            try:
+                wire.send_frame(self.sock, wire.KIND_PUSH, sub_id, meta, payload)
+                return True
+            except (ConnectionError, BrokenPipeError, OSError):
+                self._kill_locked()
+                return False
 
     def _put(self, kind: int, req_id: int, meta: dict, payload) -> None:
         if self._wlock.acquire(blocking=False):

@@ -56,6 +56,7 @@ from .requests import (
     ServiceResponse,
     StatsQuery,
     SteeringRequest,
+    SubscribeRequest,
     WindowQuery,
 )
 from .stats import ClientStats, ServiceStats
@@ -72,6 +73,9 @@ KIND_BUSY = 4  # server → client: admission queue full (queue_depth, client)
 KIND_ERROR = 5  # server → client: request failed (etype + message end-to-end)
 KIND_PING = 6  # client → server: liveness probe (answered inline, never queued)
 KIND_PONG = 7  # server → client: PING echo (req_id mirrored back)
+KIND_SUBSCRIBE = 8  # client → server: open a push subscription (SubscribeRequest meta)
+KIND_PUSH = 9  # server → client: one committed chunk (req_id = subscription id)
+KIND_UNSUBSCRIBE = 10  # client → server: cancel a subscription (meta: sub_id)
 
 HEADER_FMT = "<4sBBHQIQ"
 HEADER_SIZE = struct.calcsize(HEADER_FMT)  # 28 bytes
@@ -238,6 +242,14 @@ def encode_request(client: str, req) -> tuple[dict, Any]:
             child_path=req.child_path,
             overlay=[[k, v] for k, v in req.overlay],
         )
+    elif isinstance(req, SubscribeRequest):
+        meta.update(
+            dataset=req.dataset,
+            rows=[int(req.rows[0]), int(req.rows[1])] if req.rows is not None else None,
+            policy=req.policy,
+            max_pending=int(req.max_pending),
+            from_chunk=int(req.from_chunk),
+        )
     else:
         raise TypeError(f"request type {type(req).__name__} is not wire-encodable")
     return meta, payload
@@ -272,6 +284,15 @@ def decode_request(meta: dict, payload: memoryview) -> tuple[str, Any]:
             at_step=int(at_step) if at_step is not None else None,
             child_path=meta.get("child_path"),
             overlay=tuple((k, v) for k, v in meta.get("overlay", [])),
+        )
+    if rtype == "SubscribeRequest":
+        rows = meta.get("rows")
+        return client, SubscribeRequest(
+            dataset=meta["dataset"],
+            rows=(int(rows[0]), int(rows[1])) if rows is not None else None,
+            policy=str(meta.get("policy", "lossless")),
+            max_pending=int(meta.get("max_pending", 64)),
+            from_chunk=int(meta.get("from_chunk", 0)),
         )
     raise WireError(f"unknown request type {rtype!r} on the wire")
 

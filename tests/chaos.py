@@ -98,14 +98,28 @@ class FlakySocket:
     ``delay_s`` — sleep before every send (slow-network shaping for the
     reconnect-window benchmark and heartbeat tests).
 
+    ``recv_drop_after_bytes`` — after that many bytes have been *received*,
+    the next recv severs the socket and raises ``ConnectionResetError``: a
+    consumer dying mid-frame on the read side (e.g. a subscriber killed
+    while a push is in flight toward it).
+
     Only the methods ``wire.py`` uses are interposed; everything else
     proxies to the wrapped socket.
     """
 
-    def __init__(self, sock, *, drop_after_bytes: int | None = None, delay_s: float = 0.0):
+    def __init__(
+        self,
+        sock,
+        *,
+        drop_after_bytes: int | None = None,
+        delay_s: float = 0.0,
+        recv_drop_after_bytes: int | None = None,
+    ):
         self._sock = sock
         self._sent = 0
+        self._received = 0
         self.drop_after_bytes = drop_after_bytes
+        self.recv_drop_after_bytes = recv_drop_after_bytes
         self.delay_s = delay_s
 
     def _budget(self) -> int | None:
@@ -138,7 +152,13 @@ class FlakySocket:
         self.sendmsg([data])
 
     def recv_into(self, view):
-        return self._sock.recv_into(view)
+        if self.recv_drop_after_bytes is not None:
+            if self._received >= self.recv_drop_after_bytes:
+                self._sock.close()
+                raise ConnectionResetError("injected recv-side disconnect (chaos)")
+        n = self._sock.recv_into(view)
+        self._received += n
+        return n
 
     def __getattr__(self, name):
         return getattr(self._sock, name)

@@ -50,6 +50,8 @@ from repro.service import wire
 from tests import chaos
 from tests._subproc import run_expecting_death
 
+pytestmark = pytest.mark.chaos
+
 ROWS, COLS, CHUNK_ROWS = 256, 16, 32
 N_CHUNKS = ROWS // CHUNK_ROWS
 SEED = 7
@@ -411,6 +413,143 @@ def test_heartbeat_flags_silent_server(sock_dir):
         lsock.close()
         for s in sinks:
             s.close()
+
+
+# -- push plane: subscriber chaos ----------------------------------------------
+
+
+def _make_chunked(path, rows, seed=SEED):
+    """A run file holding ``rows`` committed rows of /u (32-row chunks)."""
+    rng = np.random.default_rng(seed)
+    u = rng.standard_normal((rows, COLS)).astype("<f4")
+    with TH5File.create(path) as f:
+        m = f.create_chunked_dataset("/u", u.shape, "<f4", CHUNK_ROWS)
+        f.write_chunked(m, u)
+        f.commit()
+    return u
+
+
+def _raw_subscriber(addr, name, **req_kwargs):
+    """HELLO + SUBSCRIBE over a raw socket; returns it (caller recvs/stalls)."""
+    from repro.service.requests import SubscribeRequest
+
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    s.connect(addr)
+    wire.send_frame(s, wire.KIND_HELLO, 0, {"version": wire.WIRE_VERSION})
+    meta, payload = wire.encode_request(name, SubscribeRequest(dataset="/u", **req_kwargs))
+    wire.send_frame(s, wire.KIND_SUBSCRIBE, 1, meta, payload)
+    return s
+
+
+def test_stalled_subscriber_evicted_without_blocking_writer_or_peers(tmp_path, sock_dir):
+    """A subscriber that SUBSCRIBEs and then never reads its socket: the
+    pushes fill its socket buffer, SO_SNDTIMEO fires, the connection is
+    evicted — and through all of it the other subscriber keeps receiving
+    every chunk and the broker ends with zero leaked subscriptions."""
+    path = str(tmp_path / "run.th5")
+    u = _make_chunked(path, 64 * CHUNK_ROWS)  # 64 chunks ≈ 256 KiB of pushes
+    addr = os.path.join(sock_dir, "s.sock")
+    with DataService(path) as svc:
+        with ServiceServer(svc, addr, sock_buf_bytes=1 << 12, send_timeout_s=1.0) as server:
+            stall = _raw_subscriber(addr, "staller")
+            try:
+                with RemoteDataService(server.address) as healthy_conn:
+                    healthy = healthy_conn.subscribe("healthy", "/u")
+                    got = [healthy.get(timeout=30.0) for _ in range(64)]
+                    assert [p.chunk_index for p in got] == list(range(64))
+                    np.testing.assert_array_equal(
+                        np.concatenate([p.rows for p in got]), u
+                    )
+                    # the staller is evicted and its subscription reaped
+                    _wait(lambda: server.stats()["active"] == 1, what="staller eviction")
+                    _wait(lambda: svc.stats().subscribers == 1, what="sub cleanup")
+                    healthy.close()
+                _wait(lambda: svc.stats().subscribers == 0, what="all subs gone")
+            finally:
+                stall.close()
+
+
+def test_subscriber_killed_mid_push_leaks_no_broker_state(tmp_path, sock_dir):
+    """A subscriber dying mid-frame WHILE a push is being received (the
+    FlakySocket recv-side fault): the connection tears, the broker reaps
+    the subscription, other clients never notice."""
+    path = str(tmp_path / "run.th5")
+    u = _make_chunked(path, 16 * CHUNK_ROWS)
+    addr = os.path.join(sock_dir, "s.sock")
+    with DataService(path) as svc:
+        with ServiceServer(svc, addr, send_timeout_s=1.0) as server:
+            raw = _raw_subscriber(addr, "doomed")
+            flaky = chaos.FlakySocket(raw, recv_drop_after_bytes=5000)
+            frames = 0
+            with pytest.raises(ConnectionResetError):
+                while True:  # consume pushes until the injected death
+                    f = wire.recv_frame(flaky)
+                    assert f is not None
+                    frames += 1
+            assert frames >= 1  # it really died MID-stream, not at HELLO
+            _wait(lambda: svc.stats().subscribers == 0, what="doomed sub reaped")
+            _wait(lambda: server.stats()["active"] == 0, what="conn reap")
+            # the service is unharmed: a fresh subscriber replays everything
+            with RemoteDataService(server.address) as conn:
+                sub = conn.subscribe("fresh", "/u")
+                got = [sub.get(timeout=30.0) for _ in range(16)]
+                np.testing.assert_array_equal(np.concatenate([p.rows for p in got]), u)
+                sub.close()
+
+
+def test_severed_then_redialed_lossless_subscriber_misses_nothing(tmp_path, sock_dir):
+    """The lossless resubscribe contract under repeated violence: the
+    connection is severed again and again while a live writer streams;
+    every committed chunk arrives exactly once, bit-identical (the broker
+    replays the outage gaps from the chunk index)."""
+    from repro.core import codecs as _codecs
+
+    path = str(tmp_path / "live.th5")
+    n_chunks = 24
+    rng = np.random.default_rng(SEED)
+    u = rng.standard_normal((n_chunks * CHUNK_ROWS, COLS)).astype("<f4")
+    codec = _codecs.get_codec("zlib")
+    f = TH5File.create(path)
+    meta = f.create_chunked_dataset("/u", u.shape, "<f4", CHUNK_ROWS)
+    f.commit()
+    try:
+        with DataService(path) as svc:
+            with ServiceServer(svc, os.path.join(sock_dir, "s.sock")) as server:
+                with RemoteDataService(
+                    server.address, redial_base_s=0.01, redial_cap_s=0.1
+                ) as remote:
+                    sub = remote.subscribe("survivor", "/u")
+
+                    def write_all():
+                        for ci in range(n_chunks):
+                            arr = u[ci * CHUNK_ROWS : (ci + 1) * CHUNK_ROWS]
+                            p, rn, rc, sc, cid = _codecs.encode_chunk(codec, arr)
+                            f.append_chunk(
+                                meta, p, raw_nbytes=rn, raw_crc32=rc,
+                                stored_crc32=sc, codec_id=cid,
+                            )
+                            f.commit()
+                            time.sleep(0.01)
+
+                    w = threading.Thread(target=write_all, daemon=True)
+                    w.start()
+                    got = []
+                    while len(got) < n_chunks:
+                        got.append(sub.get(timeout=60.0))
+                        if len(got) in (4, 9, 15):  # sever mid-stream, thrice
+                            remote._sock.shutdown(socket.SHUT_RDWR)
+                    w.join(timeout=60.0)
+                    assert remote.reconnects >= 3
+                    assert [p.chunk_index for p in got] == list(range(n_chunks))
+                    assert all(p.dropped == 0 for p in got)
+                    np.testing.assert_array_equal(
+                        np.concatenate([p.rows for p in got]), u
+                    )
+                    sub.close()
+                    # nothing left behind broker-side
+                    _wait(lambda: svc.stats().subscribers == 0, what="sub cleanup")
+    finally:
+        f.close()
 
 
 def test_flaky_socket_torn_request_does_not_kill_server(run_file, sock_dir):

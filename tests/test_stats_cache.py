@@ -1,0 +1,124 @@
+"""Direct unit tests for two small load-bearing pieces the bigger suites
+only exercise incidentally: the ``ChunkCache.contains`` no-side-effect
+probe (per-client attribution depends on it mutating nothing) and the
+``LatencyRecorder`` deterministic reservoir (the p50/p99 every benchmark
+gate reads)."""
+
+import numpy as np
+
+from repro.core.container import ChunkCache
+from repro.service.stats import LatencyRecorder
+
+
+# -- ChunkCache.contains -------------------------------------------------------
+
+
+def _arr(n=8):
+    return np.arange(n, dtype="<f4")
+
+
+def test_contains_reports_presence_without_any_side_effects():
+    c = ChunkCache(capacity_bytes=1 << 20)
+    assert not c.contains(("/d", 0))
+    c.put(("/d", 0), _arr())
+    assert c.contains(("/d", 0))
+    assert not c.contains(("/d", 1))
+    # no counters moved, hot/cold order untouched
+    st = c.stats()
+    assert (st["hits"], st["misses"]) == (0, 0)
+
+
+def test_contains_does_not_promote_against_lru_eviction():
+    """``get`` promotes; ``contains`` must NOT — an entry probed a thousand
+    times is still the LRU victim if it was never actually read."""
+    one = np.zeros(100, "<f4")  # 400 B each; capacity fits exactly two
+    c = ChunkCache(capacity_bytes=800)
+    c.put(("/d", 0), one)
+    c.put(("/d", 1), one)
+    for _ in range(1000):
+        assert c.contains(("/d", 0))  # would promote if it were a get()
+    c.put(("/d", 2), one)  # evicts the true LRU: ("/d", 0)
+    assert not c.contains(("/d", 0))
+    assert c.contains(("/d", 1)) and c.contains(("/d", 2))
+
+
+def test_contains_tracks_invalidate_and_clear():
+    c = ChunkCache(capacity_bytes=1 << 20)
+    c.put(("/run/u", 0), _arr())
+    c.put(("/run/u", 1), _arr())
+    c.put(("/run/v", 0), _arr())
+    c.invalidate("/run/u")
+    assert not c.contains(("/run/u", 0)) and not c.contains(("/run/u", 1))
+    assert c.contains(("/run/v", 0))
+    c.clear()
+    assert not c.contains(("/run/v", 0))
+
+
+def test_contains_advisory_answer_matches_get():
+    """On a quiescent cache the probe and the read must agree exactly."""
+    c = ChunkCache(capacity_bytes=1 << 10)
+    for i in range(16):  # overflow the capacity: some entries evict
+        c.put(("/d", i), np.zeros(64, "<f4"))  # 256 B each, ~4 fit
+    for i in range(16):
+        assert c.contains(("/d", i)) == (c.get(("/d", i)) is not None)
+
+
+# -- LatencyRecorder -----------------------------------------------------------
+
+
+def test_recorder_exact_percentiles_below_capacity():
+    r = LatencyRecorder(capacity=1024)
+    for s in reversed(range(101)):  # 0..100 ms, inserted descending
+        r.add(s / 1000.0)
+    assert r.n == 101
+    assert r.percentile(0) == 0.0
+    assert r.percentile(50) == 0.050
+    assert r.percentile(99) == 0.099
+    assert r.percentile(100) == 0.100
+    assert abs(r.mean() - 0.050) < 1e-12
+
+
+def test_recorder_empty_and_single_sample():
+    r = LatencyRecorder()
+    assert r.percentile(50) == 0.0 and r.mean() == 0.0 and r.n == 0
+    r.add(0.25)
+    for q in (0, 50, 99, 100):
+        assert r.percentile(q) == 0.25
+    assert r.mean() == 0.25
+
+
+def test_recorder_is_deterministic_across_instances():
+    """Same seed + same stream ⇒ bit-identical reservoir: benchmark runs
+    are reproducible, no global RNG involved."""
+    a, b = LatencyRecorder(capacity=64), LatencyRecorder(capacity=64)
+    stream = [((i * 37) % 1000) / 1000.0 for i in range(5000)]
+    for s in stream:
+        a.add(s)
+        b.add(s)
+    assert a._samples == b._samples
+    assert a.percentile(50) == b.percentile(50)
+    assert a.percentile(99) == b.percentile(99)
+
+
+def test_recorder_bounded_memory_and_representative_tail():
+    """A million-ish-sample stream costs O(capacity) memory while p50/p99
+    stay close to the true quantiles of the distribution."""
+    r = LatencyRecorder(capacity=4096)
+    n = 100_000
+    for i in range(n):  # uniform 0..1 via a coprime walk (deterministic)
+        r.add(((i * 7919) % n) / n)
+    assert len(r._samples) == 4096  # bounded, regardless of stream length
+    assert r.n == n
+    assert abs(r.percentile(50) - 0.5) < 0.05
+    assert abs(r.percentile(99) - 0.99) < 0.01
+
+
+def test_recorder_seed_zero_does_not_degenerate():
+    """A zero seed must not freeze the LCG at 0 (the classic minstd trap):
+    replacement keeps happening past capacity."""
+    r = LatencyRecorder(capacity=8, seed=0)
+    for i in range(10_000):
+        r.add(float(i))
+    assert len(r._samples) == 8
+    # overwhelmingly likely some late samples displaced the first eight
+    assert any(s >= 8.0 for s in r._samples)

@@ -34,6 +34,7 @@ from repro.service import (
     ServiceServer,
     StatsQuery,
     SteeringRequest,
+    SubscribeRequest,
     WindowQuery,
     WireDisconnect,
     WireError,
@@ -105,7 +106,16 @@ def test_frame_roundtrip_over_socketpair():
 
 @settings(max_examples=25, deadline=None)
 @given(
-    kind=st.sampled_from([wire.KIND_REQUEST, wire.KIND_OK, wire.KIND_ERROR]),
+    kind=st.sampled_from(
+        [
+            wire.KIND_REQUEST,
+            wire.KIND_OK,
+            wire.KIND_ERROR,
+            wire.KIND_SUBSCRIBE,
+            wire.KIND_PUSH,
+            wire.KIND_UNSUBSCRIBE,
+        ]
+    ),
     req_id=st.integers(min_value=0, max_value=2**63 - 1),
     meta=st.dictionaries(
         st.text(max_size=8),
@@ -149,6 +159,19 @@ def test_frame_roundtrip_property(kind, req_id, meta, payload):
             at_step=st.integers(0, 100),
             child_path=st.text(min_size=1, max_size=20),
             overlay=st.dictionaries(st.text(max_size=6), st.integers(-5, 5), max_size=3),
+        ),
+        st.builds(
+            SubscribeRequest,
+            dataset=st.text(min_size=1, max_size=20),
+            rows=st.one_of(
+                st.none(),
+                st.tuples(st.integers(0, 10**6), st.integers(0, 10**6)).filter(
+                    lambda t: t[0] < t[1]
+                ),
+            ),
+            policy=st.sampled_from(["lossless", "drop-oldest"]),
+            max_pending=st.integers(1, 10**6),
+            from_chunk=st.integers(0, 2**40),
         ),
     )
 )
@@ -278,6 +301,79 @@ def test_torn_stream_boundary_cuts():
                 wire.recv_frame(b)
         finally:
             b.close()
+
+
+def _captured_push_frame_bytes() -> bytes:
+    """The exact on-wire bytes of one representative KIND_PUSH frame, as
+    the transport's subscription sink builds it: push metadata + an
+    ndarray value descriptor + the chunk rows as payload."""
+    a, b = socket.socketpair()
+    try:
+        rows = np.arange(64 * 8, dtype="<f4").reshape(64, 8)
+        desc, payload = wire.encode_value(rows)
+        meta = {
+            "dataset": "/simulation/step_00000000/state/fields/u",
+            "chunk_index": 3, "row_start": 192, "n_rows": 64,
+            "generation": 5, "seq": 2, "dropped": 0, "value": desc,
+        }
+        wire.send_frame(a, wire.KIND_PUSH, 17, meta, payload)
+        a.close()
+        blob = b""
+        while True:
+            part = b.recv(1 << 16)
+            if not part:
+                return blob
+            blob += part
+    finally:
+        b.close()
+
+
+_PUSH_FRAME_BYTES = _captured_push_frame_bytes()
+
+
+def test_push_frame_roundtrip_bit_identical():
+    a, b = socket.socketpair()
+    try:
+        rows = np.arange(64 * 8, dtype="<f4").reshape(64, 8)
+        desc, payload = wire.encode_value(rows)
+        meta = {"dataset": "/u", "chunk_index": 3, "row_start": 192, "value": desc}
+        wire.send_frame(a, wire.KIND_PUSH, 17, meta, payload)
+        f = wire.recv_frame(b)
+        assert (f.kind, f.req_id) == (wire.KIND_PUSH, 17)
+        assert f.meta["chunk_index"] == 3 and f.meta["row_start"] == 192
+        np.testing.assert_array_equal(wire.decode_value(f.meta["value"], f.payload), rows)
+    finally:
+        for s in (a, b):
+            s.close()
+
+
+@settings(max_examples=60, deadline=None)
+@given(cut=st.integers(min_value=1, max_value=len(_PUSH_FRAME_BYTES) - 1))
+def test_torn_push_stream_any_cut_point_raises_wiredisconnect(cut):
+    """A subscription's connection dying at ANY byte of a PUSH frame must
+    surface as WireDisconnect — the client's reconnect path then
+    re-subscribes from its cursor; a torn push must never decode as a
+    short or corrupt chunk."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(_PUSH_FRAME_BYTES[:cut])
+        a.close()
+        with pytest.raises(WireDisconnect):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_subscribe_codec_defaults_fill_missing_fields():
+    """A decoder seeing a minimal SUBSCRIBE meta (older/terse client) fills
+    policy, max_pending and from_chunk with the documented defaults."""
+    meta, payload = wire.encode_request("v", SubscribeRequest(dataset="/u"))
+    for absent in ("policy", "max_pending", "from_chunk"):
+        meta.pop(absent)
+    client, back = wire.decode_request(meta, memoryview(b""))
+    assert client == "v"
+    assert back == SubscribeRequest(dataset="/u")
+    assert (back.policy, back.max_pending, back.from_chunk) == ("lossless", 64, 0)
 
 
 def test_bad_magic_and_oversized_frames_rejected():

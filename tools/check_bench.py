@@ -50,6 +50,7 @@ SMOKE_COMMANDS = [
     ("benchmarks/service_load.py", ["--smoke"]),
     ("benchmarks/service_load.py", ["--smoke", "--transport", "socket"]),
     ("benchmarks/recovery.py", ["--smoke"]),
+    ("benchmarks/streaming.py", ["--smoke"]),
 ]
 FULL_COMMANDS = [
     ("benchmarks/io_bandwidth.py", []),
@@ -57,6 +58,7 @@ FULL_COMMANDS = [
     ("benchmarks/service_load.py", []),
     ("benchmarks/service_load.py", ["--transport", "socket"]),
     ("benchmarks/recovery.py", []),
+    ("benchmarks/streaming.py", []),
 ]
 
 
@@ -95,6 +97,19 @@ def _recover_scan_scale(doc: dict):
     if not row:
         return None
     return (row.get("rows"), row.get("cols"), row.get("chunk_rows"))
+
+
+def _stream_scale(doc: dict):
+    rows = _get(doc, "stream", "fanout")
+    if not rows:
+        return None
+    last = rows[-1]
+    return (
+        last.get("rows"),
+        last.get("cols"),
+        last.get("chunk_rows"),
+        tuple(r.get("subscribers") for r in rows),
+    )
 
 
 # Each check: name, kind, getter(doc) -> value|None, and for "baseline"
@@ -263,6 +278,42 @@ def build_checks() -> list[dict]:
                 name="recover.reconnect.dip_ratio >= 0.2",
                 kind="floor",
                 get=lambda d: _get(d, "recover", "reconnect", "dip_ratio"),
+                limit=0.2,
+            ),
+        ]
+    )
+    # -- live subscriptions (the `stream` section) -------------------------
+    checks.extend(
+        [
+            dict(
+                # delivery is absolute for lossless subscribers: every
+                # committed chunk arrives exactly once, nothing dropped,
+                # and push accounting matches chunks x subscribers
+                name="stream.fanout: lossless delivery complete",
+                kind="invariant",
+                check=lambda d: (
+                    _get(d, "stream", "fanout") is None
+                    or all(
+                        r.get("lost") == 0
+                        and r.get("dropped") == 0
+                        and r.get("pushed_chunks")
+                        == r.get("n_chunks", 0) * r.get("subscribers", 0)
+                        for r in _get(d, "stream", "fanout")
+                    )
+                ),
+            ),
+            dict(
+                name="stream.fanout_MBps (N-subscriber push bandwidth)",
+                kind="baseline",
+                get=lambda d: _get(d, "stream", "fanout", -1, "fanout_MBps"),
+                scale=_stream_scale,
+            ),
+            dict(
+                # the push plane is decoupled per subscriber: fanning out to
+                # N viewers must not cost the writer most of its throughput
+                name="stream.writer_ratio >= 0.2 (writer isolation)",
+                kind="floor",
+                get=lambda d: _get(d, "stream", "fanout", -1, "writer_ratio"),
                 limit=0.2,
             ),
         ]
