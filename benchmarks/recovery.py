@@ -49,7 +49,7 @@ from repro.service import (
 )
 
 BENCH_JSON = "BENCH_io.json"
-SCHEMA = 7
+SCHEMA = 8
 DATASET = "/state/w"
 
 

@@ -13,6 +13,7 @@ per-figure detail lines.  Figure map:
     service_load     → §2.3/§4 served: N-client read/steering broker load
     recovery         → fault tolerance: crash-recovery scan + reconnect dip
     streaming        → live subscriptions: push fan-out rate + latency
+    query            → predicate pushdown: sparse query vs dense full scan
 """
 
 from __future__ import annotations
@@ -28,6 +29,7 @@ def main() -> None:
         io_bandwidth,
         lm_checkpoint,
         multigrid_bench,
+        query,
         recovery,
         service_load,
         streaming,
@@ -61,6 +63,10 @@ def main() -> None:
          lambda res: f"scan={res['scan'][-1]['scan_MBps']:.0f}MB/s,"
                      f"dip={res['reconnect']['dip_ratio']:.2f},"
                      f"reconnects={res['reconnect']['reconnects']}"),
+        # predicate pushdown: sparse-query speedup over the dense scan
+        ("query_pushdown", query.run,
+         lambda res: f"sel={res['selectivity']:.0%},speedup={res['speedup']:.1f}x,"
+                     f"pruned={res['pruned_ratio']:.2f}"),
         # live subscriptions: N-viewer push fan-out over the wire
         ("streaming_push_fanout", streaming.run,
          lambda res: f"fanout{res['fanout'][-1]['subscribers']}="

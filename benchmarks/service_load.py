@@ -60,7 +60,7 @@ from repro.service import (
 
 BENCH_JSON = "BENCH_io.json"
 STEP_GROUP = "/simulation/step_00000000/state"
-SCHEMA = 7
+SCHEMA = 8
 
 # The serve path is GIL-bound on CI-class boxes: more workers than cores
 # just churns the GIL (measured on the 2-core trajectory box: 8-client

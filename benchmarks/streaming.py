@@ -41,7 +41,7 @@ from repro.service import DataService, RemoteDataService, ServiceServer
 from repro.service.stats import LatencyRecorder
 
 BENCH_JSON = "BENCH_io.json"
-SCHEMA = 7
+SCHEMA = 8
 DS_WARM = "/stream/warmup"
 DS_LIVE = "/stream/u"
 CODEC = _codecs.get_codec("zlib")

@@ -14,6 +14,7 @@ from .aggregation import (
 from .checkpoint import AsyncCheckpointer, CheckpointManager, SaveResult, split_rows
 from .container import READ_COUNTER, CorruptFileError, DatasetMeta, TH5Error, TH5File
 from .hyperslab import Extent, SlabPlan, align_up, exclusive_prefix_sum, plan_bytes, plan_rows, validate_plan
+from .query import ChunkStats, QueryResult, col, compute_chunk_stats, evaluate_mask, pred_from_json
 from .sliding_window import TreeWindow, WindowPrefetcher, iter_lod_windows, lod_stride_for_budget, read_lod
 from .steering import BranchManager, LineageEntry
 
@@ -24,9 +25,11 @@ __all__ = [
     "AsyncCheckpointer",
     "BranchManager",
     "CheckpointManager",
+    "ChunkStats",
     "CollectiveWriter",
     "CorruptFileError",
     "DatasetMeta",
+    "QueryResult",
     "Extent",
     "LineageEntry",
     "SaveResult",
@@ -38,11 +41,15 @@ __all__ = [
     "WriteRequest",
     "WriteStats",
     "align_up",
+    "col",
+    "compute_chunk_stats",
+    "evaluate_mask",
     "exclusive_prefix_sum",
     "iter_lod_windows",
     "lod_stride_for_budget",
     "nd_slab_requests",
     "plan_bytes",
+    "pred_from_json",
     "plan_rows",
     "read_lod",
     "split_rows",

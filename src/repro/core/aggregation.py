@@ -49,7 +49,8 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from .codecs import CODEC_NONE, codec_by_id, encode_chunk, get_codec
+from .codecs import CODEC_NONE, codec_by_id, encode_chunk, encode_chunk_with_stats, get_codec
+from .query import compute_chunk_stats
 from .container import (
     IOV_MAX,
     READ_COUNTER,
@@ -652,8 +653,11 @@ class ChunkPipeline:
             pool = self._get_pool()
 
             def enc(lo: int, hi: int):
+                # stats ride the pool worker too: summarising (and, for a
+                # lossy codec, the decode-roundtrip the summary needs)
+                # overlaps the drain exactly like the encode itself
                 t0 = time.perf_counter()
-                out = encode_chunk(codec, arr[lo:hi])
+                out = encode_chunk_with_stats(codec, arr[lo:hi])
                 return out, time.perf_counter() - t0
 
             # bounded in-flight window: keep the codec workers busy without
@@ -669,7 +673,7 @@ class ChunkPipeline:
                 if next_up < len(chunk_ranges):  # refill before blocking
                     pending.append(pool.submit(enc, *chunk_ranges[next_up]))
                     next_up += 1
-                (payload, raw_n, raw_crc, stored_crc, cid), dt = fut.result()
+                (payload, raw_n, raw_crc, stored_crc, cid, cstats), dt = fut.result()
                 stats.encode_s += dt
                 t0 = time.perf_counter()
                 f.append_chunk(
@@ -679,6 +683,7 @@ class ChunkPipeline:
                     raw_crc32=raw_crc,
                     stored_crc32=stored_crc,
                     codec_id=cid,
+                    stats=cstats,
                 )
                 stats.write_s += time.perf_counter() - t0
                 stats.n_syscalls += 1
@@ -708,6 +713,7 @@ class ChunkPipeline:
                 raw_crc32=crc,
                 stored_crc32=crc,
                 codec_id=CODEC_NONE,
+                stats=compute_chunk_stats(chunk, crc),
             )
             reqs.append(WriteRequest(rec.offset, chunk))
             recs.append(rec)

@@ -257,3 +257,28 @@ def encode_chunk(codec: Codec, arr: np.ndarray) -> tuple[Any, int, int, int, int
         return raw, raw_nbytes, raw_crc, raw_crc, CODEC_NONE
     stored_crc = zlib.crc32(blob) & 0xFFFFFFFF
     return blob, raw_nbytes, raw_crc, stored_crc, codec.codec_id
+
+
+def encode_chunk_with_stats(
+    codec: Codec, arr: np.ndarray
+) -> tuple[Any, int, int, int, int, Any]:
+    """:func:`encode_chunk` plus the chunk-statistics summary for the
+    predicate-pushdown index (``query.ChunkStats``, or ``None`` when the
+    dtype has no usable ordering).
+
+    For a lossy codec the summary is computed on the **decoded** payload —
+    the values a reader will actually see — so the stored min/max genuinely
+    bracket every decodable value and pruning on them is sound.  The
+    incompressible fallback stores raw bytes (``codec_id == 0``), which is
+    lossless, so source values are summarised in that case.
+    """
+    from .query import compute_chunk_stats  # local: keep codecs import-light
+
+    payload, raw_nbytes, raw_crc, stored_crc, cid = encode_chunk(codec, arr)
+    src = arr
+    roundtrip = codec_by_id(cid)
+    if not roundtrip.lossless:
+        a = np.ascontiguousarray(arr)
+        src = roundtrip.decode(payload, a.dtype, a.size).reshape(a.shape)
+    stats = compute_chunk_stats(src, raw_crc)
+    return payload, raw_nbytes, raw_crc, stored_crc, cid, stats

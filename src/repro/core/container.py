@@ -67,6 +67,15 @@ import numpy as np
 from . import codecs as _codecs
 from .codecs import get_codec
 from .hyperslab import SlabPlan, align_up
+from .query import (
+    MATCH_NONE,
+    ChunkStats,
+    Predicate,
+    QueryResult,
+    evaluate_mask,
+    evaluate_stats,
+    max_column,
+)
 
 IOV_MAX = 1024  # conservative portable IOV_MAX (per preadv/pwritev call)
 
@@ -235,8 +244,11 @@ class ChunkRecord:
     """One chunk-index entry of a chunked dataset (format v2).
 
     Serialised compactly as the 6-tuple
-    ``[offset, nbytes, raw_nbytes, raw_crc32, stored_crc32, codec_id]`` —
-    byte layout and semantics are specified in ``docs/FORMAT.md``.
+    ``[offset, nbytes, raw_nbytes, raw_crc32, stored_crc32, codec_id]``,
+    optionally extended by a 7th element — the chunk-statistics summary for
+    predicate pushdown (``query.ChunkStats``; absent on files written
+    before the stats index existed).  Byte layout and semantics are
+    specified in ``docs/FORMAT.md``.
     """
 
     offset: int  # absolute file offset of the stored (post-filter) payload
@@ -245,9 +257,10 @@ class ChunkRecord:
     raw_crc32: int  # CRC32 of the pre-filter bytes (verified for lossless codecs)
     stored_crc32: int  # CRC32 of the stored payload (verified for every codec)
     codec_id: int  # per-chunk: encoders fall back to 0 on incompressible data
+    stats: ChunkStats | None = None  # optional pushdown summary (advisory, validated on use)
 
-    def to_json(self) -> list[int]:
-        return [
+    def to_json(self) -> list:
+        doc: list = [
             self.offset,
             self.nbytes,
             self.raw_nbytes,
@@ -255,10 +268,21 @@ class ChunkRecord:
             self.stored_crc32,
             self.codec_id,
         ]
+        if self.stats is not None:  # stats-less records stay byte-identical to v2.0
+            doc.append(self.stats.to_json())
+        return doc
 
     @staticmethod
-    def from_json(v: Sequence[int]) -> "ChunkRecord":
-        return ChunkRecord(*(int(x) for x in v))
+    def from_json(v: Sequence) -> "ChunkRecord":
+        """Version-tolerant decode: 6-element (pre-stats) and 7-element
+        forms both load; elements past the 7th are ignored so still-newer
+        writers stay readable.  A malformed stats element is kept as an
+        invalid :class:`~repro.core.query.ChunkStats` (rejected by
+        ``valid_for``) so query planners can name the offending chunk."""
+        rec = ChunkRecord(*(int(x) for x in v[:6]))
+        if len(v) > 6 and v[6] is not None:
+            rec.stats = ChunkStats.from_json(v[6])
+        return rec
 
 
 @dataclass
@@ -953,6 +977,7 @@ class TH5File:
         raw_crc32: int,
         stored_crc32: int,
         codec_id: int,
+        stats: ChunkStats | None = None,
     ) -> ChunkRecord:
         """Allocate + record the next chunk extent WITHOUT writing the
         payload — the overlapped pipeline (``aggregation.ChunkPipeline``)
@@ -969,6 +994,7 @@ class TH5File:
             raw_crc32=int(raw_crc32),
             stored_crc32=int(stored_crc32),
             codec_id=int(codec_id),
+            stats=stats,
         )
         meta.chunks.append(rec)
         self._dirty = True
@@ -983,6 +1009,7 @@ class TH5File:
         raw_crc32: int,
         stored_crc32: int,
         codec_id: int,
+        stats: ChunkStats | None = None,
     ) -> ChunkRecord:
         """Write the next chunk's stored payload (``payload`` must be bytes
         or a flat byte view) and record it in the chunk index."""
@@ -995,6 +1022,7 @@ class TH5File:
             raw_crc32=raw_crc32,
             stored_crc32=stored_crc32,
             codec_id=codec_id,
+            stats=stats,
         )
         pwrite_full(self._fd, payload, rec.offset)
         self.publish_chunk(meta, rec)
@@ -1095,7 +1123,9 @@ class TH5File:
         total = 0
         for ci in range(len(meta.chunks), meta.n_chunks_expected):
             lo, hi = meta.chunk_row_range(ci)
-            payload, raw_n, raw_crc, stored_crc, cid = _codecs.encode_chunk(codec, arr[lo:hi])
+            payload, raw_n, raw_crc, stored_crc, cid, stats = _codecs.encode_chunk_with_stats(
+                codec, arr[lo:hi]
+            )
             self.append_chunk(
                 meta,
                 payload,
@@ -1103,6 +1133,7 @@ class TH5File:
                 raw_crc32=raw_crc,
                 stored_crc32=stored_crc,
                 codec_id=cid,
+                stats=stats,
             )
             total += raw_n
         return total
@@ -1207,6 +1238,114 @@ class TH5File:
         copies, like the contiguous path)."""
         return self._decode_pipeline().gather_rows(
             name, meta, row_start, n_rows, out, verify=verify
+        )
+
+    def query(
+        self,
+        name: str,
+        predicate: Predicate,
+        *,
+        row_start: int = 0,
+        n_rows: int | None = None,
+        verify: bool = False,
+    ) -> QueryResult:
+        """Predicate-pushdown query: matching rows + selection mask over the
+        window ``[row_start, row_start + n_rows)``.
+
+        The planner intersects ``predicate`` against each intersecting
+        chunk's stats summary and decodes **only** chunks the stats cannot
+        rule out (via the shared :class:`DecodePipeline` / chunk cache).  A
+        chunk is pruned only on a :data:`~repro.core.query.MATCH_NONE`
+        proof from a record that passed
+        :meth:`~repro.core.query.ChunkStats.valid_for`; absent, corrupt, or
+        inconsistent stats degrade that chunk to decode-and-filter (the
+        offending chunks are named in ``QueryResult.invalid_stats``).
+        Results are bit-identical to ``read()[row_start:end][mask]`` where
+        ``mask`` is the brute-force numpy evaluation of the predicate."""
+        meta = self.meta(name)
+        n_total = meta.n_rows
+        if n_rows is None:
+            n_rows = n_total - row_start
+        if row_start < 0 or n_rows < 0 or row_start + n_rows > n_total:
+            raise TH5Error("row range out of bounds")
+        row_shape = tuple(meta.shape[1:])
+        n_cols = 1
+        for d in row_shape:
+            n_cols *= int(d)
+        if max_column(predicate) >= n_cols:
+            raise TH5Error(
+                f"predicate column {max_column(predicate)} out of range "
+                f"(dataset has {n_cols} columns per row)"
+            )
+        native = meta.np_dtype.newbyteorder("=")
+        row_end = row_start + n_rows
+        empty_rows = np.empty((0,) + row_shape, dtype=native)
+
+        if not meta.is_chunked:
+            # contiguous layout: no stats index, no pruning — one window
+            # read, exact filter
+            mask = np.zeros(n_rows, dtype=bool)
+            if n_rows:
+                window = self.read_rows(name, row_start, n_rows, verify=verify)
+                mask = evaluate_mask(predicate, window.reshape(n_rows, -1))
+                rows = np.ascontiguousarray(window[mask])
+            else:
+                rows = empty_rows
+            index = row_start + np.flatnonzero(mask).astype(np.int64)
+            return QueryResult(
+                rows=rows, index=index, mask=mask, row_start=row_start,
+                n_chunks=0, chunks_pruned=0, chunks_decoded=0,
+            )
+
+        mask = np.zeros(n_rows, dtype=bool)
+        pruned = 0
+        invalid: list[int] = []
+        survivors: list[int] = []
+        if n_rows:
+            c0 = row_start // meta.chunk_rows
+            c1 = (row_end - 1) // meta.chunk_rows + 1
+        else:
+            c0 = c1 = 0
+        for ci in range(c0, c1):
+            if ci >= len(meta.chunks or ()):
+                raise CorruptFileError(f"chunk {ci} of {name} missing (incomplete write)")
+            rec = meta.chunks[ci]
+            trusted = None
+            if rec.stats is not None:
+                lo, hi = meta.chunk_row_range(ci)
+                if rec.stats.valid_for(hi - lo, n_cols, rec.raw_crc32):
+                    trusted = rec.stats
+                else:
+                    invalid.append(ci)  # degrade-to-filter, but say which chunk
+            if trusted is not None and evaluate_stats(predicate, trusted) == MATCH_NONE:
+                pruned += 1  # proof: no row in ci can match — never fetched
+                continue
+            survivors.append(ci)
+        decoded = (
+            self._decode_pipeline().decode_chunks(name, meta, survivors, verify=verify)
+            if survivors
+            else {}
+        )
+        parts: list[np.ndarray] = []
+        for ci in survivors:
+            lo, hi = meta.chunk_row_range(ci)
+            a, b = max(lo, row_start), min(hi, row_end)
+            chunk_rows = decoded[ci][a - lo : b - lo]
+            m = evaluate_mask(predicate, chunk_rows.reshape(b - a, -1))
+            mask[a - row_start : b - row_start] = m
+            if m.any():
+                parts.append(np.ascontiguousarray(chunk_rows[m], dtype=native))
+        rows = np.concatenate(parts, axis=0) if parts else empty_rows
+        index = row_start + np.flatnonzero(mask).astype(np.int64)
+        return QueryResult(
+            rows=rows,
+            index=index,
+            mask=mask,
+            row_start=row_start,
+            n_chunks=c1 - c0,
+            chunks_pruned=pruned,
+            chunks_decoded=len(survivors),
+            invalid_stats=tuple(invalid),
         )
 
     def read(self, name: str, verify: bool = False) -> np.ndarray:

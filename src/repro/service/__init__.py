@@ -10,8 +10,10 @@ functionality", served HSDS-style from a broker that owns the file):
                        pool per file, bounded admission queue, fair
                        round-robin scheduling, worker pool
 requests               :class:`HyperslabQuery`, :class:`WindowQuery`,
-                       :class:`CatalogQuery`, :class:`PingQuery`,
-                       :class:`SteeringRequest` → :class:`ServiceResponse`
+                       :class:`QueryRequest` (predicate pushdown over the
+                       chunk-statistics index), :class:`CatalogQuery`,
+                       :class:`PingQuery`, :class:`SteeringRequest`
+                       → :class:`ServiceResponse`
 :class:`LodWindowSession`  per-client stateful sliding-window playback over
                        the shared cache (double-buffered through the queue)
 :class:`SnapshotCatalog`   steps / leaves / codec stats without decoding
@@ -43,6 +45,7 @@ from .requests import (
     HyperslabQuery,
     PingQuery,
     PushedChunk,
+    QueryRequest,
     RetryableError,
     ServiceResponse,
     StatsQuery,
@@ -75,6 +78,7 @@ __all__ = [
     "HyperslabQuery",
     "PingQuery",
     "PushedChunk",
+    "QueryRequest",
     "RemoteSubscription",
     "ServiceResponse",
     "SteeringRequest",

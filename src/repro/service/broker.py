@@ -53,11 +53,14 @@ from repro.core.container import CorruptFileError, TH5Error, TH5File
 from repro.core.aggregation import AggregationConfig
 
 from .catalog import build_catalog
+from repro.core.query import QueryResult
+
 from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
     PushedChunk,
+    QueryRequest,
     RetryableError,
     ServiceResponse,
     StatsQuery,
@@ -657,6 +660,9 @@ class DataService:
         self._completed = 0
         self._failed = 0
         self._bytes_served = 0
+        # predicate-pushdown accounting (QueryRequest skip-scans)
+        self._chunks_scanned = 0
+        self._chunks_pruned = 0
         self._by_type: dict[str, int] = {}
         self._latency = LatencyRecorder()
         self._client_latency: dict[str, LatencyRecorder] = {}
@@ -1020,6 +1026,9 @@ class DataService:
             cs.bytes_served += resp.nbytes
             cs.chunk_hits += resp.chunk_hits
             cs.chunk_misses += resp.chunk_misses
+            if isinstance(resp.value, QueryResult):
+                self._chunks_scanned += resp.value.n_chunks
+                self._chunks_pruned += resp.value.chunks_pruned
         # token-bucket debit, post-facto (payload size is unknown until the
         # read completes); min cost 1 so zero-byte requests still meter
         sched = self._sched.get(job.client)
@@ -1064,6 +1073,22 @@ class DataService:
             if req.rows:
                 hits, misses = self._chunk_probe(req.dataset, req.rows, None)
             value = f.read_row_indices(req.dataset, list(req.rows))
+        elif isinstance(req, QueryRequest):
+            # skip-scan: the planner prunes chunks on stats proofs before
+            # decode — cache attribution probes the intersecting window up
+            # front (advisory, like HyperslabQuery; pruned chunks are
+            # neither fetched nor decoded regardless of cache state)
+            n_total = f.meta(req.dataset).n_rows
+            end = n_total if req.n_rows is None else req.row_start + req.n_rows
+            if end > req.row_start:
+                hits, misses = self._chunk_probe(req.dataset, None, (req.row_start, end))
+            value = f.query(
+                req.dataset,
+                req.predicate,
+                row_start=req.row_start,
+                n_rows=req.n_rows,
+                verify=req.verify,
+            )
         elif isinstance(req, CatalogQuery):
             value = build_catalog(f, req.prefix)
         elif isinstance(req, PingQuery):
@@ -1148,6 +1173,11 @@ class DataService:
                 completed=self._completed,
                 failed=self._failed,
                 bytes_served=self._bytes_served,
+                chunks_scanned=self._chunks_scanned,
+                chunks_pruned=self._chunks_pruned,
+                pruned_ratio=(
+                    self._chunks_pruned / self._chunks_scanned if self._chunks_scanned else 0.0
+                ),
                 subscribers=self._n_subs,
                 pushed_chunks=self._pushed_chunks,
                 pushed_bytes=self._pushed_bytes,

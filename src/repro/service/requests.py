@@ -21,6 +21,7 @@ from typing import Any, Mapping
 import numpy as np
 
 from repro.core.container import TH5Error
+from repro.core.query import Predicate, QueryResult
 
 
 class RetryableError(TH5Error):
@@ -204,8 +205,45 @@ class PushedChunk:
     dropped: int
 
 
+@dataclass(frozen=True)
+class QueryRequest:
+    """Predicate-pushdown query: matching rows + selection mask.
+
+    ``predicate`` is a :data:`repro.core.query.Predicate` tree built with
+    :func:`repro.core.query.col` — comparisons of a (optionally
+    ``abs()``-wrapped) column against a constant, combined with ``&`` /
+    ``|`` / ``~`` (grammar in ``docs/SERVICE.md``).  The broker plans it
+    against the per-chunk statistics index: chunks whose stats *prove* no
+    row can match are skipped before decode (counted in
+    ``ServiceStats.chunks_pruned`` / ``pruned_ratio``); everything else
+    decodes through the shared pipeline and is row-filtered exactly.  The
+    answer is a :class:`repro.core.query.QueryResult` — bit-identical to
+    filtering a full window read with the same predicate.  Idempotent:
+    reconnect logic replays it transparently like any other read.
+    """
+
+    dataset: str
+    predicate: Any  # repro.core.query.Predicate (frozen + hashable)
+    row_start: int = 0
+    n_rows: int | None = None  # None = to the end of the dataset
+    verify: bool = False
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.predicate, Predicate):
+            raise ValueError(
+                f"predicate must be a repro.core.query predicate tree, "
+                f"not {type(self.predicate).__name__}"
+            )
+
+
 Request = (
-    HyperslabQuery | WindowQuery | CatalogQuery | PingQuery | StatsQuery | SteeringRequest
+    HyperslabQuery
+    | WindowQuery
+    | QueryRequest
+    | CatalogQuery
+    | PingQuery
+    | StatsQuery
+    | SteeringRequest
 )
 
 
@@ -240,4 +278,6 @@ def response_nbytes(value: Any) -> int:
     """Logical payload size of a response (throughput accounting)."""
     if isinstance(value, np.ndarray):
         return int(value.nbytes)
+    if isinstance(value, QueryResult):
+        return value.nbytes  # matching rows + the selection mask
     return 0

@@ -117,6 +117,13 @@ class ServiceStats:
     ``rate_bytes_per_s``, ``clients``, ``requests``, ``bytes_served``,
     ``throttled``); ``clients`` the per-client attribution
     (:class:`ClientStats`).
+
+    ``chunks_scanned`` / ``chunks_pruned`` are the predicate-pushdown
+    planner's totals across every :class:`~repro.service.requests.
+    QueryRequest` served: chunks whose stats were consulted vs chunks
+    skipped on a stats proof (never fetched or decoded); ``pruned_ratio``
+    is their running quotient — the fraction of consulted chunks the
+    statistics index eliminated.
     """
 
     queue_depth: int = 0
@@ -131,6 +138,9 @@ class ServiceStats:
     pushed_chunks: int = 0
     pushed_bytes: int = 0
     dropped_chunks: int = 0
+    chunks_scanned: int = 0
+    chunks_pruned: int = 0
+    pruned_ratio: float = 0.0
     requests_by_type: dict[str, int] = field(default_factory=dict)
     p50_ms: float = 0.0
     p99_ms: float = 0.0

@@ -48,10 +48,13 @@ import numpy as np
 from repro.core.container import CorruptFileError, TH5Error
 
 from .catalog import DatasetInfo, SnapshotCatalog
+from repro.core.query import QueryResult, pred_from_json
+
 from .requests import (
     CatalogQuery,
     HyperslabQuery,
     PingQuery,
+    QueryRequest,
     RetryableError,
     ServiceResponse,
     StatsQuery,
@@ -227,6 +230,14 @@ def encode_request(client: str, req) -> tuple[dict, Any]:
     elif isinstance(req, WindowQuery):
         meta.update(dataset=req.dataset)
         payload = np.asarray(req.rows, dtype="<i8")
+    elif isinstance(req, QueryRequest):
+        meta.update(
+            dataset=req.dataset,
+            row_start=int(req.row_start),
+            n_rows=int(req.n_rows) if req.n_rows is not None else None,
+            verify=bool(req.verify),
+            predicate=req.predicate.to_json(),
+        )
     elif isinstance(req, CatalogQuery):
         meta.update(prefix=req.prefix)
     elif isinstance(req, PingQuery):
@@ -271,6 +282,19 @@ def decode_request(meta: dict, payload: memoryview) -> tuple[str, Any]:
     if rtype == "WindowQuery":
         rows = tuple(np.frombuffer(payload, dtype="<i8").tolist())
         return client, WindowQuery(dataset=meta["dataset"], rows=rows)
+    if rtype == "QueryRequest":
+        try:
+            pred = pred_from_json(meta["predicate"])
+        except (KeyError, ValueError) as e:
+            raise WireError(f"bad query predicate on the wire: {e}") from None
+        n_rows = meta.get("n_rows")
+        return client, QueryRequest(
+            dataset=meta["dataset"],
+            predicate=pred,
+            row_start=int(meta.get("row_start", 0)),
+            n_rows=int(n_rows) if n_rows is not None else None,
+            verify=bool(meta.get("verify", False)),
+        )
     if rtype == "CatalogQuery":
         return client, CatalogQuery(prefix=meta.get("prefix", "/simulation"))
     if rtype == "PingQuery":
@@ -311,6 +335,24 @@ def encode_value(value) -> tuple[dict, Any]:
     if isinstance(value, np.ndarray):
         arr = np.ascontiguousarray(value)
         return {"kind": "ndarray", "dtype": arr.dtype.str, "shape": list(arr.shape)}, arr
+    if isinstance(value, QueryResult):
+        # one payload plane: the matching rows' bytes, then the selection
+        # mask packed 8-rows-per-byte (big-endian bit order, numpy default);
+        # the match index is derived from the mask on decode, not shipped
+        rows = np.ascontiguousarray(value.rows)
+        packed = np.packbits(value.mask) if value.mask.size else np.empty(0, np.uint8)
+        desc = {
+            "kind": "query",
+            "dtype": rows.dtype.str,
+            "rows_shape": list(rows.shape),
+            "mask_n": int(value.mask.size),
+            "row_start": int(value.row_start),
+            "n_chunks": int(value.n_chunks),
+            "chunks_pruned": int(value.chunks_pruned),
+            "chunks_decoded": int(value.chunks_decoded),
+            "invalid_stats": [int(ci) for ci in value.invalid_stats],
+        }
+        return desc, rows.tobytes() + packed.tobytes()
     if isinstance(value, SnapshotCatalog):
         return {"kind": "catalog", "catalog": _catalog_to_json(value)}, None
     if isinstance(value, SteeringResult):
@@ -329,6 +371,30 @@ def decode_value(desc: dict, payload: memoryview):
         # array is writable and shares that buffer (zero further copies)
         return np.frombuffer(payload, dtype=np.dtype(desc["dtype"])).reshape(
             desc["shape"]
+        )
+    if kind == "query":
+        dt = np.dtype(desc["dtype"])
+        rows_shape = tuple(int(d) for d in desc["rows_shape"])
+        rows_nbytes = dt.itemsize
+        for d in rows_shape:
+            rows_nbytes *= d
+        rows = np.frombuffer(payload[:rows_nbytes], dtype=dt).reshape(rows_shape)
+        mask_n = int(desc["mask_n"])
+        if mask_n:
+            packed = np.frombuffer(payload[rows_nbytes:], dtype=np.uint8)
+            mask = np.unpackbits(packed, count=mask_n).astype(bool)
+        else:
+            mask = np.zeros(0, dtype=bool)
+        row_start = int(desc["row_start"])
+        return QueryResult(
+            rows=rows,
+            index=row_start + np.flatnonzero(mask).astype(np.int64),
+            mask=mask,
+            row_start=row_start,
+            n_chunks=int(desc["n_chunks"]),
+            chunks_pruned=int(desc["chunks_pruned"]),
+            chunks_decoded=int(desc["chunks_decoded"]),
+            invalid_stats=tuple(int(ci) for ci in desc.get("invalid_stats", ())),
         )
     if kind == "catalog":
         return _catalog_from_json(desc["catalog"])

@@ -193,3 +193,104 @@ def test_readonly_mode(path):
     with TH5File.open(path, "r") as f:
         with pytest.raises(TH5Error):
             f.create_group("/g")
+
+
+# -- chunk-record JSON codec & format-version tolerance ------------------------
+
+
+def test_chunk_record_json_roundtrip_without_stats():
+    """The legacy 6-tuple form stays byte-identical: a record with no stats
+    encodes to exactly 6 elements (older readers keep parsing it)."""
+    from repro.core.container import ChunkRecord
+
+    rec = ChunkRecord(4096, 512, 2048, 0xDEAD, 0xBEEF, 2)
+    doc = rec.to_json()
+    assert len(doc) == 6 and all(isinstance(x, int) for x in doc)
+    back = ChunkRecord.from_json(doc)
+    assert (back.offset, back.nbytes, back.raw_nbytes, back.raw_crc32,
+            back.stored_crc32, back.codec_id) == (4096, 512, 2048, 0xDEAD, 0xBEEF, 2)
+    assert back.stats is None
+
+
+def test_chunk_record_json_roundtrip_with_stats():
+    """The stats-bearing 7-element form round-trips, and a real record's
+    stats stay valid for its own chunk after the trip."""
+    import numpy as np
+
+    from repro.core.container import ChunkRecord
+    from repro.core.query import compute_chunk_stats
+
+    chunk = np.arange(64, dtype="<f4").reshape(16, 4)
+    stats = compute_chunk_stats(chunk, raw_crc32=0x1234)
+    rec = ChunkRecord(0, 10, 256, 0x1234, 0x5678, 1, stats=stats)
+    doc = rec.to_json()
+    assert len(doc) == 7
+    back = ChunkRecord.from_json(doc)
+    assert back.stats is not None
+    assert back.stats.valid_for(16, 4, 0x1234)
+    assert back.stats.mins == stats.mins and back.stats.maxs == stats.maxs
+    assert back.stats.nan_counts == stats.nan_counts
+    assert back.stats.finite_counts == stats.finite_counts
+
+
+def test_chunk_record_decode_is_version_tolerant():
+    """Future index writers may append trailing elements or write odd stats
+    blobs: decode must take the 6 known fields, treat a null stats slot as
+    absent, and turn unparseable stats into a distrusted record instead of
+    failing the open."""
+    from repro.core.container import ChunkRecord
+
+    base = [0, 10, 256, 1, 2, 0]
+    assert ChunkRecord.from_json(base + [None]).stats is None
+    extra = ChunkRecord.from_json(base + [None, "future-field", 42])
+    assert extra.offset == 0 and extra.stats is None
+    garbled = ChunkRecord.from_json(base + [{"not": "a stats record"}])
+    assert garbled.stats is not None  # parsed leniently...
+    assert not garbled.stats.valid_for(16, 4, 1)  # ...but never trusted
+
+
+def test_index_without_stats_still_opens_and_reads(path):
+    """A committed file whose chunk records carry no stats (an older
+    writer) reopens cleanly and reads bit-identically."""
+    import numpy as np
+
+    from repro.core.aggregation import ChunkPipeline
+
+    data = np.arange(256, dtype="<f4").reshape(64, 4)
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/d", data.shape, "<f4", 16, "zlib")
+        ChunkPipeline(f).write(meta, data)
+        f.commit()
+    with TH5File.open(path, "r+") as f:
+        for rec in f.meta("/d").chunks:
+            assert rec.stats is not None  # the pipeline recorded stats
+            rec.stats = None
+        f._dirty = True
+        f.commit()
+    with TH5File.open(path) as f:
+        assert all(r.stats is None for r in f.meta("/d").chunks)
+        np.testing.assert_array_equal(f.read("/d"), data)
+
+
+def test_stats_survive_commit_and_reopen(path):
+    """Stats written by the pipeline persist through the CRC'd index and
+    still validate against their chunks after reopen."""
+    import numpy as np
+
+    from repro.core.aggregation import ChunkPipeline
+
+    rng = np.random.default_rng(11)
+    data = rng.normal(size=(96, 6)).astype("<f4")
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset("/d", data.shape, "<f4", 32, "zlib")
+        ChunkPipeline(f).write(meta, data)
+        f.commit()
+    with TH5File.open(path) as f:
+        for ci, rec in enumerate(f.meta("/d").chunks):
+            assert rec.stats is not None
+            assert rec.stats.valid_for(32, 6, rec.raw_crc32)
+            lo, hi = ci * 32, (ci + 1) * 32
+            g0 = rec.stats.group_of(0)
+            block = data[lo:hi].reshape(32, 6)
+            assert rec.stats.mins[g0] <= block[:, 0].min()
+            assert rec.stats.maxs[g0] >= block[:, 0].max()

@@ -261,3 +261,134 @@ def test_decode_pipeline_standalone_on_missing_chunks(tmp_path):
             out = np.empty((8, 4), np.float32)
             assert pipe.gather_rows("/d", meta, 0, 8, out) == out.nbytes
             np.testing.assert_array_equal(out, np.zeros((8, 4), np.float32))
+
+
+# -- lying / corrupt / stale chunk statistics (predicate pushdown) -------------
+#
+# Stats are advisory: the planner may prune a chunk only on a validated
+# proof.  Any record that fails validation — structural garbage, a stale
+# crc echo, internally inconsistent bounds — must degrade that chunk to
+# decode-and-filter, name it in ``QueryResult.invalid_stats``, and never
+# change the rows returned.
+
+
+def _query_with_oracle(f, pred, n=128):
+    from repro.core.query import evaluate_mask
+
+    res = f.query("/d", pred)
+    full = f.read("/d")
+    want = evaluate_mask(pred, full.reshape(n, -1))
+    assert np.array_equal(res.mask, want)
+    assert res.rows.tobytes() == np.ascontiguousarray(full[want]).tobytes()
+    return res
+
+
+def _stats_victim(tmp_path, name):
+    rng = np.random.default_rng(17)
+    data = rng.normal(size=(128, 8)).astype("<f4")
+    path = str(tmp_path / f"{name}.th5")
+    _write_chunked(path, data, 32, "zlib")
+    return path
+
+
+def test_corrupt_stats_record_degrades_to_full_filter(tmp_path):
+    """Structurally-garbage stats persisted in the index: the chunk is
+    decoded anyway, named in invalid_stats, and rows are unchanged."""
+    from repro.core.query import ChunkStats, col
+
+    path = _stats_victim(tmp_path, "corrupt_stats")
+    with TH5File.open(path, mode="r+") as f:
+        f.meta("/d").chunks[1].stats = ChunkStats.from_json({"not": "stats"})
+        f._dirty = True
+        f.commit()
+    with TH5File.open(path) as f:
+        res = _query_with_oracle(f, col(0) > 1e9)
+        assert res.invalid_stats == (1,)
+        assert res.chunks_decoded == 1 and res.chunks_pruned == 3
+        assert res.n_matches == 0
+
+
+def test_stale_generation_stats_detected_by_crc_echo(tmp_path):
+    """Index-surgery / stale-generation fault: chunk 0 carries chunk 3's
+    stats record.  The crc echo no longer matches chunk 0's raw CRC, so
+    the record is distrusted — even though it is internally consistent."""
+    from repro.core.query import col
+
+    path = _stats_victim(tmp_path, "stale_stats")
+    with TH5File.open(path, mode="r+") as f:
+        chunks = f.meta("/d").chunks
+        assert chunks[3].stats is not None
+        chunks[0].stats = chunks[3].stats
+        f._dirty = True
+        f.commit()
+    with TH5File.open(path) as f:
+        rec = f.meta("/d").chunks[0]
+        assert not rec.stats.valid_for(32, 8, rec.raw_crc32)
+        res = _query_with_oracle(f, col(2) > 1e9)
+        assert res.invalid_stats == (0,)
+        assert res.chunks_decoded == 1 and res.chunks_pruned == 3
+
+
+@pytest.mark.parametrize(
+    "lie",
+    [
+        "min_above_max",  # lo > hi
+        "counts_exceed_chunk",  # nan+finite > chunk size
+        "wrong_n_cols",  # claims a different row width
+        "nan_bound",  # NaN smuggled into a bound
+    ],
+)
+def test_adversarially_lying_stats_never_skip_matches(tmp_path, lie):
+    """Internally-inconsistent stats records — every detectable category of
+    lie — must fail validation and fall back to decode-and-filter, so a
+    lying record can never make the planner skip a matching chunk."""
+    from repro.core.query import ChunkStats, col
+
+    path = _stats_victim(tmp_path, f"lie_{lie}")
+    with TH5File.open(path, mode="r+") as f:
+        rec = f.meta("/d").chunks[2]
+        g = len(rec.stats.mins)
+        fields = dict(
+            crc_echo=rec.raw_crc32, n_cols=8,
+            mins=(-1.0,) * g, maxs=(1.0,) * g,
+            nan_counts=(0,) * g, finite_counts=(32 * 8 // g,) * g,
+        )
+        if lie == "min_above_max":
+            fields["mins"] = (2.0,) * g
+        elif lie == "counts_exceed_chunk":
+            fields["nan_counts"] = (10**6,) * g
+        elif lie == "wrong_n_cols":
+            fields["n_cols"] = 4
+        elif lie == "nan_bound":
+            fields["maxs"] = (float("nan"),) * g
+        rec.stats = ChunkStats(**fields)
+        assert not rec.stats.valid_for(32, 8, rec.raw_crc32)
+        f._dirty = True
+        f.commit()
+    with TH5File.open(path) as f:
+        # a predicate the lying bounds would have pruned
+        res = _query_with_oracle(f, col(0) > 1e9)
+        assert 2 in res.invalid_stats
+        assert res.chunks_decoded >= 1 and res.n_matches == 0
+        # and a broad predicate: every true match still comes back
+        res = _query_with_oracle(f, col(0) > -1e9)
+        assert res.n_matches == 128
+
+
+def test_stats_stripped_index_still_queries(tmp_path):
+    """A v2 index written without stats records (older writer) stays fully
+    readable: query degrades to decode-everything with empty invalid_stats
+    — absence of stats is not a fault."""
+    from repro.core.query import col
+
+    path = _stats_victim(tmp_path, "no_stats")
+    with TH5File.open(path, mode="r+") as f:
+        for rec in f.meta("/d").chunks:
+            rec.stats = None
+        f._dirty = True
+        f.commit()
+    with TH5File.open(path) as f:
+        assert all(rec.stats is None for rec in f.meta("/d").chunks)
+        res = _query_with_oracle(f, col(0) > 1e9)
+        assert res.invalid_stats == ()
+        assert res.chunks_pruned == 0 and res.chunks_decoded == 4

@@ -503,3 +503,64 @@ def test_batched_fetch_identical_and_fewer_syscalls(run_file):
     # ~one syscall per in-flight window (8 chunks) vs one per chunk
     assert counts[True] <= -(-(ROWS // CHUNK_ROWS) // 8) + 1
     assert counts[False] == ROWS // CHUNK_ROWS
+
+
+# -- predicate pushdown through the broker -------------------------------------
+
+
+def test_query_through_broker_matches_direct_and_counts_pruning(run_file):
+    """A QueryRequest through DataService returns exactly what a direct
+    TH5File.query returns, and ServiceStats exposes the pruning economics
+    (chunks_scanned / chunks_pruned / pruned_ratio)."""
+    from repro.core.query import col
+    from repro.service import QueryRequest
+
+    path, u, flat = run_file
+    pred = (abs(col(0)) > 0.45) & (col(3) <= 0.9)
+    with TH5File.open(path) as f:
+        want = f.query(DS_U, pred, row_start=100, n_rows=800)
+    with DataService(path, ServiceConfig(n_workers=2)) as svc:
+        got = svc.submit("q1", QueryRequest(DS_U, pred, row_start=100, n_rows=800)).result().value
+        assert got.rows.tobytes() == want.rows.tobytes()
+        np.testing.assert_array_equal(got.mask, want.mask)
+        np.testing.assert_array_equal(got.index, want.index)
+        assert (got.n_chunks, got.chunks_pruned, got.chunks_decoded) == (
+            want.n_chunks, want.chunks_pruned, want.chunks_decoded)
+        # a hopeless predicate: every chunk pruned, visible in the stats
+        res = svc.submit("q1", QueryRequest(DS_U, col(0) > 1e9)).result().value
+        assert res.chunks_pruned == res.n_chunks == ROWS // CHUNK_ROWS
+        stats = svc.stats()
+        assert stats.chunks_scanned == want.n_chunks + res.n_chunks
+        assert stats.chunks_pruned == want.chunks_pruned + res.n_chunks
+        assert stats.pruned_ratio == stats.chunks_pruned / stats.chunks_scanned
+
+
+def test_remote_query_bit_identical_to_in_process(run_file):
+    """The same QueryRequest through the socket transport: rows, mask,
+    index and every counter identical to the in-process broker answer,
+    and the new ServiceStats fields survive the wire."""
+    import tempfile
+
+    from repro.core.query import col
+    from repro.service import QueryRequest, RemoteDataService, ServiceServer
+
+    path, u, flat = run_file
+    pred = (col(2) > 0.8) | ~(abs(col(5)) <= 0.99)
+    req = QueryRequest(DS_U, pred, row_start=64, n_rows=900)
+    with DataService(path, ServiceConfig(n_workers=2)) as svc:
+        want = svc.submit("loc", req).result().value
+        with tempfile.TemporaryDirectory(prefix="th5q", dir="/tmp") as d:
+            with ServiceServer(svc, os.path.join(d, "q.sock")) as server:
+                with RemoteDataService(server.address) as remote:
+                    got = remote.request("rem", req).value
+                    rstats = remote.request("rem", StatsQuery()).value
+    assert got.rows.tobytes() == want.rows.tobytes()
+    assert got.rows.dtype == want.rows.dtype and got.rows.shape == want.rows.shape
+    np.testing.assert_array_equal(got.mask, want.mask)
+    np.testing.assert_array_equal(got.index, want.index)
+    assert (got.row_start, got.n_chunks, got.chunks_pruned, got.chunks_decoded,
+            got.invalid_stats) == (want.row_start, want.n_chunks,
+                                   want.chunks_pruned, want.chunks_decoded,
+                                   want.invalid_stats)
+    assert rstats.chunks_scanned == 2 * want.n_chunks
+    assert rstats.chunks_pruned == 2 * want.chunks_pruned

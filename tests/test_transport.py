@@ -39,6 +39,8 @@ from repro.service import (
     WireDisconnect,
     WireError,
 )
+from repro.core.query import And, Cmp, Not, Or, QueryResult, col
+from repro.service import QueryRequest
 from repro.service import wire
 
 from tests._hyp import given, settings, st
@@ -135,6 +137,25 @@ def test_frame_roundtrip_property(kind, req_id, meta, payload):
             s.close()
 
 
+def _pred_strategy(depth=2):
+    leaf = st.builds(
+        Cmp,
+        column=st.integers(min_value=0, max_value=31),
+        absolute=st.booleans(),
+        op=st.sampled_from(["<", "<=", ">", ">=", "==", "!="]),
+        value=st.floats(min_value=-1e6, max_value=1e6, allow_nan=False),
+    )
+    if depth == 0:
+        return leaf
+    sub = _pred_strategy(depth - 1)
+    return st.one_of(
+        leaf,
+        st.builds(And, lhs=sub, rhs=sub),
+        st.builds(Or, lhs=sub, rhs=sub),
+        st.builds(Not, operand=sub),
+    )
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     req=st.one_of(
@@ -172,6 +193,14 @@ def test_frame_roundtrip_property(kind, req_id, meta, payload):
             policy=st.sampled_from(["lossless", "drop-oldest"]),
             max_pending=st.integers(1, 10**6),
             from_chunk=st.integers(0, 2**40),
+        ),
+        st.builds(
+            QueryRequest,
+            dataset=st.text(min_size=1, max_size=20),
+            predicate=_pred_strategy(),
+            row_start=st.integers(0, 10**6),
+            n_rows=st.one_of(st.none(), st.integers(0, 10**6)),
+            verify=st.booleans(),
         ),
     )
 )
@@ -374,6 +403,157 @@ def test_subscribe_codec_defaults_fill_missing_fields():
     assert client == "v"
     assert back == SubscribeRequest(dataset="/u")
     assert (back.policy, back.max_pending, back.from_chunk) == ("lossless", 64, 0)
+
+
+# -- predicate-pushdown query frames -------------------------------------------
+
+
+def test_query_request_codec_nan_and_inf_constants():
+    """NaN / ±inf predicate constants survive the wire (the meta JSON path
+    must not mangle them) — compared field-wise since NaN != NaN."""
+    import math
+
+    for const in (float("nan"), float("inf"), float("-inf")):
+        req = QueryRequest("/d", col(2) != const, row_start=7, n_rows=None)
+        meta, payload = wire.encode_request("q", req)
+        client, back = wire.decode_request(meta, memoryview(b""))
+        assert client == "q" and isinstance(back, QueryRequest)
+        assert (back.dataset, back.row_start, back.n_rows) == ("/d", 7, None)
+        assert back.predicate.op == "!=" and back.predicate.column == 2
+        if math.isnan(const):
+            assert math.isnan(back.predicate.value)
+        else:
+            assert back.predicate.value == const
+
+
+def test_query_request_codec_rejects_malformed_predicate():
+    req = QueryRequest("/d", col(0) > 1.0)
+    meta, _ = wire.encode_request("q", req)
+    meta["predicate"] = ["bogus-op", 0, 0, ">", 1.0]
+    with pytest.raises(WireError, match="predicate"):
+        wire.decode_request(meta, memoryview(b""))
+
+
+def _make_query_result(n=96, dtype="<f4", seed=5):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < 0.3
+    window = rng.normal(size=(n, 4)).astype(dtype)
+    return QueryResult(
+        rows=np.ascontiguousarray(window[mask]),
+        index=10 + np.flatnonzero(mask).astype(np.int64),
+        mask=mask,
+        row_start=10,
+        n_chunks=6,
+        chunks_pruned=4,
+        chunks_decoded=2,
+        invalid_stats=(1, 3),
+    )
+
+
+def test_query_value_codec_roundtrip_bit_identical():
+    res = _make_query_result()
+    desc, payload = wire.encode_value(res)  # payload is raw bytes for queries
+    back = wire.decode_value(desc, memoryview(bytearray(payload)))
+    assert isinstance(back, QueryResult)
+    assert back.rows.tobytes() == res.rows.tobytes()
+    assert back.rows.dtype == res.rows.dtype and back.rows.shape == res.rows.shape
+    np.testing.assert_array_equal(back.mask, res.mask)
+    np.testing.assert_array_equal(back.index, res.index)
+    assert (back.row_start, back.n_chunks, back.chunks_pruned, back.chunks_decoded) == (10, 6, 4, 2)
+    assert back.invalid_stats == (1, 3)
+    assert back.pruned_ratio == res.pruned_ratio
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=0, max_value=200),
+    dtype=st.sampled_from(["<f4", "<f8", "<i4"]),
+    seed=st.integers(0, 9),
+)
+def test_query_value_codec_roundtrip_property(n, dtype, seed):
+    """Mask bit-packing round-trips for every window length, including
+    lengths not divisible by 8 and the empty window."""
+    rng = np.random.default_rng(seed)
+    mask = rng.random(n) < 0.5
+    window = (rng.normal(size=(n, 3)) * 50).astype(dtype)
+    res = QueryResult(
+        rows=np.ascontiguousarray(window[mask]),
+        index=np.flatnonzero(mask).astype(np.int64),
+        mask=mask, row_start=0, n_chunks=0, chunks_pruned=0, chunks_decoded=0,
+    )
+    desc, payload = wire.encode_value(res)
+    back = wire.decode_value(desc, memoryview(bytearray(payload)))
+    assert back.mask.shape == (n,)
+    np.testing.assert_array_equal(back.mask, mask)
+    assert back.rows.tobytes() == res.rows.tobytes()
+    np.testing.assert_array_equal(back.index, res.index)
+
+
+def _captured_query_frame_bytes() -> bytes:
+    """On-wire bytes of one OK frame carrying a query result, captured from
+    the real encoder for the torn-stream cuts below."""
+    a, b = socket.socketpair()
+    try:
+        desc, payload = wire.encode_value(_make_query_result())
+        wire.send_frame(a, wire.KIND_OK, 23, {"value": desc}, payload)
+        a.close()
+        blob = b""
+        while True:
+            part = b.recv(1 << 16)
+            if not part:
+                return blob
+            blob += part
+    finally:
+        b.close()
+
+
+_QUERY_FRAME_BYTES = _captured_query_frame_bytes()
+
+
+def test_query_frame_roundtrip_over_socket():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(_QUERY_FRAME_BYTES)
+        a.close()
+        f = wire.recv_frame(b)
+        back = wire.decode_value(f.meta["value"], f.payload)
+        want = _make_query_result()
+        assert back.rows.tobytes() == want.rows.tobytes()
+        np.testing.assert_array_equal(back.mask, want.mask)
+    finally:
+        b.close()
+
+
+@settings(max_examples=60, deadline=None)
+@given(cut=st.integers(min_value=1, max_value=len(_QUERY_FRAME_BYTES) - 1))
+def test_torn_query_stream_any_cut_point_raises_wiredisconnect(cut):
+    """A peer dying at any byte of a query-result frame — mid-rows or
+    mid-packed-mask — must surface as WireDisconnect, never as a short
+    mask or truncated row block."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(_QUERY_FRAME_BYTES[:cut])
+        a.close()
+        with pytest.raises(WireDisconnect):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_torn_query_stream_boundary_cuts():
+    """Deterministic anchors: mid-header, header end, end of rows bytes
+    (start of the packed mask), and last byte."""
+    want = _make_query_result()
+    rows_end = len(_QUERY_FRAME_BYTES) - (len(want.mask) + 7) // 8
+    for cut in (1, wire.HEADER_SIZE, rows_end, len(_QUERY_FRAME_BYTES) - 1):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(_QUERY_FRAME_BYTES[:cut])
+            a.close()
+            with pytest.raises(WireDisconnect):
+                wire.recv_frame(b)
+        finally:
+            b.close()
 
 
 def test_bad_magic_and_oversized_frames_rejected():

@@ -51,6 +51,7 @@ SMOKE_COMMANDS = [
     ("benchmarks/service_load.py", ["--smoke", "--transport", "socket"]),
     ("benchmarks/recovery.py", ["--smoke"]),
     ("benchmarks/streaming.py", ["--smoke"]),
+    ("benchmarks/query.py", ["--smoke"]),
 ]
 FULL_COMMANDS = [
     ("benchmarks/io_bandwidth.py", []),
@@ -59,6 +60,7 @@ FULL_COMMANDS = [
     ("benchmarks/service_load.py", ["--transport", "socket"]),
     ("benchmarks/recovery.py", []),
     ("benchmarks/streaming.py", []),
+    ("benchmarks/query.py", []),
 ]
 
 
@@ -315,6 +317,49 @@ def build_checks() -> list[dict]:
                 kind="floor",
                 get=lambda d: _get(d, "stream", "fanout", -1, "writer_ratio"),
                 limit=0.2,
+            ),
+        ]
+    )
+    # -- predicate pushdown (the `query` section) --------------------------
+    checks.extend(
+        [
+            dict(
+                # the tentpole acceptance number, scale-free by design: at
+                # ~1% selectivity over a sorted key the stats-pruned query
+                # must beat the dense full scan by 3x in effective MB/s
+                name="query.speedup >= 3 (sparse query vs dense scan @1%)",
+                kind="floor",
+                get=lambda d: _get(d, "query", "speedup"),
+                limit=3.0,
+            ),
+            dict(
+                # with one chunk's worth of matches, pruning must discard
+                # (nearly) every other chunk — the index is doing its job
+                name="query.pruned_ratio >= 0.9",
+                kind="floor",
+                get=lambda d: _get(d, "query", "pruned_ratio"),
+                limit=0.9,
+            ),
+            dict(
+                # correctness economics: never a false prune — the dense
+                # (selectivity=1.0) case must decode every chunk and match
+                # every row
+                name="query.dense case prunes nothing, matches everything",
+                kind="invariant",
+                check=lambda d: (
+                    _get(d, "query", "cases") is None
+                    or all(
+                        c["chunks_pruned"] == 0 and c["matches"] == c["rows"]
+                        for c in _get(d, "query", "cases")
+                        if c["selectivity"] >= 1.0
+                    )
+                ),
+            ),
+            dict(
+                name="query.query_MBps (pushdown effective bandwidth)",
+                kind="baseline",
+                get=lambda d: _get(d, "query", "query_MBps"),
+                scale=lambda d: (_get(d, "query", "n_chunks"), _get(d, "query", "matches")),
             ),
         ]
     )

@@ -36,6 +36,7 @@ SERVICE_STATS = ROOT / "src" / "repro" / "service" / "stats.py"
 SERVICE_REQUESTS = ROOT / "src" / "repro" / "service" / "requests.py"
 SERVICE_WIRE = ROOT / "src" / "repro" / "service" / "wire.py"
 SERVICE_BROKER = ROOT / "src" / "repro" / "service" / "broker.py"
+QUERY = ROOT / "src" / "repro" / "core" / "query.py"
 SPEC = ROOT / "docs" / "FORMAT.md"
 ARCH = ROOT / "docs" / "ARCHITECTURE.md"
 SERVICE_DOC = ROOT / "docs" / "SERVICE.md"
@@ -86,6 +87,14 @@ def main() -> int:
         for fld in dataclass_fields(ctree, cls):
             if f"`{fld}`" not in spec:
                 missing.append(f"{cls} field `{fld}`")
+
+    # -- chunk statistics: the predicate-pushdown contract ------------------
+    if "## Chunk statistics record" not in spec:
+        missing.append('FORMAT.md: "## Chunk statistics record" section')
+    qtree = ast.parse(QUERY.read_text(encoding="utf-8"))
+    for fld in dataclass_fields(qtree, "ChunkStats", QUERY):
+        if f"`{fld}`" not in spec:
+            missing.append(f"FORMAT.md: ChunkStats field `{fld}`")
 
     # -- crash consistency: journal sidecar + recovery contract ------------
     if "## Recovery invariants" not in spec:
@@ -147,6 +156,12 @@ def main() -> int:
     for fld in dataclass_fields(btree, "QosClass", SERVICE_BROKER):
         if f"`{fld}`" not in service_doc:
             missing.append(f"SERVICE.md: QosClass field `{fld}`")
+    # -- predicate pushdown: grammar + planner contract --------------------
+    if "## Predicate grammar" not in service_doc:
+        missing.append('SERVICE.md: "## Predicate grammar" section')
+    for name in ("Cmp", "And", "Or", "Not", "QueryResult", "pred_from_json"):
+        if f"`{name}`" not in service_doc:
+            missing.append(f"SERVICE.md: predicate grammar must name `{name}`")
     # -- failure semantics: the fault-tolerance contract -------------------
     if "## Failure modes" not in service_doc:
         missing.append('SERVICE.md: "## Failure modes" section')
