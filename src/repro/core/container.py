@@ -1317,7 +1317,7 @@ class TH5File:
                     trusted = rec.stats
                 else:
                     invalid.append(ci)  # degrade-to-filter, but say which chunk
-            if trusted is not None and evaluate_stats(predicate, trusted) == MATCH_NONE:
+            if trusted is not None and evaluate_stats(predicate, trusted, native) == MATCH_NONE:
                 pruned += 1  # proof: no row in ci can match — never fetched
                 continue
             survivors.append(ci)

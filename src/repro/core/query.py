@@ -18,6 +18,13 @@ three pieces that make that sound:
   :func:`evaluate_stats` (tri-state interval evaluation against a chunk's
   stats: ``MATCH_NONE`` proves no row in the chunk can satisfy the
   predicate, so the planner may prune the chunk without decoding it).
+  Numpy's row semantics are not plain real arithmetic — integer columns
+  are cast to float64 (lossy past ``2**53``), ``np.abs`` overflows at a
+  signed dtype's minimum, and sub-double float columns compare against
+  the constant *cast down to the column dtype* — so ``evaluate_stats``
+  takes the column dtype and either mirrors those semantics exactly or
+  refuses to claim a proof (``MATCH_SOME``) where they could diverge
+  from its interval arithmetic.
 
 Soundness contract: stats are **advisory**.  A record is trusted only when
 :meth:`ChunkStats.valid_for` accepts it against the chunk it claims to
@@ -120,7 +127,9 @@ class ChunkStats:
                 nan_counts=tuple(int(c) for c in nans),
                 finite_counts=tuple(int(c) for c in fins),
             )
-        except (TypeError, ValueError):
+        except (TypeError, ValueError, OverflowError):
+            # OverflowError: int(float("inf")) — stdlib json happily emits
+            # Infinity tokens, which must degrade, not crash the index load
             return ChunkStats(*ChunkStats._INVALID_SENTINEL)
 
     def valid_for(self, n_rows: int, n_cols: int, raw_crc32: int) -> bool:
@@ -276,6 +285,11 @@ def col(index: int) -> Col:
     return Col(int(index))
 
 
+#: wire spellings of the non-finite constants — RFC 8259 JSON has no
+#: NaN/Infinity tokens, so ``Cmp.to_json`` encodes them as strings
+_NONFINITE_SENTINELS = {"nan": math.nan, "inf": math.inf, "-inf": -math.inf}
+
+
 @dataclass(frozen=True)
 class Cmp(_PredicateBase):
     """Leaf: ``column <op> value`` (``abs(column)`` when ``absolute``).
@@ -293,7 +307,12 @@ class Cmp(_PredicateBase):
             raise ValueError("column index must be >= 0")
 
     def to_json(self) -> list:
-        return ["cmp", self.column, int(self.absolute), self.op, self.value]
+        v: float | str = self.value
+        if math.isnan(v):
+            v = "nan"
+        elif math.isinf(v):
+            v = "inf" if v > 0 else "-inf"
+        return ["cmp", self.column, int(self.absolute), self.op, v]
 
 
 @dataclass(frozen=True)
@@ -339,6 +358,10 @@ def pred_from_json(doc: Any):
         tag = doc[0]
         if tag == "cmp":
             _, column, absolute, op, value = doc
+            if isinstance(value, str):
+                if value not in _NONFINITE_SENTINELS:
+                    raise ValueError(f"bad constant sentinel {value!r}")
+                value = _NONFINITE_SENTINELS[value]
             return Cmp(int(column), bool(absolute), str(op), float(value))
         if tag == "and":
             return And(pred_from_json(doc[1]), pred_from_json(doc[2]))
@@ -411,6 +434,47 @@ def _abs_interval(lo, hi):
     return alo, max(abs(lo), abs(hi))
 
 
+#: magnitude at which numpy's int→float64 comparison cast starts rounding
+_F64_EXACT_LIMIT = 1 << 53
+#: signed-integer dtype minima, where ``np.abs`` overflows to its input
+_SIGNED_INT_MINS = frozenset(-(1 << (b - 1)) for b in (8, 16, 32, 64))
+
+
+def _int_bounds_unsafe(lo, hi, absolute: bool, dtype) -> bool:
+    """True when exact interval arithmetic over an integer group can
+    disagree with numpy's row evaluation: comparisons cast integer columns
+    to float64 (lossy at ``|x| >= 2**53``), and ``np.abs`` at a signed
+    dtype's minimum overflows to itself instead of negating.  Uncertain ⇒
+    unsafe (the caller degrades to ``MATCH_SOME``)."""
+    if abs(lo) >= _F64_EXACT_LIMIT or abs(hi) >= _F64_EXACT_LIMIT:
+        return True
+    if absolute and lo < 0:
+        if dtype is not None and dtype.kind == "i":
+            return lo <= np.iinfo(dtype).min
+        return lo in _SIGNED_INT_MINS  # dtype unknown: any plausible minimum
+    return False
+
+
+def _effective_constant(v: float, dtype) -> float | None:
+    """The float64 value numpy actually compares a column against.  Weak
+    python-float constants are cast *down* to sub-double float column
+    dtypes before comparing (bfloat16 comparisons run in float32), so the
+    interval math must see that rounded value, not the original.  ``None``
+    ⇒ the dtype's comparison semantics are unmodelled here — the caller
+    must not claim a proof."""
+    if dtype is None or dtype.kind in "iub":
+        return v  # integer columns are cast to float64; v compares as-is
+    if dtype.kind == "f":
+        if dtype.itemsize >= 8:
+            return v
+        with np.errstate(over="ignore"):  # huge v casts to ±inf, silently
+            return float(dtype.type(v))
+    if dtype.name == "bfloat16":
+        with np.errstate(over="ignore"):
+            return float(np.float32(v))
+    return None
+
+
 def _cmp_tri(op: str, lo, hi, has_nan: bool, v: float) -> int:
     """Tri-state of ``x <op> v`` over an interval [lo, hi] of the chunk's
     non-NaN values (lo is None = every value NaN).  NaN operands compare
@@ -446,41 +510,60 @@ def _cmp_tri(op: str, lo, hi, has_nan: bool, v: float) -> int:
     return MATCH_ALL if (lo == hi == v and not has_nan) else MATCH_SOME
 
 
-def evaluate_stats(pred: Any, stats: ChunkStats) -> int:
+def evaluate_stats(pred: Any, stats: ChunkStats, dtype: Any = None) -> int:
     """Tri-state evaluation of ``pred`` against one chunk's (validated)
     stats.  Group bounds are a superset interval of every member column's
     values, so ALL / NONE verdicts at group level transfer soundly to the
-    column; anything uncertain collapses to ``MATCH_SOME`` (decode)."""
+    column; anything uncertain collapses to ``MATCH_SOME`` (decode).
+
+    ``dtype`` is the column dtype, used to mirror numpy's comparison
+    semantics exactly (sub-double constants are rounded to the column
+    dtype; unsafe integer bounds refuse proofs — see the module
+    docstring).  Pass it whenever verdicts gate pruning: without it,
+    float bounds are assumed to carry float64 comparison semantics, and
+    integer unsafety falls back to dtype-agnostic (more conservative)
+    checks."""
     if isinstance(pred, Cmp):
         g = stats.group_of(pred.column)
         lo, hi = stats.mins[g], stats.maxs[g]
         has_nan = stats.nan_counts[g] > 0
-        if pred.absolute:
-            lo, hi = _abs_interval(lo, hi)
         v = pred.value
         if isinstance(v, float) and math.isnan(v):
             # x <op> NaN: False for everything but !=, True for != —
             # regardless of the data; decide without the interval
             return MATCH_ALL if pred.op == "!=" else MATCH_NONE
+        if lo is not None:
+            is_int = (
+                dtype.kind in "iub"
+                if dtype is not None
+                else isinstance(lo, int) or isinstance(hi, int)
+            )
+            if is_int and _int_bounds_unsafe(lo, hi, pred.absolute, dtype):
+                return MATCH_SOME  # numpy may diverge from interval math
+            v = _effective_constant(v, dtype)
+            if v is None:
+                return MATCH_SOME  # unmodelled dtype: never claim a proof
+        if pred.absolute:
+            lo, hi = _abs_interval(lo, hi)
         return _cmp_tri(pred.op, lo, hi, has_nan, v)
     if isinstance(pred, And):
-        a = evaluate_stats(pred.lhs, stats)
-        b = evaluate_stats(pred.rhs, stats)
+        a = evaluate_stats(pred.lhs, stats, dtype)
+        b = evaluate_stats(pred.rhs, stats, dtype)
         if a == MATCH_NONE or b == MATCH_NONE:
             return MATCH_NONE
         if a == MATCH_ALL and b == MATCH_ALL:
             return MATCH_ALL
         return MATCH_SOME
     if isinstance(pred, Or):
-        a = evaluate_stats(pred.lhs, stats)
-        b = evaluate_stats(pred.rhs, stats)
+        a = evaluate_stats(pred.lhs, stats, dtype)
+        b = evaluate_stats(pred.rhs, stats, dtype)
         if a == MATCH_ALL or b == MATCH_ALL:
             return MATCH_ALL
         if a == MATCH_NONE and b == MATCH_NONE:
             return MATCH_NONE
         return MATCH_SOME
     if isinstance(pred, Not):
-        inner = evaluate_stats(pred.operand, stats)
+        inner = evaluate_stats(pred.operand, stats, dtype)
         if inner == MATCH_ALL:
             return MATCH_NONE
         if inner == MATCH_NONE:

@@ -231,6 +231,106 @@ def test_lossy_codec_stats_bound_decoded_values(path):
             _check_vs_oracle(f, "/d", col(1) > thresh, 0, rows)
 
 
+# -- numpy-semantics divergences: proofs must mirror the row evaluator ----------
+#
+# numpy's row semantics are not real arithmetic: integer columns are cast
+# to float64 (lossy past 2**53), np.abs overflows at a signed dtype's
+# minimum, and sub-double float columns compare against the constant cast
+# DOWN to the column dtype.  Exact interval math must refuse (or mirror)
+# each of these, or a stats proof prunes rows numpy would match.
+
+
+def test_int8_abs_dtype_min_not_pruned(path):
+    """np.abs(int8 -128) overflows to -128, so ``abs(col) <= 10`` matches
+    the row — the exact abs-interval [128, 128] must not prune it."""
+    data = np.full((64, 2), 50, dtype="|i1")
+    data[40, 0] = -128
+    with _make(path, data, codec="zlib", chunk_rows=16) as f:
+        res = _check_vs_oracle(f, "/d", abs(col(0)) <= 10, 0, 64)
+        assert res.mask[40]  # the overflowed row matches under numpy
+        assert res.chunks_pruned == 3  # chunks without -128 still prune
+
+
+def test_int64_beyond_float53_not_pruned(path):
+    """int64 columns are cast to float64 for comparison: 2**63-1 rounds to
+    2**63 and matches ``== float(2**63-1)`` — exact int math proves the
+    opposite and must therefore refuse the claim."""
+    data = np.zeros((64, 2), dtype="<i8")
+    data[10, 0] = 2**63 - 1
+    with _make(path, data, codec="zlib", chunk_rows=16) as f:
+        res = _check_vs_oracle(f, "/d", col(0) == 2**63 - 1, 0, 64)
+        assert res.mask[10]
+
+
+def test_float32_unrepresentable_constant_not_pruned(path):
+    """float32 comparisons cast the constant down: ``col == 0.1`` matches
+    float32(0.1) even though 0.1 is outside the exact float64 bounds."""
+    data = np.zeros((64, 2), dtype="<f4")
+    data[5, 0] = np.float32(0.1)
+    with _make(path, data, codec="zlib", chunk_rows=16) as f:
+        res = _check_vs_oracle(f, "/d", col(0) == 0.1, 0, 64)
+        assert res.mask[5]
+        res = f.query("/d", col(0) > 1e9)  # pruning itself still works
+        assert res.chunks_pruned == res.n_chunks == 4
+
+
+def test_sub_double_dtype_verdicts_sound():
+    """Unit-level soundness of dtype-aware verdicts for float16 and
+    bfloat16 (whose comparisons run in float32): with a constant that the
+    column dtype rounds onto the stored value, numpy matches a row the
+    exact float64 interval excludes — the verdict must not claim NONE."""
+    from repro.core.query import MATCH_ALL
+
+    ml_dtypes = pytest.importorskip("ml_dtypes")
+    x16 = np.float16(0.1)
+    xbf = ml_dtypes.bfloat16(0.1)
+    cases = [
+        (np.dtype("<f2"), x16, 0.1),  # f16(0.1) == f16-cast of 0.1, != 0.1
+        (np.dtype(ml_dtypes.bfloat16), xbf, float(xbf) + 1e-10),  # f32-rounds onto xbf
+    ]
+    for dt, x, const in cases:
+        data = np.zeros((8, 1), dtype=dt)
+        data[3, 0] = x
+        stats = compute_chunk_stats(data, raw_crc32=0)
+        for pred in (col(0) == const, col(0) != const, ~(col(0) == const)):
+            verdict = evaluate_stats(pred, stats, dt)
+            mask = evaluate_mask(pred, data.reshape(8, 1))
+            if verdict == MATCH_NONE:
+                assert not mask.any(), (dt, pred)
+            if verdict == MATCH_ALL:
+                assert mask.all(), (dt, pred)
+        # the divergent row really does match under numpy ...
+        assert evaluate_mask(col(0) == const, data.reshape(8, 1))[3]
+        # ... so the equality claim must not be a NONE proof
+        assert evaluate_stats(col(0) == const, stats, dt) != MATCH_NONE
+
+
+def test_stats_from_json_nonfinite_counts_degrade():
+    """stdlib json emits Infinity tokens; int(inf) raises OverflowError —
+    the lenient parse must degrade to an invalid record, not crash."""
+    for bad in (float("inf"), float("-inf"), float("nan")):
+        rec = ChunkStats.from_json([bad, 2, [0.0], [1.0], [0], [2]])
+        assert not rec.valid_for(1, 2, 0)
+
+
+def test_predicate_json_is_rfc8259_clean():
+    """Non-finite constants wire-encode as string sentinels, so the meta
+    blob stays strict JSON (no NaN/Infinity tokens) and round-trips."""
+    import json
+
+    from repro.core.query import pred_from_json
+
+    for const in (float("nan"), float("inf"), float("-inf"), 0.5):
+        pred = (abs(col(1)) >= const) & ~(col(0) != const)
+        text = json.dumps(pred.to_json(), allow_nan=False)  # raises on leak
+        back = pred_from_json(json.loads(text))
+        assert back.to_json() == pred.to_json()
+        got = back.lhs.value
+        assert got == const or (got != got and const != const)
+    with pytest.raises(ValueError, match="sentinel"):
+        pred_from_json(["cmp", 0, 0, ">", "1e5"])  # only nan/inf/-inf pass
+
+
 # -- property tests (hypothesis; skip gracefully when unavailable) ---------------
 
 
@@ -286,7 +386,7 @@ def test_stats_verdicts_are_sound_property(pred, seed, n_rows):
 
     data = _field(n_rows, nan_rows=range(0, n_rows, 7), seed=seed)
     stats = compute_chunk_stats(data, raw_crc32=0)
-    verdict = evaluate_stats(pred, stats)
+    verdict = evaluate_stats(pred, stats, data.dtype)
     mask = evaluate_mask(pred, data)
     oracle = _oracle_mask(pred, data)
     assert np.array_equal(mask, oracle)

@@ -410,13 +410,17 @@ def test_subscribe_codec_defaults_fill_missing_fields():
 
 def test_query_request_codec_nan_and_inf_constants():
     """NaN / ±inf predicate constants survive the wire (the meta JSON path
-    must not mangle them) — compared field-wise since NaN != NaN."""
+    must not mangle them) — compared field-wise since NaN != NaN.  The
+    encoded meta must also be strict RFC 8259 JSON: non-finite constants
+    ride as string sentinels, never NaN/Infinity tokens."""
+    import json
     import math
 
     for const in (float("nan"), float("inf"), float("-inf")):
         req = QueryRequest("/d", col(2) != const, row_start=7, n_rows=None)
         meta, payload = wire.encode_request("q", req)
-        client, back = wire.decode_request(meta, memoryview(b""))
+        strict = json.dumps(meta, allow_nan=False)  # raises on a token leak
+        client, back = wire.decode_request(json.loads(strict), memoryview(b""))
         assert client == "q" and isinstance(back, QueryRequest)
         assert (back.dataset, back.row_start, back.n_rows) == ("/d", 7, None)
         assert back.predicate.op == "!=" and back.predicate.column == 2
