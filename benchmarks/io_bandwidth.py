@@ -466,7 +466,7 @@ def run(sizes_mb=(64, 192), ranks=(4, 16, 32, 64, 128), n_aggregators=8, repeats
                     doc = json.load(fh)
             except (OSError, ValueError):
                 doc = {}
-        doc.update({"schema": 8, "generated_unix": time.time(), **sections})
+        doc.update({"schema": 9, "generated_unix": time.time(), **sections})
         with open(json_path, "w") as fh:
             json.dump(doc, fh, indent=2, sort_keys=True)
         out(f"wrote {json_path}")

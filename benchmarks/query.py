@@ -35,7 +35,7 @@ from repro.core.container import TH5File
 from repro.core.query import col, evaluate_mask
 
 BENCH_JSON = "BENCH_io.json"
-SCHEMA = 8
+SCHEMA = 9
 DATASET = "/state/w"
 
 

@@ -49,7 +49,7 @@ from repro.service import (
 )
 
 BENCH_JSON = "BENCH_io.json"
-SCHEMA = 8
+SCHEMA = 9
 DATASET = "/state/w"
 
 

@@ -14,6 +14,7 @@ per-figure detail lines.  Figure map:
     recovery         → fault tolerance: crash-recovery scan + reconnect dip
     streaming        → live subscriptions: push fan-out rate + latency
     query            → predicate pushdown: sparse query vs dense full scan
+    observability    → tracing plane: traced-vs-untraced serve overhead
 """
 
 from __future__ import annotations
@@ -29,6 +30,7 @@ def main() -> None:
         io_bandwidth,
         lm_checkpoint,
         multigrid_bench,
+        observability,
         query,
         recovery,
         service_load,
@@ -67,6 +69,10 @@ def main() -> None:
         ("query_pushdown", query.run,
          lambda res: f"sel={res['selectivity']:.0%},speedup={res['speedup']:.1f}x,"
                      f"pruned={res['pruned_ratio']:.2f}"),
+        # tracing overhead: fully-traced serve throughput vs untraced
+        ("observability_overhead", observability.run,
+         lambda res: f"traced_over_untraced={res['traced_over_untraced']:.3f},"
+                     f"spans_per_run={res['spans_per_run']}"),
         # live subscriptions: N-viewer push fan-out over the wire
         ("streaming_push_fanout", streaming.run,
          lambda res: f"fanout{res['fanout'][-1]['subscribers']}="

@@ -60,7 +60,7 @@ from repro.service import (
 
 BENCH_JSON = "BENCH_io.json"
 STEP_GROUP = "/simulation/step_00000000/state"
-SCHEMA = 8
+SCHEMA = 9
 
 # The serve path is GIL-bound on CI-class boxes: more workers than cores
 # just churns the GIL (measured on the 2-core trajectory box: 8-client
@@ -256,6 +256,9 @@ if __name__ == "__main__":
                     help="serve the broker in-process (the `serve` section) or "
                          "over the wire protocol on a Unix socket (`serve_wire`)")
     ap.add_argument("--json", default=BENCH_JSON, help="output JSON path ('' disables)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="additionally write a Chrome trace-event JSON of one "
+                         "fully-traced smoke run (open in Perfetto)")
     a = ap.parse_args()
     if a.smoke:
         res = run(clients=(1, 4), rows=2048, cols=64, n_workers=2, passes=1,
@@ -271,3 +274,20 @@ if __name__ == "__main__":
     assert traffic[-1]["cache_hit_rate"] >= traffic[0]["cache_hit_rate"], (
         "cross-client cache sharing regressed"
     )
+    if a.trace:
+        # one fully-traced smoke-scale run, exported as a Chrome trace-event
+        # file — the CI docs job uploads this as the trace artifact
+        from repro.obs import TRACER, write_chrome_trace
+
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "serve.th5")
+            build_run_file(path, 2048, 64)
+            TRACER.reset()
+            TRACER.configure(enabled=True, sample_every=1)
+            try:
+                run_load(path, 2, n_workers=2, passes=1, transport=a.transport)
+            finally:
+                TRACER.configure(enabled=False)
+            n_events = write_chrome_trace(a.trace, tracer=TRACER)
+            TRACER.reset()
+        print(f"wrote {n_events} trace events to {a.trace}")

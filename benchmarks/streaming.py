@@ -41,7 +41,7 @@ from repro.service import DataService, RemoteDataService, ServiceServer
 from repro.service.stats import LatencyRecorder
 
 BENCH_JSON = "BENCH_io.json"
-SCHEMA = 8
+SCHEMA = 9
 DS_WARM = "/stream/warmup"
 DS_LIVE = "/stream/u"
 CODEC = _codecs.get_codec("zlib")

@@ -1,0 +1,108 @@
+"""Trace one request end-to-end: span trees + a Perfetto-loadable file.
+
+    PYTHONPATH=src python examples/trace_a_request.py [trace.json]
+
+Serves a chunked run file over a Unix socket, turns the tracer on, and
+submits two remote requests:
+
+* a :class:`~repro.service.WindowQuery` — an LOD-style strided row gather
+  (decode pipeline, chunk cache, the works);
+* a pushed-down :class:`~repro.service.QueryRequest` over the sorted key
+  column — most chunks are pruned on the stats index without decoding.
+
+Each request becomes ONE trace: the client round-trip span, the broker's
+queue/schedule/execute phases, the wire send and the per-chunk decode
+spans all share a ``trace_id`` carried in the request frame's metadata
+(client and server here are one process, but the stitching is the same
+mechanism that joins separate processes — see docs/OBSERVABILITY.md).
+The span trees print to stdout, the Chrome trace-event file written at
+the end loads directly in https://ui.perfetto.dev or ``chrome://tracing``,
+and the unified metrics registry shows the same run as counters.
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.aggregation import ChunkPipeline
+from repro.core.container import TH5File
+from repro.core.query import col
+from repro.obs import REGISTRY, TRACER, format_span_tree, write_chrome_trace
+from repro.obs.trace import SPAN_CLIENT_REQUEST
+from repro.service import (
+    DataService,
+    QueryRequest,
+    RemoteDataService,
+    ServiceConfig,
+    ServiceServer,
+    WindowQuery,
+)
+
+DS = "/simulation/step_00000000/state/fields/u"
+ROWS, COLS, CHUNK_ROWS = 8192, 64, 512
+
+
+def build(path):
+    """A chunked shuffle+zlib field whose column 0 is the sorted row index
+    — the layout that lets the query planner prune on chunk stats."""
+    rng = np.random.default_rng(7)
+    data = rng.normal(size=(ROWS, COLS)).astype("<f4")
+    data[:, 0] = np.arange(ROWS, dtype=np.float32)
+    with TH5File.create(path) as f:
+        meta = f.create_chunked_dataset(DS, data.shape, "<f4", CHUNK_ROWS, "shuffle+zlib")
+        with ChunkPipeline(f) as pipe:
+            pipe.write(meta, data)
+        f.commit()
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "trace_a_request.json"
+    TRACER.configure(enabled=True, sample_every=1)  # trace every request
+    with tempfile.TemporaryDirectory(prefix="th5trace", dir="/tmp") as d:
+        path = os.path.join(d, "run.th5")
+        build(path)
+        with DataService(path, ServiceConfig(n_workers=2)) as svc, \
+             ServiceServer(svc, os.path.join(d, "s.sock")) as server, \
+             RemoteDataService(server.address) as remote:
+            window = remote.request(
+                "viewer", WindowQuery(DS, tuple(range(0, ROWS // 2, 2))))
+            query = remote.request(
+                "viewer", QueryRequest(DS, col(0) >= ROWS - 100))
+            # sample while the broker's collector is still registered —
+            # the service.* values come from its live queue accounting
+            metrics = REGISTRY.collect()
+
+    spans = TRACER.snapshot()
+    TRACER.configure(enabled=False)
+
+    roots = [s for s in spans if s.name == SPAN_CLIENT_REQUEST]
+    print(f"window read: {window.value.shape[0]} rows, "
+          f"query: {query.value.n_matches} matches, "
+          f"{query.value.chunks_pruned}/{query.value.n_chunks} chunks pruned\n")
+    print(f"{len(spans)} spans across {len(roots)} traces "
+          f"(one per remote request):\n")
+    print(format_span_tree(spans))
+
+    # each request's spans — client, broker phases, decode — share ONE id
+    for root in roots:
+        per_trace = TRACER.spans_for(root.trace_id)
+        names = {s.name for s in per_trace}
+        assert {"broker.queue_wait", "broker.execute", "wire.send"} <= names, names
+
+    n_events = write_chrome_trace(out_path, spans)
+    print(f"\nwrote {n_events} Chrome trace events to {out_path} "
+          f"— open in https://ui.perfetto.dev")
+
+    print("\nsame run through the metrics registry:")
+    for name in ("cache.hits", "cache.misses", "decode.chunks",
+                 "service.completed", "service.bytes_served"):
+        print(f"  {name} = {metrics.get(name, 0):g}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

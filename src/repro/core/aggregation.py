@@ -47,6 +47,28 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
+from repro.obs.metrics import (
+    Counter as _Counter,
+    M_COPY_BYTES as _M_COPY_BYTES,
+    M_COPY_COUNT as _M_COPY_COUNT,
+    M_DECODE_CHUNKS,
+    M_DECODE_FETCH_SECONDS,
+    M_DECODE_INFLATE_SECONDS,
+    M_DECODE_RAW_BYTES,
+    M_ENCODE_CHUNKS,
+    M_ENCODE_RAW_BYTES,
+    M_ENCODE_SECONDS,
+    M_WRITE_SECONDS,
+    REGISTRY as _REG,
+)
+from repro.obs.trace import (
+    SPAN_DECODE_FETCH,
+    SPAN_DECODE_GATHER,
+    SPAN_DECODE_INFLATE,
+    SPAN_ENCODE_CHUNK,
+    TRACER,
+)
+
 import numpy as np
 
 from .codecs import CODEC_NONE, codec_by_id, encode_chunk, encode_chunk_with_stats, get_codec
@@ -66,35 +88,55 @@ from .container import (
 
 
 class CopyCounter:
-    """Process-wide payload-copy accounting (thread-safe).
+    """Payload-copy accounting (thread-safe).
 
     Every time a request payload is materialised as a new bytes object (or a
     non-contiguous run is compacted) the copy is recorded here.  The
     benchmarks snapshot around a write to compute copies-per-byte; the
     zero-copy coalesced path must report a delta of exactly zero.
+
+    ``registered=True`` (the process-wide :data:`COPY_COUNTER` only) backs
+    the two tallies with the unified metrics registry
+    (:data:`~repro.obs.metrics.M_COPY_COUNT` /
+    :data:`~repro.obs.metrics.M_COPY_BYTES`), so ``REGISTRY.collect()``
+    sees them; the *local* instances the write paths create for per-call
+    deltas stay anonymous — their adds and resets never touch the global
+    metrics (and a local reset can't clobber the process totals).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, registered: bool = False) -> None:
         self._lock = threading.Lock()
-        self.n_copies = 0
-        self.bytes_copied = 0
+        if registered:
+            self._copies = _REG.counter(_M_COPY_COUNT)
+            self._bytes = _REG.counter(_M_COPY_BYTES)
+        else:
+            self._copies = _Counter()
+            self._bytes = _Counter()
+
+    @property
+    def n_copies(self) -> int:
+        return int(self._copies.value)
+
+    @property
+    def bytes_copied(self) -> int:
+        return int(self._bytes.value)
 
     def add(self, nbytes: int) -> None:
         with self._lock:
-            self.n_copies += 1
-            self.bytes_copied += int(nbytes)
+            self._copies.inc()
+            self._bytes.inc(int(nbytes))
 
     def reset(self) -> None:
         with self._lock:
-            self.n_copies = 0
-            self.bytes_copied = 0
+            self._copies._reset()
+            self._bytes._reset()
 
     def snapshot(self) -> tuple[int, int]:
         with self._lock:
-            return self.n_copies, self.bytes_copied
+            return int(self._copies.value), int(self._bytes.value)
 
 
-COPY_COUNTER = CopyCounter()
+COPY_COUNTER = CopyCounter(registered=True)
 
 _IOV_MAX = IOV_MAX  # re-exported; monkeypatched by the short-write tests
 
@@ -578,6 +620,18 @@ class FilterStats:
         return self
 
 
+def _publish_encode_stats(stats: FilterStats) -> None:
+    """Mirror one write pass into the unified registry (encode.* names).
+    The FilterStats object stays the per-call truth; the registry view is
+    cumulative across the process."""
+    if not stats.n_chunks:
+        return
+    _REG.counter(M_ENCODE_CHUNKS).inc(stats.n_chunks)
+    _REG.counter(M_ENCODE_RAW_BYTES).inc(stats.raw_bytes)
+    _REG.counter(M_ENCODE_SECONDS).inc(stats.encode_s)
+    _REG.counter(M_WRITE_SECONDS).inc(stats.write_s)
+
+
 class ChunkPipeline:
     """Overlapped chunk filter pipeline (Jin et al.: compression deeply
     integrated with the parallel write, not bolted on).
@@ -651,6 +705,10 @@ class ChunkPipeline:
             self._write_none(meta, arr, chunk_ranges, stats)
         else:
             pool = self._get_pool()
+            # explicit trace handoff: capture the submitting thread's
+            # context HERE — pool workers have no ambient context of their
+            # own, so each encode closure records against this parent
+            tctx = TRACER.current_context()
 
             def enc(lo: int, hi: int):
                 # stats ride the pool worker too: summarising (and, for a
@@ -658,7 +716,12 @@ class ChunkPipeline:
                 # overlaps the drain exactly like the encode itself
                 t0 = time.perf_counter()
                 out = encode_chunk_with_stats(codec, arr[lo:hi])
-                return out, time.perf_counter() - t0
+                t1 = time.perf_counter()
+                if tctx is not None:
+                    TRACER.record(
+                        SPAN_ENCODE_CHUNK, tctx, t0, t1, {"rows": hi - lo}
+                    )
+                return out, t1 - t0
 
             # bounded in-flight window: keep the codec workers busy without
             # staging the whole encoded dataset ahead of a disk-bound drain —
@@ -691,6 +754,7 @@ class ChunkPipeline:
                 stats.raw_bytes += raw_n
                 stats.stored_bytes += payload.nbytes if isinstance(payload, memoryview) else len(payload)
         stats.wall_s = time.perf_counter() - t_start
+        _publish_encode_stats(stats)
         return stats
 
     def _write_none(self, meta, arr, chunk_ranges, stats: FilterStats) -> None:
@@ -901,6 +965,14 @@ class DecodePipeline:
             if f.read_stats is None:
                 f.read_stats = FilterStats()
             f.read_stats.merge(stats)
+        # the same pass, in the unified registry (decode.* names): the
+        # per-file FilterStats stays the local truth, the registry holds
+        # the process-cumulative view
+        if stats.n_chunks:
+            _REG.counter(M_DECODE_CHUNKS).inc(stats.n_chunks)
+            _REG.counter(M_DECODE_RAW_BYTES).inc(stats.raw_bytes)
+            _REG.counter(M_DECODE_FETCH_SECONDS).inc(stats.write_s)
+            _REG.counter(M_DECODE_INFLATE_SECONDS).inc(stats.encode_s)
 
     def _run(
         self,
@@ -925,14 +997,23 @@ class DecodePipeline:
             stats.stored_bytes += rec.nbytes
             stats.n_syscalls += calls
 
+        # explicit trace handoff: the gather's ambient context, captured on
+        # the submitting thread — inflate closures record against it from
+        # the pool (retroactively, off timestamps they take anyway)
+        tctx = TRACER.current_context()
+
         if len(jobs) == 1:
             ci, rec = jobs[0]
             t0 = time.perf_counter()
             blob, calls = self._fetch(name, ci, rec)
             t1 = time.perf_counter()
             dec = self._inflate(name, meta, ci, rec, blob, verify)
+            t2 = time.perf_counter()
             stats.write_s += t1 - t0
-            stats.encode_s += time.perf_counter() - t1
+            stats.encode_s += t2 - t1
+            if tctx is not None:
+                TRACER.record(SPAN_DECODE_FETCH, tctx, t0, t1, {"chunks": 1})
+                TRACER.record(SPAN_DECODE_INFLATE, tctx, t1, t2, {"chunk": ci})
             account(rec, calls)
             consume(ci, dec)
             return
@@ -971,9 +1052,14 @@ class DecodePipeline:
             batches = [[j] for j in jobs]
 
         def inflate_timed(ci, rec, blob):
+            # runs on a pool worker: tctx crossed the pool boundary by
+            # closure capture, not thread-local inheritance
             t0 = time.perf_counter()
             dec = self._inflate(name, meta, ci, rec, blob, verify)
-            return dec, time.perf_counter() - t0
+            t1 = time.perf_counter()
+            if tctx is not None:
+                TRACER.record(SPAN_DECODE_INFLATE, tctx, t0, t1, {"chunk": ci})
+            return dec, t1 - t0
 
         pending: deque = deque()  # (ci, Future) in chunk order
 
@@ -989,7 +1075,10 @@ class DecodePipeline:
                     drain_one()
                 t0 = time.perf_counter()
                 blobs, calls = self._fetch_batch(name, batch)  # overlaps inflates
-                stats.write_s += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                stats.write_s += t1 - t0
+                if tctx is not None:
+                    TRACER.record(SPAN_DECODE_FETCH, tctx, t0, t1, {"chunks": len(batch)})
                 for (ci, rec), blob in zip(batch, blobs):
                     pending.append((ci, pool.submit(inflate_timed, ci, rec, blob)))
                     account(rec, 0)
@@ -1031,7 +1120,9 @@ class DecodePipeline:
         native = TH5File._is_native(dt)
         out2 = out.reshape((n_rows, -1))  # view (out is C-contiguous)
         stats = FilterStats()
+        gspan = TRACER.span(SPAN_DECODE_GATHER)  # NOOP unless this request is traced
         t_start = time.perf_counter()
+        raw = hits = 0
 
         def dst_for(ci: int) -> tuple[np.ndarray, int, int, int]:
             clo, chi = meta.chunk_row_range(ci)
@@ -1039,30 +1130,41 @@ class DecodePipeline:
             return out2[s - row_start : e - row_start], s, e, clo
 
         jobs: list[tuple[int, Any]] = []
-        for ci in range(row_start // cr, (row_start + n_rows - 1) // cr + 1):
-            dst, s, e, clo = dst_for(ci)
-            rec = self._record(name, meta, ci)
-            if rec.codec_id == CODEC_NONE and native and not verify:
-                # raw chunk: vectored read directly into the result rows
-                # (zero intermediate copies — the PR-2 fast path, untouched)
-                n, calls = preadv_full(f.fd, [_byte_view(dst)], rec.offset + (s - clo) * rb)
-                READ_COUNTER.add(n, calls)
-                stats.n_syscalls += calls
-                continue
-            if not verify:
-                hit = f.chunk_cache.get((name, ci))
-                if hit is not None:
-                    _byte_view(dst)[:] = _byte_view(np.ascontiguousarray(hit[s - clo : e - clo]))
-                    continue
-            jobs.append((ci, rec))
+        try:
+            with TRACER.use(gspan):
+                for ci in range(row_start // cr, (row_start + n_rows - 1) // cr + 1):
+                    dst, s, e, clo = dst_for(ci)
+                    rec = self._record(name, meta, ci)
+                    if rec.codec_id == CODEC_NONE and native and not verify:
+                        # raw chunk: vectored read directly into the result rows
+                        # (zero intermediate copies — the PR-2 fast path, untouched)
+                        n, calls = preadv_full(f.fd, [_byte_view(dst)], rec.offset + (s - clo) * rb)
+                        READ_COUNTER.add(n, calls)
+                        stats.n_syscalls += calls
+                        raw += 1
+                        continue
+                    if not verify:
+                        hit = f.chunk_cache.get((name, ci))
+                        if hit is not None:
+                            _byte_view(dst)[:] = _byte_view(
+                                np.ascontiguousarray(hit[s - clo : e - clo])
+                            )
+                            hits += 1
+                            continue
+                    jobs.append((ci, rec))
 
-        if jobs:
-            def consume(ci: int, dec: np.ndarray) -> None:
-                dst, s, e, clo = dst_for(ci)
-                # byte-level copy: dtype-agnostic (out may be a raw byte buffer)
-                _byte_view(dst)[:] = _byte_view(np.ascontiguousarray(dec[s - clo : e - clo]))
+                if jobs:
+                    def consume(ci: int, dec: np.ndarray) -> None:
+                        dst, s, e, clo = dst_for(ci)
+                        # byte-level copy: dtype-agnostic (out may be a raw byte buffer)
+                        _byte_view(dst)[:] = _byte_view(np.ascontiguousarray(dec[s - clo : e - clo]))
 
-            self._run(name, meta, jobs, verify, stats, consume)
+                    self._run(name, meta, jobs, verify, stats, consume)
+        finally:
+            if gspan.trace_id:
+                gspan.tag("dataset", name).tag("rows", n_rows).tag("cache_hits", hits)
+                gspan.tag("cache_misses", len(jobs)).tag("raw_chunks", raw)
+            gspan.end()
         stats.wall_s = time.perf_counter() - t_start
         self._publish(stats)
         return n_rows * rb
@@ -1076,17 +1178,27 @@ class DecodePipeline:
         f = self.file
         out: dict[int, np.ndarray] = {}
         stats = FilterStats()
+        gspan = TRACER.span(SPAN_DECODE_GATHER)
         t_start = time.perf_counter()
         jobs: list[tuple[int, Any]] = []
-        for ci in dict.fromkeys(int(c) for c in cis):
-            if not verify:
-                hit = f.chunk_cache.get((name, ci))
-                if hit is not None:
-                    out[ci] = hit
-                    continue
-            jobs.append((ci, self._record(name, meta, ci)))
-        if jobs:
-            self._run(name, meta, jobs, verify, stats, out.__setitem__)
+        hits = 0
+        try:
+            with TRACER.use(gspan):
+                for ci in dict.fromkeys(int(c) for c in cis):
+                    if not verify:
+                        hit = f.chunk_cache.get((name, ci))
+                        if hit is not None:
+                            out[ci] = hit
+                            hits += 1
+                            continue
+                    jobs.append((ci, self._record(name, meta, ci)))
+                if jobs:
+                    self._run(name, meta, jobs, verify, stats, out.__setitem__)
+        finally:
+            if gspan.trace_id:
+                gspan.tag("dataset", name).tag("cache_hits", hits)
+                gspan.tag("cache_misses", len(jobs))
+            gspan.end()
         stats.wall_s = time.perf_counter() - t_start
         self._publish(stats)
         return out

@@ -62,6 +62,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Mapping, Sequence
 
+from repro.obs import metrics as _metrics
+
 import numpy as np
 
 from . import codecs as _codecs
@@ -154,31 +156,48 @@ class CorruptFileError(TH5Error):
 
 
 class ReadCounter:
-    """Process-wide read-syscall accounting (thread-safe) — the read-side
-    mirror of ``aggregation.COPY_COUNTER``; benchmarks snapshot around a
-    gather to compute syscalls-per-byte."""
+    """Read-syscall accounting (thread-safe) — the read-side mirror of
+    ``aggregation.COPY_COUNTER``; benchmarks snapshot around a gather to
+    compute syscalls-per-byte.
 
-    def __init__(self) -> None:
+    ``registered=True`` (the process-wide :data:`READ_COUNTER` only) backs
+    the tallies with the unified metrics registry (``io.read_syscalls`` /
+    ``io.read_bytes``); locally-constructed instances stay anonymous so
+    per-call deltas and resets never touch the process totals."""
+
+    def __init__(self, registered: bool = False) -> None:
         self._lock = threading.Lock()
-        self.n_syscalls = 0
-        self.bytes_read = 0
+        if registered:
+            self._syscalls = _metrics.REGISTRY.counter(_metrics.M_READ_SYSCALLS)
+            self._bytes = _metrics.REGISTRY.counter(_metrics.M_READ_BYTES)
+        else:
+            self._syscalls = _metrics.Counter()
+            self._bytes = _metrics.Counter()
+
+    @property
+    def n_syscalls(self) -> int:
+        return int(self._syscalls.value)
+
+    @property
+    def bytes_read(self) -> int:
+        return int(self._bytes.value)
 
     def add(self, nbytes: int, syscalls: int) -> None:
         with self._lock:
-            self.n_syscalls += int(syscalls)
-            self.bytes_read += int(nbytes)
+            self._syscalls.inc(int(syscalls))
+            self._bytes.inc(int(nbytes))
 
     def reset(self) -> None:
         with self._lock:
-            self.n_syscalls = 0
-            self.bytes_read = 0
+            self._syscalls._reset()
+            self._bytes._reset()
 
     def snapshot(self) -> tuple[int, int]:
         with self._lock:
-            return self.n_syscalls, self.bytes_read
+            return int(self._syscalls.value), int(self._bytes.value)
 
 
-READ_COUNTER = ReadCounter()
+READ_COUNTER = ReadCounter(registered=True)
 
 
 def _advance(bufs: list[memoryview], skip: int) -> list[memoryview]:
@@ -491,6 +510,12 @@ class ChunkCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # process-wide mirrors (cache.* in the unified registry): every
+        # cache instance adds into the same counters, while the per-
+        # instance ints above stay this cache's local truth (stats())
+        self._m_hits = _metrics.REGISTRY.counter(_metrics.M_CACHE_HITS)
+        self._m_misses = _metrics.REGISTRY.counter(_metrics.M_CACHE_MISSES)
+        self._m_evictions = _metrics.REGISTRY.counter(_metrics.M_CACHE_EVICTIONS)
 
     def contains(self, key: tuple[str, int]) -> bool:
         """Presence probe that mutates NOTHING — no LRU promotion, no
@@ -506,14 +531,20 @@ class ChunkCache:
             arr = self._entries.get(key)
             if arr is None:
                 self.misses += 1
-                return None
-            self._entries.move_to_end(key)
-            self.hits += 1
-            return arr
+            else:
+                self._entries.move_to_end(key)
+                self.hits += 1
+        # registry mirror outside the cache lock (counters self-lock)
+        if arr is None:
+            self._m_misses.inc()
+            return None
+        self._m_hits.inc()
+        return arr
 
     def put(self, key: tuple[str, int], arr: np.ndarray) -> None:
         if arr.nbytes > self.capacity_bytes:
             return
+        evicted = 0
         with self._lock:
             old = self._entries.pop(key, None)
             if old is not None:
@@ -524,6 +555,9 @@ class ChunkCache:
                 _, victim = self._entries.popitem(last=False)
                 self._bytes -= victim.nbytes
                 self.evictions += 1
+                evicted += 1
+        if evicted:
+            self._m_evictions.inc(evicted)
 
     def invalidate(self, path_prefix: str) -> None:
         """Drop cached chunks of datasets at/under ``path_prefix``."""

@@ -1,0 +1,60 @@
+"""Observability plane: request tracing + a unified metrics registry.
+
+The paper's optimisation story was only possible because every lost MB/s
+could be *attributed* to a stage (file locking, collective buffering,
+alignment).  This package gives the TH5 stack the same power at request
+granularity:
+
+``trace``
+    Monotonic-clock :class:`~repro.obs.trace.Span`/:class:`~repro.obs.
+    trace.Tracer` with explicit context handoff across the aggregator /
+    decode / broker worker pools, deterministic 1-in-N sampling, and a
+    near-zero-cost no-op path when disabled (the default).  The wire
+    protocol propagates ``trace_id``/``parent_span_id`` in frame metadata,
+    so one remote request stitches into ONE trace spanning the client
+    round-trip, the broker's queue/schedule/execute/send phases and the
+    decode pipeline's per-chunk fetch/inflate spans.
+
+``metrics``
+    A process-wide registry of named counters/gauges/histograms that
+    unifies the previously ad-hoc accounting (``COPY_COUNTER``,
+    ``READ_COUNTER``, ``FilterStats``, ``ChunkCache``, ``ServiceStats``)
+    behind one thread-safe API.  The existing snapshot dataclasses keep
+    working as views; the registry adds the single pane of glass.
+
+``export``
+    Chrome trace-event JSON (loadable in Perfetto / ``chrome://tracing``),
+    Prometheus-style text exposition, and an ASCII span-tree formatter
+    (used by the broker's slow-request log and ``examples/
+    trace_a_request.py``).
+
+Taxonomy, metric names and formats: ``docs/OBSERVABILITY.md`` (kept in
+lockstep by ``tools/check_docs.py``).
+"""
+
+from .export import (
+    chrome_trace_events,
+    format_span_tree,
+    prometheus_text,
+    write_chrome_trace,
+)
+from .metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry
+from .trace import NOOP_SPAN, Span, SpanContext, Tracer, TRACER, get_tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NOOP_SPAN",
+    "REGISTRY",
+    "Span",
+    "SpanContext",
+    "TRACER",
+    "Tracer",
+    "chrome_trace_events",
+    "format_span_tree",
+    "get_tracer",
+    "prometheus_text",
+    "write_chrome_trace",
+]

@@ -1,0 +1,134 @@
+"""Exporters: Chrome trace-event JSON, Prometheus text, ASCII span trees.
+
+* :func:`chrome_trace_events` / :func:`write_chrome_trace` — the Chrome
+  trace-event format (``{"traceEvents": [...]}`` with ``ph: "X"`` complete
+  events, microsecond ``ts``/``dur``), loadable in Perfetto or
+  ``chrome://tracing``.  Spans from one process share a ``pid``; each
+  recording thread gets its own ``tid`` row, so pool handoff is visible as
+  a trace hopping between rows.
+* :func:`prometheus_text` — ``# TYPE`` + ``name value`` exposition of a
+  :class:`~repro.obs.metrics.MetricsRegistry` collect() (dots mapped to
+  underscores per Prometheus naming rules).
+* :func:`format_span_tree` — the ASCII tree the broker's slow-request log
+  and ``examples/trace_a_request.py`` print.  Spans whose parent is not in
+  the buffer render as roots, so a broker-side tree is printable even
+  while the client's root span is still open on the other side of the
+  socket.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Iterable
+
+from .trace import Span, TRACER, Tracer
+
+
+def chrome_trace_events(spans: Iterable[Span], *, pid: int | None = None) -> list[dict[str, Any]]:
+    """Spans → Chrome trace-event dicts (``ph: "X"``, µs timestamps)."""
+    if pid is None:
+        pid = os.getpid()
+    events: list[dict[str, Any]] = []
+    for s in spans:
+        t1 = s.t1 if s.t1 is not None else s.t0
+        ev: dict[str, Any] = {
+            "name": s.name,
+            "cat": s.name.split(".", 1)[0],
+            "ph": "X",
+            "ts": s.t0 * 1e6,
+            "dur": max(0.0, (t1 - s.t0) * 1e6),
+            "pid": pid,
+            "tid": s.thread,
+        }
+        args: dict[str, Any] = {
+            "trace_id": f"{s.trace_id:#x}",
+            "span_id": s.span_id,
+            "parent_id": s.parent_id,
+        }
+        if s.tags:
+            args.update(s.tags)
+        ev["args"] = args
+        events.append(ev)
+    return events
+
+
+def write_chrome_trace(path: str, spans: Iterable[Span] | None = None, *, tracer: Tracer | None = None) -> int:
+    """Write a Perfetto-loadable trace file; returns the event count.
+
+    With no ``spans``, snapshots (non-destructively) the given tracer
+    (default: the process tracer)."""
+    if spans is None:
+        spans = (tracer or TRACER).snapshot()
+    events = chrome_trace_events(spans)
+    doc = {"traceEvents": events, "displayTimeUnit": "ms"}
+    tmp = f"{path}.tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh)
+    os.replace(tmp, path)
+    return len(events)
+
+
+def prometheus_text(values: dict[str, float] | None = None, *, registry=None) -> str:
+    """Prometheus text exposition of a registry ``collect()`` mapping.
+
+    Dotted names become underscore names (``cache.hits`` →
+    ``cache_hits``); every sample is exposed untyped-numeric with a
+    ``# TYPE ... gauge`` header, which every Prometheus scraper accepts."""
+    if values is None:
+        if registry is None:
+            from .metrics import REGISTRY as registry  # noqa: N813 - late import avoids cycle at module load
+        values = registry.collect()
+    lines: list[str] = []
+    for name in sorted(values):
+        metric = name.replace(".", "_").replace("-", "_")
+        lines.append(f"# TYPE {metric} gauge")
+        v = values[name]
+        if float(v).is_integer():
+            lines.append(f"{metric} {int(v)}")
+        else:
+            lines.append(f"{metric} {v:.9g}")
+    return "\n".join(lines) + "\n"
+
+
+def format_span_tree(spans: Iterable[Span], *, trace_id: int | None = None) -> str:
+    """ASCII tree of one (or every) trace in ``spans``.
+
+    Orphan spans — parent id not present in the buffer — are treated as
+    roots: a broker can print its side of a distributed trace before the
+    client's root span has ended."""
+    spans = [s for s in spans if trace_id is None or s.trace_id == trace_id]
+    if not spans:
+        return "(no spans)"
+    by_id = {s.span_id: s for s in spans}
+    children: dict[int, list[Span]] = {}
+    roots: list[Span] = []
+    for s in spans:
+        if s.parent_id and s.parent_id in by_id:
+            children.setdefault(s.parent_id, []).append(s)
+        else:
+            roots.append(s)
+    for kids in children.values():
+        kids.sort(key=lambda s: s.t0)
+    roots.sort(key=lambda s: (s.trace_id, s.t0))
+
+    lines: list[str] = []
+
+    def emit(s: Span, depth: int, base: float) -> None:
+        t1 = s.t1 if s.t1 is not None else s.t0
+        dur_ms = (t1 - s.t0) * 1e3
+        off_ms = (s.t0 - base) * 1e3
+        tag_s = ""
+        if s.tags:
+            tag_s = "  " + " ".join(f"{k}={v}" for k, v in sorted(s.tags.items()))
+        lines.append(f"{'  ' * depth}{s.name}  +{off_ms:.3f}ms  {dur_ms:.3f}ms{tag_s}")
+        for kid in children.get(s.span_id, ()):
+            emit(kid, depth + 1, base)
+
+    last_trace = None
+    for root in roots:
+        if trace_id is None and root.trace_id != last_trace:
+            lines.append(f"trace {root.trace_id:#x}")
+            last_trace = root.trace_id
+        emit(root, 1 if trace_id is None else 0, root.t0)
+    return "\n".join(lines)

@@ -35,6 +35,7 @@ code paths don't know the service exists.  See ``docs/SERVICE.md``.
 
 from __future__ import annotations
 
+import logging
 import os
 import queue
 import threading
@@ -51,6 +52,30 @@ from repro.core import container as _container
 from repro.core.codecs import codec_by_id
 from repro.core.container import CorruptFileError, TH5Error, TH5File
 from repro.core.aggregation import AggregationConfig
+from repro.obs.export import format_span_tree
+from repro.obs.metrics import (
+    M_SLOW_REQUESTS,
+    M_SVC_ADMITTED,
+    M_SVC_BYTES_SERVED,
+    M_SVC_COMPLETED,
+    M_SVC_DROPPED_CHUNKS,
+    M_SVC_FAILED,
+    M_SVC_INFLIGHT,
+    M_SVC_PUSHED_BYTES,
+    M_SVC_PUSHED_CHUNKS,
+    M_SVC_QUEUE_DEPTH,
+    M_SVC_REJECTED,
+    M_SVC_SUBSCRIBERS,
+    REGISTRY,
+)
+from repro.obs.trace import (
+    SPAN_BROKER_REQUEST,
+    SPAN_EXECUTE,
+    SPAN_PUSH_DELIVER,
+    SPAN_QUEUE_WAIT,
+    SPAN_SCHEDULE,
+    TRACER,
+)
 
 from .catalog import build_catalog
 from repro.core.query import QueryResult
@@ -72,6 +97,10 @@ from .requests import (
 from .sessions import LodWindowSession
 from .stats import ClientStats, LatencyRecorder, ServiceStats
 from .steer import SteeringEndpoint
+
+# slow-request dumps (ServiceConfig.slow_request_s) — a dedicated logger so
+# deployments can route span trees away from the service's own noise
+_slowlog = logging.getLogger("repro.service.slowlog")
 
 
 class AdmissionError(TH5Error):
@@ -131,7 +160,11 @@ class ServiceConfig:
     adjacent-chunk preadv batching in the decode pipeline.
     ``qos_classes``: the :class:`QosClass` set clients can be assigned to
     (``DataService.set_client_class``); ``default_class`` is what new
-    clients get."""
+    clients get.  ``slow_request_s``: end-to-end latency threshold (submit
+    → done, seconds) above which a request is dumped to the
+    ``repro.service.slowlog`` logger — with its full span tree when the
+    request was traced, a phase summary otherwise; ``None`` (default)
+    disables the slow log."""
 
     max_queue: int = 64
     n_workers: int = 4
@@ -139,6 +172,7 @@ class ServiceConfig:
     batch_fetch: bool = True
     qos_classes: tuple[QosClass, ...] = DEFAULT_QOS_CLASSES
     default_class: str = "interactive"
+    slow_request_s: float | None = None
 
     def __post_init__(self) -> None:
         if self.max_queue < 1:
@@ -556,27 +590,41 @@ class ChunkFanout:
                         continue  # outside the window: advance silently
                 else:
                     ilo, ihi = lo, hi
-                arr = self._decode_chunk(feed, ci, rec)
-                rows = arr[ilo - lo : ihi - lo]
-                # QoS token-bucket gate: a rate-limited viewer's pump sleeps
-                # here (drop-oldest then clamps the accumulated lag) — the
-                # writer and every other subscription keep running
-                while True:
-                    wait = svc._push_gate(sub.client)
-                    if wait <= 0:
-                        break
-                    if sub._closed.wait(min(wait, 0.05)):
-                        return
-                push_meta = {
-                    "dataset": feed.name,
-                    "chunk_index": ci,
-                    "row_start": ilo,
-                    "n_rows": ihi - ilo,
-                    "generation": gen,
-                    "seq": sub.pushed,
-                    "dropped": sub.dropped,
-                }
-                if not sub._deliver(push_meta, rows):
+                # one root span per delivery (pumps are long-lived threads:
+                # no request to join, so each push is its own trace)
+                pspan = TRACER.start_trace(SPAN_PUSH_DELIVER)
+                if pspan.trace_id:
+                    pspan.tag("dataset", feed.name).tag("chunk_index", ci).tag(
+                        "client", sub.client
+                    )
+                try:
+                    arr = self._decode_chunk(feed, ci, rec)
+                    rows = arr[ilo - lo : ihi - lo]
+                    # QoS token-bucket gate: a rate-limited viewer's pump
+                    # sleeps here (drop-oldest then clamps the accumulated
+                    # lag) — the writer and every other subscription keep
+                    # running
+                    while True:
+                        wait = svc._push_gate(sub.client)
+                        if wait <= 0:
+                            break
+                        if sub._closed.wait(min(wait, 0.05)):
+                            return
+                    push_meta = {
+                        "dataset": feed.name,
+                        "chunk_index": ci,
+                        "row_start": ilo,
+                        "n_rows": ihi - ilo,
+                        "generation": gen,
+                        "seq": sub.pushed,
+                        "dropped": sub.dropped,
+                    }
+                    delivered = sub._deliver(push_meta, rows)
+                    if pspan.trace_id:
+                        pspan.tag("nbytes", rows.nbytes).tag("delivered", delivered)
+                finally:
+                    pspan.end()
+                if not delivered:
                     return  # consumer gone: the finally block cleans up
                 sub.pushed += 1
                 svc._push_account(sub.client, rows.nbytes)
@@ -587,7 +635,17 @@ class ChunkFanout:
 
 
 class _Job:
-    __slots__ = ("client", "request", "future", "t_submit", "t_start", "t_deadline")
+    __slots__ = (
+        "client",
+        "request",
+        "future",
+        "t_submit",
+        "t_start",
+        "t_exec",
+        "t_deadline",
+        "ctx",
+        "root",
+    )
 
     def __init__(self, client: str, request: Any, deadline_s: float | None = None):
         self.client = client
@@ -595,8 +653,15 @@ class _Job:
         self.future: "Future[ServiceResponse]" = Future()
         self.t_submit = time.perf_counter()
         self.t_start = 0.0
+        self.t_exec = 0.0
         # absolute expiry (perf_counter domain); None = no deadline
         self.t_deadline = self.t_submit + deadline_s if deadline_s else None
+        # trace context the phase spans parent under (adopted from the wire
+        # for remote requests, or a fresh broker.request root in-process);
+        # `root` is broker-owned and ended by _finish_job_obs — a wire-
+        # adopted context has NO root here (the client ends its own span)
+        self.ctx = None
+        self.root = None
 
 
 class _Sched:
@@ -673,12 +738,34 @@ class DataService:
         self._pushed_bytes = 0
         self._dropped_chunks = 0
         self._my_subs: set[Subscription] = set()
+        # unified telemetry: the broker keeps its counters under _cv (as
+        # before), and reports them into the process registry at read time
+        # via a collector — collect() runs collectors unlocked, so taking
+        # _cv here is safe (see MetricsRegistry.collect)
+        self._metrics_collector = self._collect_metrics
+        REGISTRY.register_collector(self._metrics_collector)
         self._workers = [
             threading.Thread(target=self._worker, name=f"th5-service-{i}", daemon=True)
             for i in range(self.config.n_workers)
         ]
         for w in self._workers:
             w.start()
+
+    def _collect_metrics(self) -> dict[str, float]:
+        with self._cv:
+            return {
+                M_SVC_QUEUE_DEPTH: float(self._queued),
+                M_SVC_INFLIGHT: float(self._inflight),
+                M_SVC_ADMITTED: float(self._admitted),
+                M_SVC_REJECTED: float(self._rejected),
+                M_SVC_COMPLETED: float(self._completed),
+                M_SVC_FAILED: float(self._failed),
+                M_SVC_BYTES_SERVED: float(self._bytes_served),
+                M_SVC_SUBSCRIBERS: float(self._n_subs),
+                M_SVC_PUSHED_CHUNKS: float(self._pushed_chunks),
+                M_SVC_PUSHED_BYTES: float(self._pushed_bytes),
+                M_SVC_DROPPED_CHUNKS: float(self._dropped_chunks),
+            }
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -695,6 +782,7 @@ class DataService:
             self.unsubscribe(sub)
         for w in self._workers:
             w.join()
+        REGISTRY.unregister_collector(self._metrics_collector)
         _release_shared(self._key)
 
     def __enter__(self) -> "DataService":
@@ -712,7 +800,7 @@ class DataService:
     # -- submission ----------------------------------------------------------
 
     def submit(
-        self, client: str, request: Any, *, deadline_s: float | None = None
+        self, client: str, request: Any, *, deadline_s: float | None = None, trace=None
     ) -> "Future[ServiceResponse]":
         """Admit one request for ``client``.  Raises :class:`AdmissionError`
         when the bounded queue is full (backpressure) — nothing is queued in
@@ -725,8 +813,23 @@ class DataService:
         shed with a typed :class:`~repro.service.requests.RetryableError`
         (it never executed — resubmitting is safe) instead of serving a
         stale interactive read.  The deadline is pre-execution only: a job
-        that starts executing always runs to completion."""
+        that starts executing always runs to completion.
+
+        ``trace`` is an optional :class:`~repro.obs.trace.SpanContext` the
+        request's phase spans (queue_wait/schedule/execute) parent under —
+        the transport passes the client's wire-propagated context here so
+        the whole round-trip is ONE trace.  Without it, an in-process
+        submit opens its own ``broker.request`` root (subject to the
+        tracer's sampling)."""
         job = _Job(str(client), request, deadline_s)
+        if trace is not None:
+            job.ctx = trace
+        elif TRACER.enabled and not isinstance(request, StatsQuery):
+            root = TRACER.start_trace(SPAN_BROKER_REQUEST)
+            if root.trace_id:
+                root.tag("client", job.client).tag("type", type(request).__name__)
+                job.ctx = root.context
+                job.root = root
         if isinstance(request, StatsQuery):
             with self._cv:
                 if self._shutdown:  # same contract as every other request
@@ -979,27 +1082,37 @@ class DataService:
                     self._inflight -= 1
                     self._failed += 1
                     self._account_locked(job, None)
-                job.future.set_exception(
-                    RetryableError(
-                        f"request deadline expired after "
-                        f"{job.t_start - job.t_submit:.3f}s in queue"
-                        f" (deadline {job.t_deadline - job.t_submit:.3f}s)"
-                    )
+                err = RetryableError(
+                    f"request deadline expired after "
+                    f"{job.t_start - job.t_submit:.3f}s in queue"
+                    f" (deadline {job.t_deadline - job.t_submit:.3f}s)"
                 )
+                self._finish_job_obs(job, None, err)
+                job.future.set_exception(err)
                 continue
+            job.t_exec = time.perf_counter()
             try:
-                resp = self._execute(job)
+                if job.ctx is not None:
+                    # explicit handoff: the submitting thread's context
+                    # becomes ambient on THIS worker so pipeline spans
+                    # (decode.gather & children) parent correctly
+                    with TRACER.use(job.ctx):
+                        resp = self._execute(job)
+                else:
+                    resp = self._execute(job)
             except BaseException as e:
                 with self._cv:
                     self._inflight -= 1
                     self._failed += 1
                     self._account_locked(job, None)
+                self._finish_job_obs(job, None, e)
                 job.future.set_exception(e)
             else:
                 with self._cv:
                     self._inflight -= 1
                     self._completed += 1
                     self._account_locked(job, resp)
+                self._finish_job_obs(job, resp, None)
                 job.future.set_result(resp)
 
     def _client(self, cid: str) -> ClientStats:
@@ -1034,6 +1147,61 @@ class DataService:
         sched = self._sched.get(job.client)
         if sched is not None and sched.cls.rate_bytes_per_s is not None:
             sched.tokens -= float(max(resp.nbytes if resp is not None else 0, 1))
+
+    def _finish_job_obs(
+        self, job: _Job, resp: ServiceResponse | None, error: BaseException | None
+    ) -> None:
+        """Post-completion observability, OUTSIDE the broker lock: turn the
+        timestamps the job already carries into retroactive phase spans
+        (queue_wait / schedule / execute — zero extra clock reads beyond
+        the one ``t_exec`` stamp), end a broker-owned root, and trip the
+        slow-request log.  Failures here must never fail the request."""
+        t_done = time.perf_counter()
+        ctx = job.ctx
+        if ctx is not None and TRACER.enabled:
+            qtags = {"shed": True} if (error is not None and not job.t_exec) else None
+            TRACER.record(SPAN_QUEUE_WAIT, ctx, job.t_submit, job.t_start, qtags)
+            if job.t_exec:
+                TRACER.record(SPAN_SCHEDULE, ctx, job.t_start, job.t_exec)
+                tags: dict[str, Any] = {"type": type(job.request).__name__}
+                if resp is not None:
+                    tags["nbytes"] = resp.nbytes
+                    tags["cache_hits"] = resp.chunk_hits
+                    tags["cache_misses"] = resp.chunk_misses
+                if error is not None:
+                    tags["error"] = type(error).__name__
+                TRACER.record(SPAN_EXECUTE, ctx, job.t_exec, t_done, tags)
+            if job.root is not None:
+                job.root.end()
+        slow = self.config.slow_request_s
+        if slow is not None and (t_done - job.t_submit) >= slow:
+            try:
+                self._log_slow(job, resp, error, t_done)
+            except Exception:  # pragma: no cover - logging must not fail jobs
+                pass
+
+    def _log_slow(
+        self, job: _Job, resp: ServiceResponse | None, error: BaseException | None, t_done: float
+    ) -> None:
+        REGISTRY.counter(M_SLOW_REQUESTS).inc()
+        total_ms = (t_done - job.t_submit) * 1e3
+        head = (
+            f"slow request: {type(job.request).__name__} client={job.client!r}"
+            f" took {total_ms:.1f}ms (threshold"
+            f" {self.config.slow_request_s * 1e3:.1f}ms)"
+        )
+        if error is not None:
+            head += f" error={type(error).__name__}"
+        if job.ctx is not None:
+            spans = TRACER.spans_for(job.ctx.trace_id)
+            if spans:
+                _slowlog.warning("%s\n%s", head, format_span_tree(spans))
+                return
+        # untraced (or span buffer already evicted): phase summary from the
+        # timestamps the job carries anyway
+        queued_ms = (job.t_start - job.t_submit) * 1e3 if job.t_start else 0.0
+        exec_ms = (t_done - job.t_exec) * 1e3 if job.t_exec else 0.0
+        _slowlog.warning("%s  queued=%.1fms exec=%.1fms", head, queued_ms, exec_ms)
 
     # -- execution -----------------------------------------------------------
 
@@ -1147,6 +1315,9 @@ class DataService:
                 sched = self._sched.get(cid)
                 cls_name = sched.cls.name if sched else self.config.default_class
                 throttled = sched.throttled if sched else 0
+                # one sort per recorder per snapshot (percentiles), not one
+                # per quantile — this all runs under the broker lock
+                p50, p90, p99 = rec.percentiles(50, 90, 99)
                 clients[cid] = ClientStats(
                     requests=cs.requests,
                     bytes_served=cs.bytes_served,
@@ -1155,8 +1326,9 @@ class DataService:
                     chunk_misses=cs.chunk_misses,
                     qos_class=cls_name,
                     throttled=throttled,
-                    p50_ms=rec.percentile(50) * 1e3,
-                    p99_ms=rec.percentile(99) * 1e3,
+                    p50_ms=p50 * 1e3,
+                    p90_ms=p90 * 1e3,
+                    p99_ms=p99 * 1e3,
                 )
                 agg = qos.get(cls_name)
                 if agg is not None:
@@ -1164,6 +1336,7 @@ class DataService:
                     agg["requests"] += cs.requests
                     agg["bytes_served"] += cs.bytes_served
                     agg["throttled"] += throttled
+            gp50, gp90, gp99 = self._latency.percentiles(50, 90, 99)
             return ServiceStats(
                 queue_depth=self._queued,
                 max_queue_depth=self._max_queue_depth,
@@ -1183,8 +1356,9 @@ class DataService:
                 pushed_bytes=self._pushed_bytes,
                 dropped_chunks=self._dropped_chunks,
                 requests_by_type=dict(self._by_type),
-                p50_ms=self._latency.percentile(50) * 1e3,
-                p99_ms=self._latency.percentile(99) * 1e3,
+                p50_ms=gp50 * 1e3,
+                p90_ms=gp90 * 1e3,
+                p99_ms=gp99 * 1e3,
                 mean_ms=self._latency.mean() * 1e3,
                 cache=cache,
                 qos=qos,

@@ -56,6 +56,7 @@ from concurrent.futures import Future
 from typing import Iterable, Sequence
 
 from repro.core.container import TH5Error
+from repro.obs.trace import SPAN_CLIENT_REQUEST, TRACER
 
 from . import wire
 from .requests import (
@@ -243,7 +244,24 @@ class RemoteDataService:
         if deadline_s:
             meta["deadline_s"] = float(deadline_s)
         req_id = next(self._req_ids)
+        span = TRACER.start_trace(SPAN_CLIENT_REQUEST)
+        if span.trace_id:
+            span.tag("client", client).tag("type", type(request).__name__).tag("req_id", req_id)
+            # the server adopts this pair, stitching its broker/decode
+            # spans into this trace; replay re-sends meta verbatim, so
+            # retried frames stay in-trace
+            wire.put_trace(meta, span.trace_id, span.span_id)
         fut: "Future[ServiceResponse]" = Future()
+        if span.trace_id:
+
+            def _end_span(f, sp=span):
+                err = f.exception()
+                sp.tag("ok", err is None)
+                if err is not None:
+                    sp.tag("error", type(err).__name__)
+                sp.end()
+
+            fut.add_done_callback(_end_span)
         replayable = self._reconnect and not isinstance(request, SteeringRequest)
         with self._pending_lock:
             if self._closed:

@@ -28,6 +28,10 @@ class LatencyRecorder:
         self._samples: list[float] = []
         self._seen = 0
         self._lcg = seed & 0x7FFFFFFF or 1
+        # sorted view, built lazily and reused until the next add() — a
+        # stats() snapshot asking for p50/p90/p99 sorts ONCE, not three
+        # times per client under the broker lock
+        self._sorted: list[float] | None = None
 
     def _rand(self, n: int) -> int:
         # Lehmer LCG (minstd) — cheap, deterministic, lock-held safe
@@ -36,6 +40,7 @@ class LatencyRecorder:
 
     def add(self, sample_s: float) -> None:
         self._seen += 1
+        self._sorted = None  # any mutation invalidates the cached order
         if len(self._samples) < self.capacity:
             self._samples.append(float(sample_s))
         elif self._rand(self._seen) < self.capacity:
@@ -45,13 +50,32 @@ class LatencyRecorder:
     def n(self) -> int:
         return self._seen
 
+    def _ordered(self) -> list[float]:
+        if self._sorted is None:
+            self._sorted = sorted(self._samples)
+        return self._sorted
+
     def percentile(self, q: float) -> float:
-        """q in [0, 100]; 0.0 when no samples yet (nearest-rank method)."""
+        """q in [0, 100]; 0.0 when no samples yet (nearest-rank method).
+        Read-only: never mutates the reservoir (the sorted view is a
+        cached copy, not an in-place sort)."""
         if not self._samples:
             return 0.0
-        ordered = sorted(self._samples)
+        ordered = self._ordered()
         rank = max(0, min(len(ordered) - 1, int(round(q / 100.0 * (len(ordered) - 1)))))
         return ordered[rank]
+
+    def percentiles(self, *qs: float) -> tuple[float, ...]:
+        """Several quantiles off ONE sort — what ``DataService.stats()``
+        uses so a snapshot costs one O(n log n) per recorder, not one per
+        requested percentile."""
+        if not self._samples:
+            return tuple(0.0 for _ in qs)
+        ordered = self._ordered()
+        top = len(ordered) - 1
+        return tuple(
+            ordered[max(0, min(top, int(round(q / 100.0 * top))))] for q in qs
+        )
 
     def mean(self) -> float:
         return sum(self._samples) / len(self._samples) if self._samples else 0.0
@@ -66,8 +90,8 @@ class ClientStats:
     this client's admission failures; ``chunk_hits`` / ``chunk_misses`` are
     the shared-cache probes attributed to this client's gathers (so N
     viewers of one run can each see their own hit rate against the ONE
-    shared cache); ``p50_ms`` / ``p99_ms`` are this client's end-to-end
-    request latencies.  ``qos_class`` is the client's scheduling class
+    shared cache); ``p50_ms`` / ``p90_ms`` / ``p99_ms`` are this client's
+    end-to-end request latencies.  ``qos_class`` is the client's scheduling class
     (``DataService.set_client_class``); ``throttled`` counts scheduler
     passes that skipped this client because its token bucket was in debt
     (advisory — a measure of how hard the rate limit is biting, not a
@@ -86,6 +110,7 @@ class ClientStats:
     throttled: int = 0
     retries: int = 0
     p50_ms: float = 0.0
+    p90_ms: float = 0.0
     p99_ms: float = 0.0
 
     @property
@@ -109,8 +134,10 @@ class ServiceStats:
     through this service (gauge); ``pushed_chunks`` / ``pushed_bytes`` the
     subscription fan-out's delivered totals and ``dropped_chunks`` the
     chunks its ``drop-oldest`` policy skipped for lagging viewers
-    (lossless subscribers never contribute here); ``p50_ms`` / ``p99_ms`` / ``mean_ms`` end-to-end request
-    latency percentiles over the reservoir; ``cache`` the SHARED chunk
+    (lossless subscribers never contribute here); ``p50_ms`` / ``p90_ms``
+    / ``p99_ms`` / ``mean_ms`` end-to-end request latency percentiles over
+    the reservoir (one shared sort per snapshot —
+    :meth:`LatencyRecorder.percentiles`); ``cache`` the SHARED chunk
     cache's counters (one cache per file, all clients); ``qos`` the
     per-class QoS aggregates (one entry per configured
     :class:`~repro.service.broker.QosClass`: ``weight``,
@@ -143,6 +170,7 @@ class ServiceStats:
     pruned_ratio: float = 0.0
     requests_by_type: dict[str, int] = field(default_factory=dict)
     p50_ms: float = 0.0
+    p90_ms: float = 0.0
     p99_ms: float = 0.0
     mean_ms: float = 0.0
     cache: dict[str, Any] = field(default_factory=dict)

@@ -43,6 +43,8 @@ import struct
 import threading
 import time
 
+from repro.obs.trace import SPAN_WIRE_SEND, TRACER
+
 from . import wire
 from .broker import AdmissionError, DataService
 from .requests import SubscribeRequest
@@ -166,9 +168,12 @@ class _Conn:
             self._known_clients.add(client)
             svc.set_client_class(client, self.qos)
         deadline = frame.meta.get("deadline_s")
+        # adopt the client's trace context (if sampled there) so the
+        # broker's phase spans join the client's trace_id
+        tctx = wire.get_trace(frame.meta) if TRACER.enabled else None
         try:
             fut = svc.submit(
-                client, request, deadline_s=float(deadline) if deadline else None
+                client, request, deadline_s=float(deadline) if deadline else None, trace=tctx
             )
         except AdmissionError as e:
             self._put(
@@ -188,9 +193,11 @@ class _Conn:
             return
         with self._inflight_lock:
             self.inflight += 1
-        fut.add_done_callback(lambda f, rid=req_id, cid=client: self._complete(rid, cid, f))
+        fut.add_done_callback(
+            lambda f, rid=req_id, cid=client, tc=tctx: self._complete(rid, cid, f, tc)
+        )
 
-    def _complete(self, req_id: int, client: str, fut) -> None:
+    def _complete(self, req_id: int, client: str, fut, tctx=None) -> None:
         """Future→frame, on whichever thread completed the future (a
         service worker).  Fast path: if the wire is uncontended, send
         right here and skip the sender-thread handoff (worth ~a thread
@@ -208,7 +215,18 @@ class _Conn:
             except TypeError as e:  # pragma: no cover - un-wireable value type
                 self._put(wire.KIND_ERROR, req_id, wire.encode_error(e), None)
                 return
-            self._put(wire.KIND_OK, req_id, wire.response_meta(client, resp, desc), payload)
+            if tctx is not None and TRACER.enabled:
+                t0 = time.perf_counter()
+                self._put(wire.KIND_OK, req_id, wire.response_meta(client, resp, desc), payload)
+                TRACER.record(
+                    SPAN_WIRE_SEND,
+                    tctx,
+                    t0,
+                    time.perf_counter(),
+                    {"req_id": req_id, "nbytes": resp.nbytes},
+                )
+            else:
+                self._put(wire.KIND_OK, req_id, wire.response_meta(client, resp, desc), payload)
         finally:
             with self._inflight_lock:
                 self.inflight -= 1

@@ -214,6 +214,41 @@ def recv_frame(sock) -> Frame | None:
 # request cost).
 
 
+# -- trace propagation -------------------------------------------------------
+#
+# A sampled client request carries ``meta["trace"] = [trace_id, span_id]``;
+# the server adopts the pair so its broker/decode spans join the client's
+# trace.  The key rides REQUEST frame meta only — `decode_request` ignores
+# unknown keys, so pre-trace peers interoperate unchanged (and replayed
+# frames re-send the original pair verbatim, keeping retries in-trace).
+
+TRACE_KEY = "trace"
+
+
+def put_trace(meta: dict, trace_id: int, span_id: int) -> dict:
+    """Stamp the trace context onto request ``meta`` (mutates and returns)."""
+    meta[TRACE_KEY] = [int(trace_id), int(span_id)]
+    return meta
+
+
+def get_trace(meta: dict):
+    """→ :class:`~repro.obs.trace.SpanContext` | None from frame meta.
+    Malformed values are dropped, never raised — tracing must not be able
+    to fail a request."""
+    pair = meta.get(TRACE_KEY)
+    if not isinstance(pair, (list, tuple)) or len(pair) != 2:
+        return None
+    try:
+        trace_id, span_id = int(pair[0]), int(pair[1])
+    except (TypeError, ValueError):
+        return None
+    if trace_id <= 0:
+        return None
+    from repro.obs.trace import SpanContext
+
+    return SpanContext(trace_id, span_id)
+
+
 def encode_request(client: str, req) -> tuple[dict, Any]:
     """→ ``(meta, payload)``.  Raises TypeError for requests that cannot
     cross a process boundary (e.g. a gated PingQuery)."""

@@ -332,6 +332,106 @@ def test_torn_stream_boundary_cuts():
             b.close()
 
 
+# -- trace-context propagation (repro.obs stitching rides frame meta) ----------
+
+
+def test_trace_meta_roundtrips_through_request_frame():
+    """A traced request's (trace_id, parent_span_id) pair must survive the
+    full encode → frame → decode path: `decode_request` still yields the
+    exact request (unknown meta keys ignored), and `get_trace` recovers
+    the context on the server side."""
+    req = WindowQuery(dataset=DS_U, rows=(3, 5, 8))
+    meta, payload = wire.encode_request("viewer", req)
+    wire.put_trace(meta, 0xBEEF_CAFE, 41)
+    a, b = socket.socketpair()
+    try:
+        wire.send_frame(a, wire.KIND_REQUEST, 9, meta, payload)
+        f = wire.recv_frame(b)
+    finally:
+        for s in (a, b):
+            s.close()
+    client, back = wire.decode_request(f.meta, f.payload)
+    assert (client, back) == ("viewer", req)
+    ctx = wire.get_trace(f.meta)
+    assert (ctx.trace_id, ctx.span_id) == (0xBEEF_CAFE, 41)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    trace_id=st.integers(min_value=1, max_value=2**63 - 1),
+    span_id=st.integers(min_value=0, max_value=2**31 - 1),
+    req_id=st.integers(min_value=0, max_value=2**63 - 1),
+)
+def test_trace_meta_roundtrip_property(trace_id, span_id, req_id):
+    meta, payload = wire.encode_request("cli", HyperslabQuery(DS_U, 0, 4))
+    wire.put_trace(meta, trace_id, span_id)
+    a, b = socket.socketpair()
+    try:
+        wire.send_frame(a, wire.KIND_REQUEST, req_id, meta, payload)
+        f = wire.recv_frame(b)
+    finally:
+        for s in (a, b):
+            s.close()
+    ctx = wire.get_trace(f.meta)
+    assert (ctx.trace_id, ctx.span_id) == (trace_id, span_id)
+    assert f.req_id == req_id
+
+
+def _captured_traced_request_bytes() -> bytes:
+    """On-wire bytes of a REQUEST frame carrying trace meta, from the real
+    encoder — the torn-stream property below cuts THESE bytes."""
+    meta, payload = wire.encode_request(
+        "viewer", WindowQuery(dataset=DS_U, rows=tuple(range(16)))
+    )
+    wire.put_trace(meta, 0x1234_5678_9ABC, 17)
+    a, b = socket.socketpair()
+    try:
+        wire.send_frame(a, wire.KIND_REQUEST, 5, meta, payload)
+        a.close()
+        blob = b""
+        while True:
+            part = b.recv(1 << 16)
+            if not part:
+                return blob
+            blob += part
+    finally:
+        b.close()
+
+
+_TRACED_FRAME_BYTES = _captured_traced_request_bytes()
+
+
+@settings(max_examples=40, deadline=None)
+@given(cut=st.integers(min_value=1, max_value=len(_TRACED_FRAME_BYTES) - 1))
+def test_torn_traced_request_any_cut_raises_wiredisconnect(cut):
+    """Trace meta fattens the JSON blob but must not change torn-stream
+    semantics: a peer dying at any byte of a traced REQUEST still raises
+    WireDisconnect, never yields garbage or a clean EOF."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(_TRACED_FRAME_BYTES[:cut])
+        a.close()
+        with pytest.raises(WireDisconnect):
+            wire.recv_frame(b)
+    finally:
+        b.close()
+
+
+def test_intact_traced_request_decodes_after_torn_attempts():
+    """The whole traced frame, delivered intact, round-trips: the trace
+    pair and the request both come back exact."""
+    a, b = socket.socketpair()
+    try:
+        a.sendall(_TRACED_FRAME_BYTES)
+        a.close()
+        f = wire.recv_frame(b)
+    finally:
+        b.close()
+    client, req = wire.decode_request(f.meta, f.payload)
+    assert client == "viewer" and req.rows == tuple(range(16))
+    assert wire.get_trace(f.meta) == (0x1234_5678_9ABC, 17)
+
+
 def _captured_push_frame_bytes() -> bytes:
     """The exact on-wire bytes of one representative KIND_PUSH frame, as
     the transport's subscription sink builds it: push metadata + an

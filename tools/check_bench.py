@@ -52,6 +52,7 @@ SMOKE_COMMANDS = [
     ("benchmarks/recovery.py", ["--smoke"]),
     ("benchmarks/streaming.py", ["--smoke"]),
     ("benchmarks/query.py", ["--smoke"]),
+    ("benchmarks/observability.py", ["--smoke"]),
 ]
 FULL_COMMANDS = [
     ("benchmarks/io_bandwidth.py", []),
@@ -61,6 +62,7 @@ FULL_COMMANDS = [
     ("benchmarks/recovery.py", []),
     ("benchmarks/streaming.py", []),
     ("benchmarks/query.py", []),
+    ("benchmarks/observability.py", []),
 ]
 
 
@@ -360,6 +362,30 @@ def build_checks() -> list[dict]:
                 kind="baseline",
                 get=lambda d: _get(d, "query", "query_MBps"),
                 scale=lambda d: (_get(d, "query", "n_chunks"), _get(d, "query", "matches")),
+            ),
+        ]
+    )
+    # -- observability (the `obs` section) ---------------------------------
+    checks.extend(
+        [
+            dict(
+                # PR 9's acceptance floor: fully-enabled tracing (every
+                # request sampled, full span trees) keeps >= 95% of the
+                # untraced serve throughput — scale-free by construction
+                # (the ratio compares the same workload against itself)
+                name="obs.traced_over_untraced >= 0.95 (tracing overhead <= 5%)",
+                kind="floor",
+                get=lambda d: _get(d, "obs", "traced_over_untraced"),
+                limit=0.95,
+            ),
+            dict(
+                # the traced side of the ratio must actually have traced:
+                # zero spans would make the overhead number vacuous
+                name="obs: traced runs recorded spans",
+                kind="invariant",
+                check=lambda d: (
+                    _get(d, "obs") is None or _get(d, "obs", "spans_per_run") > 0
+                ),
             ),
         ]
     )

@@ -17,7 +17,11 @@ installed):
   * the wire protocol section of ``docs/SERVICE.md`` names every frame
     kind (``KIND_*``) and the exact header struct format of ``wire.py``,
     every ``QosClass`` field of ``broker.py``, and the transport classes
-    (``ServiceServer`` / ``RemoteDataService``) appear in the docs.
+    (``ServiceServer`` / ``RemoteDataService``) appear in the docs;
+  * ``docs/OBSERVABILITY.md`` documents every span name (the ``SPAN_*``
+    constants of ``obs/trace.py``) and every metric name (the ``M_*``
+    constants of ``obs/metrics.py``), and ``docs/ARCHITECTURE.md``
+    carries the trace-path diagram.
 
 Exit status 1 with a list of misses on drift.
 """
@@ -37,9 +41,12 @@ SERVICE_REQUESTS = ROOT / "src" / "repro" / "service" / "requests.py"
 SERVICE_WIRE = ROOT / "src" / "repro" / "service" / "wire.py"
 SERVICE_BROKER = ROOT / "src" / "repro" / "service" / "broker.py"
 QUERY = ROOT / "src" / "repro" / "core" / "query.py"
+OBS_TRACE = ROOT / "src" / "repro" / "obs" / "trace.py"
+OBS_METRICS = ROOT / "src" / "repro" / "obs" / "metrics.py"
 SPEC = ROOT / "docs" / "FORMAT.md"
 ARCH = ROOT / "docs" / "ARCHITECTURE.md"
 SERVICE_DOC = ROOT / "docs" / "SERVICE.md"
+OBS_DOC = ROOT / "docs" / "OBSERVABILITY.md"
 
 
 def dataclass_fields(tree: ast.Module, class_name: str, where: Path = CONTAINER) -> list[str]:
@@ -62,9 +69,25 @@ def module_constant(tree: ast.Module, name: str):
     raise SystemExit(f"check_docs: constant {name} not found")
 
 
+def prefixed_constants(tree: ast.Module, prefix: str) -> dict[str, str]:
+    """Top-level ``PREFIX_* = "literal"`` string assignments, by name."""
+    out: dict[str, str] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id.startswith(prefix):
+                try:
+                    val = ast.literal_eval(node.value)
+                except ValueError:
+                    continue
+                if isinstance(val, str):
+                    out[tgt.id] = val
+    return out
+
+
 def main() -> int:
     missing: list[str] = []
-    for p in (SPEC, ARCH, SERVICE_DOC):
+    for p in (SPEC, ARCH, SERVICE_DOC, OBS_DOC):
         if not p.exists():
             print(f"check_docs: {p.relative_to(ROOT)} does not exist")
             return 1
@@ -166,7 +189,32 @@ def main() -> int:
     if "## Failure modes" not in service_doc:
         missing.append('SERVICE.md: "## Failure modes" section')
 
+    # -- observability: span taxonomy + metric name registry ---------------
+    obs_doc = OBS_DOC.read_text(encoding="utf-8")
+    ttree = ast.parse(OBS_TRACE.read_text(encoding="utf-8"))
+    spans = prefixed_constants(ttree, "SPAN_")
+    if not spans:
+        missing.append("obs/trace.py: no SPAN_* constants found (taxonomy moved?)")
+    for const, value in spans.items():
+        if f"`{value}`" not in obs_doc:
+            missing.append(f"OBSERVABILITY.md: span name `{value}` ({const})")
+    mtree = ast.parse(OBS_METRICS.read_text(encoding="utf-8"))
+    metric_names = prefixed_constants(mtree, "M_")
+    if not metric_names:
+        missing.append("obs/metrics.py: no M_* constants found (registry moved?)")
+    for const, value in metric_names.items():
+        if f"`{value}`" not in obs_doc:
+            missing.append(f"OBSERVABILITY.md: metric name `{value}` ({const})")
+    for surface in ("Chrome trace", "Perfetto", "prometheus_text", "slow_request_s"):
+        if surface not in obs_doc:
+            missing.append(f"OBSERVABILITY.md: must cover {surface!r}")
+
     arch = ARCH.read_text(encoding="utf-8")
+    if "OBSERVABILITY.md" not in arch or "trace_id" not in arch:
+        missing.append(
+            "ARCHITECTURE.md: trace-path diagram (must link OBSERVABILITY.md "
+            "and show trace_id crossing the wire)"
+        )
     for name in (
         "DataService",
         "SteeringEndpoint",
@@ -185,8 +233,8 @@ def main() -> int:
             print(f"  - {m}")
         return 1
     print(
-        "check_docs: docs/FORMAT.md and docs/SERVICE.md are in lockstep with "
-        "container.py/codecs.py/service"
+        "check_docs: docs/FORMAT.md, docs/SERVICE.md and docs/OBSERVABILITY.md "
+        "are in lockstep with container.py/codecs.py/service/obs"
     )
     return 0
 
