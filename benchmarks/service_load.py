@@ -30,11 +30,21 @@ client, results written to the ``serve_wire`` section (the in-process run
 keeps ``serve``) — the tracked claim there is wire throughput at the max
 client count ≥ 0.5× the committed in-process aggregate.
 
+With ``--transport shard`` the traffic instead hits a sharded SN/DN
+cluster (:class:`~repro.service.ServiceFrontNode` routing over N
+data-node subprocesses): the sweep is over the **data-node count** at a
+fixed client count, written to the ``serve_sharded`` section.  The bench
+itself verifies bit-identity against a single-process broker first (the
+``bit_identical`` flag ``tools/check_bench.py`` gates on) and records
+``cpu_count`` — the DN-scaling floor (max DNs ≥ 1.3× 1 DN) only means
+something on a multi-core box, so the gate is cpu-guarded.
+
 Run::
 
     PYTHONPATH=src python benchmarks/service_load.py           # full
     PYTHONPATH=src python benchmarks/service_load.py --smoke   # CI seconds
     PYTHONPATH=src python benchmarks/service_load.py --transport socket
+    PYTHONPATH=src python benchmarks/service_load.py --transport shard
 """
 
 from __future__ import annotations
@@ -55,12 +65,14 @@ from repro.service import (
     HyperslabQuery,
     RemoteDataService,
     ServiceConfig,
+    ServiceFrontNode,
     ServiceServer,
+    WindowQuery,
 )
 
 BENCH_JSON = "BENCH_io.json"
 STEP_GROUP = "/simulation/step_00000000/state"
-SCHEMA = 9
+SCHEMA = 10
 
 # The serve path is GIL-bound on CI-class boxes: more workers than cores
 # just churns the GIL (measured on the 2-core trajectory box: 8-client
@@ -117,20 +129,42 @@ def run_load(
     passes: int = 2,
     window_frac: int = 2,
     transport: str = "inprocess",
+    n_nodes: int = 1,
 ) -> dict:
     """One fresh service (cold shared cache) under ``n_clients`` closed-loop
     clients replaying the SAME window schedule.  ``transport="socket"``
     serves the broker over a Unix socket and gives every client thread its
     own :class:`RemoteDataService` connection — the client loop itself is
-    identical (same API either way)."""
+    identical (same API either way).  ``transport="shard"`` spawns
+    ``n_nodes`` data-node subprocesses behind a routing front node served
+    on one socket (fresh processes per run: the sharded cache space starts
+    cold like every other row)."""
     with CheckpointManager(path, create=False) as probe:
         rows = probe.file.meta(f"{STEP_GROUP}/params.w").shape[0]
     win = max(rows // window_frac, 1)
     windows = [(lo, min(lo + win, rows)) for lo in range(0, rows, win)]
     cfg = ServiceConfig(n_workers=n_workers, max_queue=max_queue)
     with contextlib.ExitStack() as stack:
-        svc = stack.enter_context(DataService(path, cfg))
-        if transport == "socket":
+        if transport == "shard":
+            run_dir = stack.enter_context(
+                tempfile.TemporaryDirectory(prefix="dn", dir=os.path.dirname(path))
+            )
+            fn = ServiceFrontNode.spawn(
+                path, n_nodes, run_dir,
+                workers=n_workers, max_queue=max_queue,
+                config=ServiceConfig(n_workers=n_workers, max_queue=max_queue),
+            )
+            stack.callback(fn.close)
+            server = ServiceServer(fn, path + f".sn{n_nodes}.sock")
+            stack.callback(server.close)
+            handles = [
+                RemoteDataService(server.address) for _ in range(n_clients)
+            ]
+            for h in reversed(handles):
+                stack.callback(h.close)
+            read_stats = handles[0].stats
+        elif transport == "socket":
+            svc = stack.enter_context(DataService(path, cfg))
             server = ServiceServer(svc, path + ".sock")
             stack.callback(server.close)
             handles = [
@@ -140,6 +174,7 @@ def run_load(
                 stack.callback(h.close)
             read_stats = handles[0].stats  # over the wire (StatsQuery)
         elif transport == "inprocess":
+            svc = stack.enter_context(DataService(path, cfg))
             handles = [svc] * n_clients
             read_stats = svc.stats
         else:
@@ -180,6 +215,107 @@ def run_load(
         "rejected": st.rejected,
         "max_queue_depth": st.max_queue_depth,
     }
+
+
+def _write_section(json_path: str | None, section: str, summary: dict, out) -> None:
+    """Merge one section into the bench JSON (other sections untouched)."""
+    if not json_path:
+        return
+    doc = {}
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError):
+            doc = {}
+    doc.update({"schema": SCHEMA, "generated_unix": time.time(), section: summary})
+    with open(json_path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+    out(f"wrote {json_path}")
+
+
+def _verify_shard_identity(path: str, n_nodes: int, rows: int) -> bool:
+    """Representative reads through a fresh ``n_nodes`` cluster vs the
+    single-process broker — the ``bit_identical`` flag of the
+    ``serve_sharded`` section (gated by ``tools/check_bench.py``)."""
+    with contextlib.ExitStack() as stack:
+        run_dir = stack.enter_context(
+            tempfile.TemporaryDirectory(prefix="dnv", dir=os.path.dirname(path))
+        )
+        fn = ServiceFrontNode.spawn(path, n_nodes, run_dir)
+        stack.callback(fn.close)
+        svc = stack.enter_context(DataService(path, ServiceConfig(n_workers=2)))
+        slab = max(rows // 3, 1)
+        requests = [
+            HyperslabQuery(f"{STEP_GROUP}/fields.u", 0, rows),
+            HyperslabQuery(f"{STEP_GROUP}/params.w", rows // 3, slab, cols=(0, 32)),
+            WindowQuery(f"{STEP_GROUP}/params.w", tuple(range(0, rows, 7))),
+        ]
+        for req in requests:
+            got = fn.request("verify", req).value
+            want = svc.request("verify", req).value
+            if not np.array_equal(got, want) or got.dtype != want.dtype:
+                return False
+    return True
+
+
+def run_sharded(
+    dn_counts=(1, 2, 4),
+    *,
+    clients: int = 8,
+    rows: int = 16384,
+    cols: int = 512,
+    n_workers: int = 2,
+    passes: int = 2,
+    repeats: int = 3,
+    json_path: str | None = BENCH_JSON,
+    out=print,
+) -> dict:
+    """The ``serve_sharded`` trajectory: aggregate throughput of ``clients``
+    closed-loop wire clients as the DATA-NODE count grows — one row per DN
+    count, median of ``repeats`` runs, each against freshly spawned node
+    processes (cold sharded caches).  The scaling claim: on a multi-core
+    box, max DNs ≥ 1.3× the 1-DN aggregate (the decode work actually
+    spreads across processes instead of queueing on one GIL)."""
+    rows_out = []
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "serve.th5")
+        build_run_file(path, rows, cols)
+        run_load(path, 1, n_workers=n_workers, passes=1)  # page-cache warmup
+        bit_identical = _verify_shard_identity(path, max(dn_counts), rows)
+        out(f"serve_sharded,bit_identical={bit_identical}")
+        for n_nodes in dn_counts:
+            rs = [
+                run_load(path, clients, n_workers=n_workers, passes=passes,
+                         transport="shard", n_nodes=n_nodes)
+                for _ in range(repeats)
+            ]
+            r = sorted(rs, key=lambda x: x["agg_MBps"])[len(rs) // 2]
+            r["dn"] = n_nodes
+            rows_out.append(r)
+            out(
+                f"serve_sharded,dn={n_nodes},clients={clients},"
+                f"agg={r['agg_MBps']:.0f}MB/s,p50={r['p50_ms']:.1f}ms,"
+                f"p99={r['p99_ms']:.1f}ms,rejected={r['rejected']}"
+            )
+    base = rows_out[0]["agg_MBps"] or 1.0
+    summary = {
+        "rows": rows,
+        "cols": cols,
+        "repeats": repeats,
+        "clients": clients,
+        "transport": "shard",
+        "cpu_count": os.cpu_count() or 1,
+        "bit_identical": bit_identical,
+        "traffic": rows_out,
+        "dn_scaling_max_vs_1": round(rows_out[-1]["agg_MBps"] / base, 3),
+    }
+    out(
+        f"serve_sharded,dn_scaling_{rows_out[-1]['dn']}v1="
+        f"{summary['dn_scaling_max_vs_1']:.2f}x,cpus={summary['cpu_count']}"
+    )
+    _write_section(json_path, "serve_sharded", summary, out)
+    return summary
 
 
 def run(
@@ -230,18 +366,7 @@ def run(
         f"{section},speedup_{rows_out[-1]['clients']}v1="
         f"{summary['speedup_max_clients_vs_1']:.2f}x"
     )
-    if json_path:
-        doc = {}
-        if os.path.exists(json_path):
-            try:
-                with open(json_path) as fh:
-                    doc = json.load(fh)
-            except (OSError, ValueError):
-                doc = {}
-        doc.update({"schema": SCHEMA, "generated_unix": time.time(), section: summary})
-        with open(json_path, "w") as fh:
-            json.dump(doc, fh, indent=2, sort_keys=True)
-        out(f"wrote {json_path}")
+    _write_section(json_path, section, summary, out)
     return summary
 
 
@@ -251,29 +376,41 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale CI smoke run (seconds, not minutes)")
-    ap.add_argument("--transport", choices=("inprocess", "socket"),
+    ap.add_argument("--transport", choices=("inprocess", "socket", "shard"),
                     default="inprocess",
-                    help="serve the broker in-process (the `serve` section) or "
-                         "over the wire protocol on a Unix socket (`serve_wire`)")
+                    help="serve the broker in-process (the `serve` section), "
+                         "over the wire protocol on a Unix socket (`serve_wire`) "
+                         "or through a sharded SN/DN cluster (`serve_sharded`)")
     ap.add_argument("--json", default=BENCH_JSON, help="output JSON path ('' disables)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="additionally write a Chrome trace-event JSON of one "
                          "fully-traced smoke run (open in Perfetto)")
     a = ap.parse_args()
-    if a.smoke:
-        res = run(clients=(1, 4), rows=2048, cols=64, n_workers=2, passes=1,
-                  repeats=1, transport=a.transport, json_path=a.json or None)
+    if a.transport == "shard":
+        if a.smoke:
+            res = run_sharded(dn_counts=(1, 4), clients=8, rows=2048, cols=64,
+                              n_workers=2, passes=1, repeats=1,
+                              json_path=a.json or None)
+        else:
+            res = run_sharded(json_path=a.json or None)
+        traffic = res["traffic"]
+        assert all(r["rejected"] == 0 for r in traffic), "unexpected admission rejections"
+        assert res["bit_identical"], "sharded responses diverged from the single broker"
     else:
-        res = run(transport=a.transport, json_path=a.json or None)
-    # deterministic invariants (timing-light) — safe to enforce on CI VMs:
-    # the shared-window workload must not reject under an idle queue, and
-    # multi-client replays must genuinely share the cache (hit rate grows
-    # with client count: later clients ride the first one's decodes)
-    traffic = res["traffic"]
-    assert all(r["rejected"] == 0 for r in traffic), "unexpected admission rejections"
-    assert traffic[-1]["cache_hit_rate"] >= traffic[0]["cache_hit_rate"], (
-        "cross-client cache sharing regressed"
-    )
+        if a.smoke:
+            res = run(clients=(1, 4), rows=2048, cols=64, n_workers=2, passes=1,
+                      repeats=1, transport=a.transport, json_path=a.json or None)
+        else:
+            res = run(transport=a.transport, json_path=a.json or None)
+        # deterministic invariants (timing-light) — safe to enforce on CI VMs:
+        # the shared-window workload must not reject under an idle queue, and
+        # multi-client replays must genuinely share the cache (hit rate grows
+        # with client count: later clients ride the first one's decodes)
+        traffic = res["traffic"]
+        assert all(r["rejected"] == 0 for r in traffic), "unexpected admission rejections"
+        assert traffic[-1]["cache_hit_rate"] >= traffic[0]["cache_hit_rate"], (
+            "cross-client cache sharing regressed"
+        )
     if a.trace:
         # one fully-traced smoke-scale run, exported as a Chrome trace-event
         # file — the CI docs job uploads this as the trace artifact

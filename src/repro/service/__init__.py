@@ -29,6 +29,11 @@ requests               :class:`HyperslabQuery`, :class:`WindowQuery`,
 :class:`Subscription`  live push stream: committed chunks of one dataset
                        fanned out to N subscribers (:class:`SubscribeRequest`
                        → :class:`PushedChunk`; lossless or drop-oldest)
+:class:`ServiceFrontNode`  the sharded topology's routing node: scatters
+                       requests across N data-node processes by chunk
+                       ownership (``shard.py``) and stitches bit-identical
+                       responses; :func:`start_data_nodes` spawns the
+                       node processes (``datanode.py``)
 =====================  ========================================================
 
 Ownership / backpressure model, the full request reference and the wire
@@ -53,8 +58,11 @@ from .requests import (
     SubscribeRequest,
     WindowQuery,
 )
+from .datanode import DataNodeHandle, start_data_nodes, stop_data_nodes
+from .frontnode import ServiceFrontNode, ShardSubscription
 from .sessions import LodWindowSession, plan_window_rows
-from .stats import ClientStats, LatencyRecorder, ServiceStats
+from .shard import HashRing, chunk_owner, dataset_home, ownership_histogram
+from .stats import ClientStats, LatencyRecorder, ServiceStats, merge_service_stats
 from .steer import SteeringEndpoint, SteeringResult
 from .transport import ServiceServer, serve
 from .wire import WireDisconnect, WireError
@@ -92,4 +100,14 @@ __all__ = [
     "ServiceStats",
     "SteeringEndpoint",
     "SteeringResult",
+    "ServiceFrontNode",
+    "ShardSubscription",
+    "DataNodeHandle",
+    "start_data_nodes",
+    "stop_data_nodes",
+    "HashRing",
+    "chunk_owner",
+    "dataset_home",
+    "ownership_histogram",
+    "merge_service_stats",
 ]

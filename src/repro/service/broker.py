@@ -164,7 +164,12 @@ class ServiceConfig:
     → done, seconds) above which a request is dumped to the
     ``repro.service.slowlog`` logger — with its full span tree when the
     request was traced, a phase summary otherwise; ``None`` (default)
-    disables the slow log."""
+    disables the slow log.  ``fanout_poll_s``: period (seconds) of the
+    subscription fan-out's committed-index poll — a data-node process
+    cannot see a writer committing in ANOTHER process through the
+    in-process observer bus, so when set the fan-out re-reads the on-disk
+    index that often (``None``, the default, keeps the pure event-driven
+    single-process behaviour)."""
 
     max_queue: int = 64
     n_workers: int = 4
@@ -173,10 +178,13 @@ class ServiceConfig:
     qos_classes: tuple[QosClass, ...] = DEFAULT_QOS_CLASSES
     default_class: str = "interactive"
     slow_request_s: float | None = None
+    fanout_poll_s: float | None = None
 
     def __post_init__(self) -> None:
         if self.max_queue < 1:
             raise ValueError("max_queue must be >= 1")
+        if self.fanout_poll_s is not None and self.fanout_poll_s <= 0:
+            raise ValueError("fanout_poll_s must be > 0 (or None)")
         if self.n_workers < 1:
             raise ValueError("need >= 1 worker")
         names = [c.name for c in self.qos_classes]
@@ -402,8 +410,36 @@ class ChunkFanout:
         self._subs: list[Subscription] = []
         self._closed = False
         self._generation = 0
+        self._poller: threading.Thread | None = None
+        self._poll_stop = threading.Event()
         self._refresh_from_snapshot()  # chunks committed before we attached
         _container.register_publish_hook(path, self)
+
+    def start_poller(self, period_s: float) -> None:
+        """Start the committed-index poll loop (idempotent).  The observer
+        bus only carries events from writers in THIS process; a data node
+        serving a file another process appends to needs the poll to notice
+        new committed chunks (``ServiceConfig.fanout_poll_s``)."""
+        with self._cv:
+            if self._closed or self._poller is not None:
+                return
+            self._poller = threading.Thread(
+                target=self._poll_loop,
+                args=(float(period_s),),
+                name="th5-fanout-poll",
+                daemon=True,
+            )
+            self._poller.start()
+
+    def _poll_loop(self, period_s: float) -> None:
+        while not self._poll_stop.wait(period_s):
+            with self._cv:
+                if self._closed:
+                    return
+            try:
+                self._refresh_from_snapshot()
+            except (OSError, TH5Error):
+                pass  # transient (mid-commit read, file rotated): retry next tick
 
     # -- observer-bus half (writer's thread; O(1), non-blocking) --------------
 
@@ -524,6 +560,9 @@ class ChunkFanout:
             self._closed = True
             subs = list(self._subs)
             self._cv.notify_all()
+        self._poll_stop.set()
+        if self._poller is not None:
+            self._poller.join(timeout=5.0)
         _container.unregister_publish_hook(self.path, self)
         for s in subs:
             s._closed.set()
@@ -554,6 +593,9 @@ class ChunkFanout:
     def _pump(self, sub: Subscription) -> None:
         svc = sub.service
         req = sub.request
+        shard = getattr(req, "shard", None)  # (n_nodes, node_index) | None
+        if shard is not None:
+            from .shard import chunk_owner  # deferred: keep broker import light
         error: Exception | None = None
         try:
             while True:
@@ -575,6 +617,10 @@ class ChunkFanout:
                                     sub.dropped += skipped
                             ci = sub.cursor
                             sub.cursor += 1
+                            if shard is not None and (
+                                chunk_owner(req.dataset, ci, shard[0]) != shard[1]
+                            ):
+                                continue  # another node owns (and pushes) it
                             item = (ci, feed.records[ci], feed.generation)
                         else:
                             # timed wait: survives a missed notify and polls
@@ -973,7 +1019,10 @@ class DataService:
         with _REG_LOCK:
             if self._shared.fanout is None:
                 self._shared.fanout = ChunkFanout(self.path, self._shared.file)
-            return self._shared.fanout
+            fanout = self._shared.fanout
+        if self.config.fanout_poll_s is not None:
+            fanout.start_poller(self.config.fanout_poll_s)
+        return fanout
 
     def _push_gate(self, cid: str) -> float:
         """Token-bucket gate for one push: 0.0 = send now, else seconds the

@@ -232,27 +232,37 @@ class RemoteDataService:
     # -- submission (the DataService surface) --------------------------------
 
     def submit(
-        self, client: str, request, *, deadline_s: float | None = None
+        self, client: str, request, *, deadline_s: float | None = None, trace=None
     ) -> "Future[ServiceResponse]":
         """Send one request; the returned future completes when its
         response frame arrives (admission rejections complete it with
         :class:`~repro.service.broker.AdmissionError`).  ``deadline_s``
         rides the frame metadata and bounds broker-side queueing (an
         expired job is shed with :class:`~repro.service.requests.
-        RetryableError` — see ``DataService.submit``)."""
+        RetryableError` — see ``DataService.submit``).  ``trace`` (a
+        :class:`~repro.obs.trace.SpanContext`) stamps an ADOPTED trace
+        identity on the frame instead of opening a new root — the sharded
+        front node passes its client-request context here so every SN→DN
+        sub-request joins the one stitched trace."""
         meta, payload = wire.encode_request(client, request)  # raises on un-wireable
         if deadline_s:
             meta["deadline_s"] = float(deadline_s)
         req_id = next(self._req_ids)
-        span = TRACER.start_trace(SPAN_CLIENT_REQUEST)
-        if span.trace_id:
+        span = None
+        if trace is not None and trace.trace_id:
+            wire.put_trace(meta, trace.trace_id, trace.span_id)
+        else:
+            span = TRACER.start_trace(SPAN_CLIENT_REQUEST)
+            if not span.trace_id:
+                span = None
+        if span is not None:
             span.tag("client", client).tag("type", type(request).__name__).tag("req_id", req_id)
             # the server adopts this pair, stitching its broker/decode
             # spans into this trace; replay re-sends meta verbatim, so
             # retried frames stay in-trace
             wire.put_trace(meta, span.trace_id, span.span_id)
         fut: "Future[ServiceResponse]" = Future()
-        if span.trace_id:
+        if span is not None:
 
             def _end_span(f, sp=span):
                 err = f.exception()
@@ -367,6 +377,7 @@ class RemoteDataService:
         policy: str = "lossless",
         max_pending: int = 64,
         from_chunk: int = 0,
+        shard: tuple[int, int] | None = None,
     ) -> RemoteSubscription:
         """Stream committed chunks of ``dataset`` live (see
         :class:`~repro.service.requests.SubscribeRequest` for the window /
@@ -374,13 +385,16 @@ class RemoteDataService:
         to consume pushes.  With ``reconnect=True`` (the default) a
         connection drop is transparent: the client re-dials and
         re-subscribes from ``next_chunk``, so a ``lossless`` stream misses
-        nothing."""
+        nothing.  ``shard`` is the SN→DN ownership filter (the replace-based
+        resubscribe keeps it across reconnects); ordinary clients leave it
+        ``None``."""
         request = SubscribeRequest(
             dataset=dataset,
             rows=rows,
             policy=policy,
             max_pending=max_pending,
             from_chunk=from_chunk,
+            shard=shard,
         )
         meta, payload = wire.encode_request(client, request)
         sub_id = next(self._req_ids)

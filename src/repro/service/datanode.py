@@ -1,0 +1,288 @@
+"""Data-node process: one ``DataService`` + ``ServiceServer`` shard.
+
+``python -m repro.service.datanode --file RUN.th5 --listen dn0.sock`` runs
+one data node: a full broker over the run file, served on a Unix-domain
+(or TCP) socket.  A data node never knows it is a shard — ownership is a
+property of the *routing* (the front node only sends it the chunks it
+owns, and its subscription pumps carry the same ownership predicate via
+``SubscribeRequest.shard``), so each node's decoded-chunk cache naturally
+holds only its partition of the chunk space instead of duplicating the
+whole file N times.
+
+Operational contract (what CI leans on when a multi-process test fails):
+
+* ``--log PATH`` routes the process's logging there (per-node log files
+  are uploaded as Actions artifacts on failure);
+* ``--stats-json PATH`` dumps the node's final ``ServiceStats`` snapshot
+  as JSON on clean shutdown (SIGTERM/SIGINT), same artifact path;
+* the node prints ``READY <address>`` on stdout once the socket accepts —
+  but spawners should probe the socket itself (:class:`DataNodeHandle.
+  wait_ready` does), not parse stdout.
+
+:func:`start_data_nodes` is the in-process spawn helper the front node,
+the benchmark and the tests share.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+from typing import Sequence
+
+from repro.core.container import TH5Error
+
+from .broker import DataService, ServiceConfig
+from .transport import ServiceServer
+
+
+def _parse_listen(spec: str) -> str | tuple[str, int]:
+    """``host:port`` → TCP tuple; anything else is a Unix socket path."""
+    if ":" in spec and not os.sep in spec:
+        host, port = spec.rsplit(":", 1)
+        return (host or "127.0.0.1", int(port))
+    return spec
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.service.datanode",
+        description="serve one TH5 run file as a data node (SN/DN split)",
+    )
+    ap.add_argument("--file", required=True, help="run file to serve")
+    ap.add_argument("--listen", required=True, help="unix socket path or host:port")
+    ap.add_argument("--workers", type=int, default=2, help="service worker threads")
+    ap.add_argument("--max-queue", type=int, default=64, help="admission bound")
+    ap.add_argument("--cache-bytes", type=int, default=64 << 20, help="chunk cache bytes")
+    ap.add_argument(
+        "--poll",
+        type=float,
+        default=0.2,
+        help="fan-out index poll period (s); cross-process writers are "
+        "invisible to the observer bus, so data nodes poll the committed "
+        "index for new chunks (0 disables)",
+    )
+    ap.add_argument("--log", default=None, help="log file (default: stderr)")
+    ap.add_argument("--stats-json", default=None, help="final ServiceStats dump path")
+    args = ap.parse_args(argv)
+
+    import logging
+
+    logging.basicConfig(
+        filename=args.log,
+        level=logging.INFO,
+        format="%(asctime)s %(levelname)s %(name)s: %(message)s",
+    )
+    log = logging.getLogger("repro.service.datanode")
+
+    config = ServiceConfig(
+        max_queue=args.max_queue,
+        n_workers=args.workers,
+        cache_bytes=args.cache_bytes,
+        fanout_poll_s=args.poll if args.poll > 0 else None,
+    )
+    svc = DataService(args.file, config)
+    server = ServiceServer(svc, _parse_listen(args.listen))
+    log.info("data node serving %s at %s (pid %d)", args.file, server.address, os.getpid())
+    print(f"READY {server.address}", flush=True)
+
+    done = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: done.set())
+    done.wait()
+
+    log.info("data node shutting down")
+    server.close()
+    if args.stats_json:
+        try:
+            snap = dataclasses.asdict(svc.stats())
+            snap["transport"] = server.stats()
+            snap["pid"] = os.getpid()
+            Path(args.stats_json).write_text(json.dumps(snap, indent=2))
+        except Exception as e:  # pragma: no cover - diagnostics best-effort
+            log.warning("stats dump failed: %s", e)
+    svc.close()
+    return 0
+
+
+# -- spawn helpers (used by the front node, benchmarks and tests) --------------
+
+
+class DataNodeHandle:
+    """One spawned data-node subprocess: its address, its artifact paths
+    (log + stats dump) and liveness probes.  The front node consults
+    :meth:`poll` to turn a torn SN→DN connection into a typed
+    "data node N died" :class:`~repro.service.requests.RetryableError`."""
+
+    def __init__(
+        self,
+        index: int,
+        proc: subprocess.Popen,
+        address: str | tuple[str, int],
+        log_path: str,
+        stats_path: str,
+    ):
+        self.index = int(index)
+        self.proc = proc
+        self.address = address
+        self.log_path = str(log_path)
+        self.stats_path = str(stats_path)
+
+    @property
+    def pid(self) -> int:
+        return self.proc.pid
+
+    @property
+    def returncode(self):
+        return self.proc.returncode
+
+    def poll(self):
+        """Exit code if the node died, else None (alive)."""
+        return self.proc.poll()
+
+    def wait_ready(self, timeout_s: float = 20.0) -> None:
+        """Block until the node's socket accepts connections.  Raises
+        :class:`~repro.core.container.TH5Error` (with the log tail) when
+        the process dies first or the timeout lapses."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            if self.proc.poll() is not None:
+                raise TH5Error(
+                    f"data node {self.index} (pid {self.pid}) exited "
+                    f"{self.proc.returncode} before becoming ready:\n{self._log_tail()}"
+                )
+            try:
+                if isinstance(self.address, tuple):
+                    s = socket.create_connection(self.address, timeout=0.25)
+                else:
+                    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                    s.settimeout(0.25)
+                    s.connect(self.address)
+                s.close()
+                return
+            except OSError:
+                time.sleep(0.02)
+        raise TH5Error(
+            f"data node {self.index} not ready after {timeout_s:.1f}s:\n{self._log_tail()}"
+        )
+
+    def _log_tail(self, n: int = 30) -> str:
+        try:
+            lines = Path(self.log_path).read_text(errors="replace").splitlines()
+            return "\n".join(lines[-n:])
+        except OSError:
+            return "<no log>"
+
+    def read_stats(self) -> dict | None:
+        """The node's final stats dump (written on clean shutdown)."""
+        try:
+            return json.loads(Path(self.stats_path).read_text())
+        except (OSError, ValueError):
+            return None
+
+    def kill(self) -> None:
+        """SIGKILL — the chaos path (no stats dump, no goodbye)."""
+        if self.proc.poll() is None:
+            self.proc.kill()
+        self.proc.wait(timeout=10.0)
+
+    def stop(self, timeout_s: float = 10.0) -> int | None:
+        """Graceful shutdown: SIGTERM, wait (the node dumps stats), then
+        SIGKILL as a last resort.  Returns the exit code."""
+        if self.proc.poll() is None:
+            try:
+                self.proc.terminate()
+            except OSError:  # pragma: no cover - already reaped
+                pass
+            try:
+                self.proc.wait(timeout=timeout_s)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+                self.proc.wait(timeout=10.0)
+        return self.proc.returncode
+
+
+def start_data_nodes(
+    path: str,
+    n_nodes: int,
+    run_dir: str,
+    *,
+    workers: int = 2,
+    max_queue: int = 64,
+    cache_bytes: int = 64 << 20,
+    poll_s: float = 0.2,
+    wait_ready_s: float = 20.0,
+) -> list[DataNodeHandle]:
+    """Spawn ``n_nodes`` data-node subprocesses over ``path``, sockets and
+    per-node artifacts (``dnI.sock`` / ``dnI.log`` / ``dnI-stats.json``)
+    under ``run_dir``.  Blocks until every node accepts connections; on
+    any failure the already-started nodes are stopped before the raise."""
+    run = Path(run_dir)
+    run.mkdir(parents=True, exist_ok=True)
+    src_dir = str(Path(__file__).resolve().parents[2])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_dir + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    handles: list[DataNodeHandle] = []
+    try:
+        for i in range(n_nodes):
+            sock_path = str(run / f"dn{i}.sock")
+            log_path = str(run / f"dn{i}.log")
+            stats_path = str(run / f"dn{i}-stats.json")
+            logf = open(log_path, "ab")
+            try:
+                proc = subprocess.Popen(
+                    [
+                        sys.executable,
+                        "-m",
+                        "repro.service.datanode",
+                        "--file", str(path),
+                        "--listen", sock_path,
+                        "--workers", str(workers),
+                        "--max-queue", str(max_queue),
+                        "--cache-bytes", str(cache_bytes),
+                        "--poll", str(poll_s),
+                        "--log", log_path,
+                        "--stats-json", stats_path,
+                    ],
+                    env=env,
+                    stdout=logf,
+                    stderr=logf,
+                )
+            finally:
+                logf.close()  # the child keeps its own duplicated fd
+            handles.append(DataNodeHandle(i, proc, sock_path, log_path, stats_path))
+        for h in handles:
+            h.wait_ready(wait_ready_s)
+        return handles
+    except BaseException:
+        for h in handles:
+            try:
+                h.stop(timeout_s=5.0)
+            except Exception:  # pragma: no cover - teardown best-effort
+                pass
+        raise
+
+
+def stop_data_nodes(handles: Sequence[DataNodeHandle], timeout_s: float = 10.0) -> None:
+    """Gracefully stop every node (each dumps its stats on the way out)."""
+    for h in handles:
+        try:
+            h.proc.terminate()
+        except OSError:  # pragma: no cover - already gone
+            pass
+    for h in handles:
+        h.stop(timeout_s=timeout_s)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

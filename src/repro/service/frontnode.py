@@ -1,0 +1,823 @@
+"""ServiceFrontNode — the routing half of the sharded SN/DN service.
+
+The HSDS-style split: clients speak the ordinary PR-5 wire protocol to ONE
+address (an unchanged :class:`~repro.service.transport.ServiceServer`
+fronting this class), while the data lives in N **data-node** processes
+(``datanode.py``), each a full broker owning the partition of the chunk
+space :func:`repro.service.shard.chunk_owner` assigns it.  The front node
+owns no chunk data and decodes no chunks — it plans, scatters and
+stitches:
+
+* a request whose chunk footprint has a **single owner** passes straight
+  through to that node (zero re-framing beyond the SN↔DN hop itself);
+* a **multi-owner** request fans out as per-owner sub-requests — clipped
+  hyperslab runs, order-preserving row partitions, chunk-aligned query
+  sub-windows (``shard.plan_runs`` / ``partition_rows``) — over the
+  pipelined :class:`~repro.service.client.RemoteDataService` SN→DN
+  clients, and the partial planes are stitched back into the one
+  bit-identical response a single-process broker would have produced;
+* **subscriptions** fan IN: the front node subscribes to every data node
+  with that node's own ``SubscribeRequest.shard`` filter (each committed
+  chunk is decoded and pushed by exactly one owner) and
+  :class:`ShardSubscription` merges the per-node streams back into one
+  ordered stream;
+* the client's **trace context** is stamped on every SN→DN sub-request
+  (``RemoteDataService.submit(trace=...)``), so one client request stays
+  ONE stitched trace across the whole cluster;
+* ``stats()`` rolls every node up through :func:`~repro.service.stats.
+  merge_service_stats`, with the per-node partials under
+  ``ServiceStats.nodes``.
+
+A data-node death mid-request surfaces as a typed
+:class:`~repro.service.requests.RetryableError` — the reads are
+idempotent, so the caller may simply resubmit (against a healed cluster).
+
+Consistency model: the cluster serves a *snapshot* of the run file — every
+data node plans reads against the index it opened (the live-push plane
+follows new commits via the fan-out's index poll, the read path does not),
+and the front node plans routes from a catalog it fetches once (refreshed
+when an unknown dataset shows up).  Per-client QoS classes are validated
+and recorded SN-side, but DN-side scheduling sees all front-node traffic
+under the SN's own connection class — per-client weights across the
+cluster are a roadmap item.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.container import TH5Error
+
+from .broker import AdmissionError, ServiceConfig
+from .catalog import DatasetInfo
+from .client import RemoteDataService
+from .datanode import DataNodeHandle, start_data_nodes, stop_data_nodes
+from .requests import (
+    CatalogQuery,
+    HyperslabQuery,
+    PingQuery,
+    PushedChunk,
+    QueryRequest,
+    RetryableError,
+    ServiceResponse,
+    StatsQuery,
+    SteeringRequest,
+    SubscribeRequest,
+    WindowQuery,
+    response_nbytes,
+)
+from .sessions import LodWindowSession
+from .shard import (
+    dataset_home,
+    partition_rows,
+    plan_runs,
+    stitch_hyperslab,
+    stitch_query,
+    stitch_window,
+)
+from .stats import ServiceStats, merge_service_stats
+
+#: Substrings of a connection-level failure's message — what a torn SN→DN
+#: wire looks like from :class:`~repro.service.client.RemoteDataService`.
+_CONN_ERROR_MARKS = (
+    "connection",
+    "wire send failed",
+    "reconnect",
+    "heartbeat",
+)
+
+
+class ShardSubscription:
+    """One client subscription, fanned IN from every data node.
+
+    The front node subscribes to each node with that node's ownership
+    filter and ``lossless`` delivery (drop decisions belong where the
+    whole stream is visible — here), then merges the per-node streams by
+    chunk index: a reorder buffer holds early arrivals while the cursor
+    waits for the owning node of the next index.  ``seq`` is renumbered
+    SN-side so the client sees the exact single-broker contract.
+
+    ``lossless`` never skips an index the window intersects; under
+    ``drop-oldest`` the reorder buffer is bounded at ``max_pending`` — when
+    a slow node lets it overfill, the cursor jumps to the oldest buffered
+    index and the skipped intersecting indexes are counted in ``dropped``
+    (monotonic with gaps, like the single-broker clamp).
+
+    Window intersections are predicted from the dataset's nominal
+    ``chunk_rows`` (the same arithmetic the data nodes apply), so a
+    windowed subscription needs the dataset to exist at subscribe time;
+    un-windowed subscriptions may target datasets the solver creates
+    later.  Consumed exactly like a :class:`~repro.service.client.
+    RemoteSubscription`: iterate / ``get()`` when local, or sink-backed
+    when fronted by a :class:`~repro.service.transport.ServiceServer`.
+    """
+
+    def __init__(
+        self,
+        frontnode: "ServiceFrontNode",
+        client: str,
+        request: SubscribeRequest,
+        chunk_rows: int | None,
+        *,
+        sink: Callable[[dict, np.ndarray], bool] | None = None,
+        on_error: Callable[[Exception | None], None] | None = None,
+    ):
+        self.client = str(client)
+        self.request = request
+        self.pushed = 0
+        self.dropped = 0
+        self.generation = 0
+        self.next_chunk = int(request.from_chunk)
+        self._fn = frontnode
+        self._chunk_rows = int(chunk_rows) if chunk_rows else None
+        self._sink = sink
+        self._on_error = on_error
+        self._queue: "queue.Queue | None" = queue.Queue() if sink is None else None
+        self._lock = threading.Lock()
+        self._buffer: dict[int, PushedChunk] = {}
+        self._cursor = int(request.from_chunk)
+        self._finished = False
+        self._streams: list = []
+        self._live = 0
+
+    # -- lifecycle ------------------------------------------------------------
+
+    def _start(self) -> None:
+        n = self._fn.n_nodes
+        try:
+            for i, dn in enumerate(self._fn._dns):
+                self._streams.append(
+                    dn.subscribe(
+                        self.client,
+                        self.request.dataset,
+                        rows=self.request.rows,
+                        policy="lossless",
+                        from_chunk=self.request.from_chunk,
+                        shard=(n, i),
+                    )
+                )
+        except BaseException:
+            for s in self._streams:
+                try:
+                    s.close()
+                except Exception:
+                    pass
+            raise
+        self._live = len(self._streams)
+        for i, rsub in enumerate(self._streams):
+            threading.Thread(
+                target=self._drain,
+                args=(i, rsub),
+                name=f"th5-shard-sub-dn{i}",
+                daemon=True,
+            ).start()
+
+    def close(self) -> None:
+        """Stop the stream (unsubscribes from every node).  Idempotent."""
+        self._fn.unsubscribe(self)
+
+    def _terminate(self, error: Exception | None) -> None:
+        with self._lock:
+            if self._finished:
+                return
+            self._finished = True
+            streams = list(self._streams)
+        for s in streams:
+            try:
+                s.close()
+            except Exception:
+                pass
+        if self._queue is not None:
+            self._queue.put(error)
+        if self._on_error is not None:
+            try:
+                self._on_error(error)
+            except Exception:
+                pass
+
+    # -- per-node drain + in-order merge --------------------------------------
+
+    def _drain(self, node: int, rsub) -> None:
+        error: Exception | None = None
+        try:
+            for item in rsub:
+                self._offer(item)
+        except Exception as e:
+            error = self._fn._wrap_node_error(node, e)
+        with self._lock:
+            self._live -= 1
+            last = self._live == 0
+            finished = self._finished
+        if error is not None and not finished:
+            self._terminate(error)
+        elif last and not finished:
+            self._flush_tail()
+            self._terminate(None)
+
+    def _intersects(self, ci: int) -> bool:
+        """Would a push for chunk ``ci`` reach this subscription?  Nominal
+        chunk arithmetic — the same window test the data nodes apply."""
+        rows = self.request.rows
+        if rows is None:
+            return True
+        cr = self._chunk_rows or 1
+        return ci * cr < rows[1] and (ci + 1) * cr > rows[0]
+
+    def _offer(self, item: PushedChunk) -> None:
+        with self._lock:
+            if self._finished:
+                return
+            ci = int(item.chunk_index)
+            if ci < self._cursor:
+                return  # replayed duplicate (reconnect overlap): already out
+            self._buffer[ci] = item
+            if self.request.policy == "drop-oldest":
+                while len(self._buffer) > self.request.max_pending:
+                    target = min(self._buffer)
+                    if target <= self._cursor:
+                        break
+                    self.dropped += sum(
+                        1 for c in range(self._cursor, target) if self._intersects(c)
+                    )
+                    self._cursor = target
+            self._deliver_ready_locked()
+
+    def _deliver_ready_locked(self) -> None:
+        while self._buffer:
+            hi = max(self._buffer)
+            # skip indexes that can never arrive (outside the window) — but
+            # only below a buffered index, which PROVES those chunks exist
+            while (
+                self._cursor < hi
+                and self._cursor not in self._buffer
+                and not self._intersects(self._cursor)
+            ):
+                self._cursor += 1
+            item = self._buffer.pop(self._cursor, None)
+            if item is None:
+                return  # waiting on the owner of self._cursor
+            self._cursor += 1
+            if not self._emit_locked(item):
+                return
+
+    def _flush_tail(self) -> None:
+        """Every stream ended cleanly: deliver what is still buffered, in
+        index order (the gaps are indexes no node will ever push)."""
+        with self._lock:
+            if self._finished:
+                return
+            for ci in sorted(self._buffer):
+                if not self._emit_locked(self._buffer[ci]):
+                    return
+            self._buffer.clear()
+
+    def _emit_locked(self, item: PushedChunk) -> bool:
+        out = PushedChunk(
+            dataset=item.dataset,
+            chunk_index=item.chunk_index,
+            row_start=item.row_start,
+            rows=item.rows,
+            generation=item.generation,
+            seq=self.pushed,
+            dropped=self.dropped,
+        )
+        self.pushed += 1
+        self.generation = max(self.generation, item.generation)
+        self.next_chunk = item.chunk_index + 1
+        if self._sink is None:
+            self._queue.put(out)
+            return True
+        ok = False
+        try:
+            ok = self._sink(
+                {
+                    "dataset": out.dataset,
+                    "chunk_index": out.chunk_index,
+                    "row_start": out.row_start,
+                    "n_rows": int(len(out.rows)),
+                    "generation": out.generation,
+                    "seq": out.seq,
+                    "dropped": out.dropped,
+                },
+                out.rows,
+            )
+        finally:
+            if not ok:
+                # consumer gone: end the fan-in off-thread (we hold _lock)
+                threading.Thread(
+                    target=self._terminate, args=(None,), daemon=True
+                ).start()
+        return ok
+
+    # -- local consumption (parity with RemoteSubscription) -------------------
+
+    def get(self, timeout: float | None = None) -> PushedChunk | None:
+        """Next :class:`PushedChunk`; ``None`` = stream ended.  Raises
+        ``queue.Empty`` on timeout, or the subscription's failure."""
+        if self._queue is None:
+            raise TH5Error("sink-backed subscription has no local queue")
+        item = self._queue.get(timeout=timeout)
+        if item is None or isinstance(item, Exception):
+            self._queue.put(item)  # keep the terminal state observable
+            if isinstance(item, Exception):
+                raise item
+            return None
+        return item
+
+    def __iter__(self) -> "ShardSubscription":
+        return self
+
+    def __next__(self) -> PushedChunk:
+        item = self.get()
+        if item is None:
+            raise StopIteration
+        return item
+
+
+class ServiceFrontNode:
+    """Routing service node over ``nodes`` (addresses or
+    :class:`~repro.service.datanode.DataNodeHandle`\\ s).
+
+    Implements the exact service surface
+    :class:`~repro.service.transport.ServiceServer` fronts —
+    ``config`` / ``submit`` / ``request`` / ``subscribe`` / ``unsubscribe``
+    / ``set_client_class`` / ``stats`` — so the sharded cluster is served
+    on one socket with the transport layer unchanged.  ``config`` shapes
+    only the front node's admission surface (QoS class names, advertised
+    ``max_queue``); each data node applies its own.
+
+    :meth:`spawn` is the one-call constructor (spawn N data nodes over a
+    run file, connect, own their lifecycle); with pre-started nodes the
+    caller keeps ownership and :meth:`close` only drops the connections.
+    """
+
+    def __init__(
+        self,
+        nodes: Sequence[DataNodeHandle | str | tuple[str, int]],
+        *,
+        config: ServiceConfig | None = None,
+        connect_timeout: float | None = 30.0,
+        reconnect: bool = True,
+    ):
+        if not nodes:
+            raise ValueError("ServiceFrontNode needs >= 1 data node")
+        self.config = config or ServiceConfig()
+        self._handles: list[DataNodeHandle | None] = [
+            n if isinstance(n, DataNodeHandle) else None for n in nodes
+        ]
+        self._owned: list[DataNodeHandle] = []
+        addresses = [
+            n.address if isinstance(n, DataNodeHandle) else n for n in nodes
+        ]
+        self._dns: list[RemoteDataService] = []
+        try:
+            for addr in addresses:
+                self._dns.append(
+                    RemoteDataService(
+                        addr,
+                        qos=self.config.default_class,
+                        connect_timeout=connect_timeout,
+                        reconnect=reconnect,
+                    )
+                )
+        except BaseException:
+            for dn in self._dns:
+                try:
+                    dn.close()
+                except Exception:
+                    pass
+            raise
+        self._catalog_lock = threading.Lock()
+        self._infos: dict[str, DatasetInfo] | None = None
+        self._subs_lock = threading.Lock()
+        self._subs: set[ShardSubscription] = set()
+        self._classes: dict[str, str] = {}
+        self._closed = False
+
+    @classmethod
+    def spawn(
+        cls,
+        path: str,
+        n_nodes: int,
+        run_dir: str,
+        *,
+        config: ServiceConfig | None = None,
+        **spawn_kw: Any,
+    ) -> "ServiceFrontNode":
+        """Spawn ``n_nodes`` data-node processes over ``path`` (artifacts
+        under ``run_dir`` — see :func:`~repro.service.datanode.
+        start_data_nodes`) and front them.  The front node owns the
+        processes: :meth:`close` stops them."""
+        handles = start_data_nodes(path, n_nodes, run_dir, **spawn_kw)
+        try:
+            fn = cls(handles, config=config)
+        except BaseException:
+            stop_data_nodes(handles)
+            raise
+        fn._owned = list(handles)
+        return fn
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self._dns)
+
+    @property
+    def handles(self) -> list[DataNodeHandle | None]:
+        return list(self._handles)
+
+    def close(self) -> None:
+        """End every subscription, drop the SN→DN connections, and stop
+        the data nodes :meth:`spawn` started (pre-started nodes stay up)."""
+        if self._closed:
+            return
+        self._closed = True
+        with self._subs_lock:
+            subs = list(self._subs)
+            self._subs.clear()
+        for s in subs:
+            s._terminate(None)
+        for dn in self._dns:
+            try:
+                dn.close()
+            except Exception:
+                pass
+        if self._owned:
+            stop_data_nodes(self._owned)
+            self._owned = []
+
+    # -- routing metadata ------------------------------------------------------
+
+    def _catalog(self, refresh: bool = False) -> dict[str, DatasetInfo]:
+        with self._catalog_lock:
+            if self._infos is None or refresh:
+                cat = self._dns[0].request("__frontnode__", CatalogQuery(prefix="/")).value
+                self._infos = {d.path: d for d in cat.datasets}
+            return self._infos
+
+    def _info(self, dataset: str) -> DatasetInfo | None:
+        info = self._catalog().get(dataset)
+        if info is None:
+            info = self._catalog(refresh=True).get(dataset)
+        return info
+
+    def _wrap_node_error(self, node: int, exc: Exception) -> Exception:
+        """A torn SN→DN interaction becomes a typed RetryableError when the
+        node process is gone or the failure is connection-level — the
+        request is an idempotent read, resubmitting it is safe.  Service
+        errors (corrupt chunk, bad request, admission) pass through."""
+        if isinstance(exc, (RetryableError, AdmissionError)):
+            return exc
+        handle = self._handles[node] if node < len(self._handles) else None
+        died = handle is not None and handle.poll() is not None
+        msg = str(exc).lower()
+        connection_like = isinstance(exc, OSError) or (
+            isinstance(exc, TH5Error) and any(m in msg for m in _CONN_ERROR_MARKS)
+        )
+        if died or connection_like:
+            return RetryableError(
+                f"data node {node} "
+                + ("died" if died else "unreachable")
+                + f" mid-request: {exc}"
+            )
+        return exc
+
+    # -- submission (the DataService surface) ----------------------------------
+
+    def submit(
+        self, client: str, request, *, deadline_s: float | None = None, trace=None
+    ) -> "Future[ServiceResponse]":
+        """Route one request (see class docstring): single-owner footprints
+        pass through, multi-owner footprints scatter and the planes stitch
+        back bit-identically.  ``trace`` rides every SN→DN sub-request, so
+        the whole scatter stays one stitched trace."""
+        if self._closed:
+            raise TH5Error("service closed")
+        if isinstance(request, StatsQuery):
+            fut: "Future[ServiceResponse]" = Future()
+            try:
+                st = self.stats()
+            except Exception as e:
+                fut.set_exception(e)
+            else:
+                fut.set_result(
+                    ServiceResponse(value=st, client=str(client), request=request)
+                )
+            return fut
+        if isinstance(request, (CatalogQuery, SteeringRequest, PingQuery)):
+            # no chunk footprint: catalog/ping answer identically anywhere,
+            # steering must serialize through ONE node's endpoint — node 0
+            return self._pass_through(0, client, request, deadline_s, trace)
+        if isinstance(request, HyperslabQuery):
+            return self._route_hyperslab(client, request, deadline_s, trace)
+        if isinstance(request, WindowQuery):
+            return self._route_window(client, request, deadline_s, trace)
+        if isinstance(request, QueryRequest):
+            return self._route_query(client, request, deadline_s, trace)
+        raise TypeError(f"unroutable request type {type(request).__name__}")
+
+    def request(
+        self,
+        client: str,
+        request,
+        *,
+        busy_retries: int = 0,
+        deadline_s: float | None = None,
+        retry_base_s: float = 0.01,
+        retry_cap_s: float = 0.5,
+    ) -> ServiceResponse:
+        """Synchronous :meth:`submit` with the same bounded BUSY-backoff
+        contract as the broker and remote client."""
+        import random
+        import time
+
+        attempt = 0
+        while True:
+            try:
+                return self.submit(client, request, deadline_s=deadline_s).result()
+            except AdmissionError:
+                if attempt >= busy_retries:
+                    raise
+                attempt += 1
+                delay = min(retry_cap_s, retry_base_s * (2 ** (attempt - 1)))
+                time.sleep(delay * (0.5 + random.random()))
+
+    # -- per-type routing ------------------------------------------------------
+
+    def _home(self, dataset: str) -> int:
+        return dataset_home(dataset, self.n_nodes)
+
+    def _pass_through(
+        self, node: int, client: str, request, deadline_s, trace
+    ) -> "Future[ServiceResponse]":
+        out: "Future[ServiceResponse]" = Future()
+        try:
+            inner = self._dns[node].submit(
+                client, request, deadline_s=deadline_s, trace=trace
+            )
+        except Exception as e:
+            wrapped = self._wrap_node_error(node, e)
+            if isinstance(wrapped, AdmissionError):
+                raise wrapped  # transport answers BUSY from a raise, not a future
+            out.set_exception(wrapped)
+            return out
+
+        def _copy(f: "Future[ServiceResponse]") -> None:
+            err = f.exception()
+            if err is not None:
+                out.set_exception(self._wrap_node_error(node, err))
+            else:
+                out.set_result(f.result())
+
+        inner.add_done_callback(_copy)
+        return out
+
+    def _fan_out(
+        self,
+        client: str,
+        request,
+        subreqs: list[tuple[int, Any]],
+        stitch: Callable[[list[ServiceResponse]], Any],
+        deadline_s,
+        trace,
+    ) -> "Future[ServiceResponse]":
+        """Scatter ``subreqs`` (``[(node, sub_request), ...]``) and complete
+        the returned future with the stitched response when the LAST part
+        lands (on that part's completion thread — stitching is cheap
+        concatenate/scatter work).  First failure wins, typed."""
+        out: "Future[ServiceResponse]" = Future()
+        n = len(subreqs)
+        parts: list[ServiceResponse | None] = [None] * n
+        remaining = [n]
+        lock = threading.Lock()
+
+        def _finish(k: int, node: int, f: "Future[ServiceResponse]") -> None:
+            err = f.exception()
+            last = False
+            with lock:
+                if out.done():
+                    return
+                if err is not None:
+                    out.set_exception(self._wrap_node_error(node, err))
+                    return
+                parts[k] = f.result()
+                remaining[0] -= 1
+                last = remaining[0] == 0
+            if last:
+                try:
+                    value = stitch([p for p in parts if p is not None])
+                    resp = ServiceResponse(
+                        value=value,
+                        client=str(client),
+                        request=request,
+                        queued_s=max(p.queued_s for p in parts),
+                        service_s=max(p.service_s for p in parts),
+                        chunk_hits=sum(p.chunk_hits for p in parts),
+                        chunk_misses=sum(p.chunk_misses for p in parts),
+                        nbytes=response_nbytes(value),
+                    )
+                except Exception as e:  # pragma: no cover - stitch bug guard
+                    out.set_exception(e)
+                else:
+                    out.set_result(resp)
+
+        for k, (node, sub) in enumerate(subreqs):
+            try:
+                f = self._dns[node].submit(
+                    client, sub, deadline_s=deadline_s, trace=trace
+                )
+            except Exception as e:
+                with lock:
+                    if not out.done():
+                        out.set_exception(self._wrap_node_error(node, e))
+                break
+            f.add_done_callback(lambda fut, k=k, node=node: _finish(k, node, fut))
+        return out
+
+    def _route_hyperslab(
+        self, client: str, req: HyperslabQuery, deadline_s, trace
+    ) -> "Future[ServiceResponse]":
+        info = self._info(req.dataset)
+        if info is None or not info.chunk_rows or info.n_chunks == 0:
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        total = int(info.shape[0]) if info.shape else 0
+        if req.row_start < 0 or req.n_rows < 0 or req.row_start + req.n_rows > total:
+            # out of the snapshot's range: one node reproduces the broker's
+            # exact clip-or-raise behaviour
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        runs = plan_runs(
+            req.dataset, req.row_start, req.row_start + req.n_rows,
+            info.chunk_rows, self.n_nodes,
+        )
+        if not runs:
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        if len(runs) == 1:
+            return self._pass_through(runs[0][0], client, req, deadline_s, trace)
+        subreqs = [
+            (owner, dataclasses.replace(req, row_start=lo, n_rows=hi - lo))
+            for owner, lo, hi in runs
+        ]
+        return self._fan_out(
+            client, req, subreqs,
+            lambda parts: stitch_hyperslab([p.value for p in parts]),
+            deadline_s, trace,
+        )
+
+    def _route_window(
+        self, client: str, req: WindowQuery, deadline_s, trace
+    ) -> "Future[ServiceResponse]":
+        info = self._info(req.dataset)
+        rows = req.rows
+        if info is None or not info.chunk_rows or info.n_chunks == 0 or not rows:
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        total = int(info.shape[0]) if info.shape else 0
+        if any(r < 0 or r >= total for r in rows):
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        plan = partition_rows(req.dataset, rows, info.chunk_rows, self.n_nodes)
+        if len(plan) == 1:
+            return self._pass_through(next(iter(plan)), client, req, deadline_s, trace)
+        owners = sorted(plan)
+        subreqs = [
+            (owner, WindowQuery(dataset=req.dataset, rows=tuple(plan[owner][1])))
+            for owner in owners
+        ]
+        positions = [plan[owner][0] for owner in owners]
+        return self._fan_out(
+            client, req, subreqs,
+            lambda parts: stitch_window(
+                len(rows), list(zip(positions, [p.value for p in parts]))
+            ),
+            deadline_s, trace,
+        )
+
+    def _route_query(
+        self, client: str, req: QueryRequest, deadline_s, trace
+    ) -> "Future[ServiceResponse]":
+        info = self._info(req.dataset)
+        if info is None or not info.chunk_rows or info.n_chunks == 0:
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        total = int(info.shape[0]) if info.shape else 0
+        n_rows = (total - req.row_start) if req.n_rows is None else req.n_rows
+        if req.row_start < 0 or n_rows < 0 or req.row_start + n_rows > total:
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        runs = plan_runs(
+            req.dataset, req.row_start, req.row_start + n_rows,
+            info.chunk_rows, self.n_nodes,
+        )
+        if not runs:
+            return self._pass_through(self._home(req.dataset), client, req, deadline_s, trace)
+        if len(runs) == 1:
+            return self._pass_through(runs[0][0], client, req, deadline_s, trace)
+        subreqs = [
+            (owner, dataclasses.replace(req, row_start=lo, n_rows=hi - lo))
+            for owner, lo, hi in runs
+        ]
+        return self._fan_out(
+            client, req, subreqs,
+            lambda parts: stitch_query([p.value for p in parts], req.row_start),
+            deadline_s, trace,
+        )
+
+    # -- subscriptions ---------------------------------------------------------
+
+    def subscribe(
+        self,
+        client: str,
+        request: SubscribeRequest,
+        *,
+        sink: Callable[[dict, np.ndarray], bool] | None = None,
+        on_error: Callable[[Exception | None], None] | None = None,
+    ) -> ShardSubscription:
+        """Fan-in subscription (see :class:`ShardSubscription`): one
+        per-node lossless shard-filtered stream each, merged in chunk-index
+        order, delivered under the client's requested policy."""
+        if not isinstance(request, SubscribeRequest):
+            raise TypeError(
+                f"subscribe wants a SubscribeRequest, got {type(request).__name__}"
+            )
+        if request.shard is not None:
+            raise TH5Error(
+                "front-node subscriptions must not carry a shard filter "
+                "(the front node assigns one per data node)"
+            )
+        if self._closed:
+            raise TH5Error("service closed")
+        info = self._info(request.dataset)
+        if info is not None and not info.chunk_rows:
+            raise TH5Error(
+                f"cannot subscribe to contiguous dataset {request.dataset!r}"
+                " (live pushes follow the chunk index)"
+            )
+        if info is None and request.rows is not None:
+            raise TH5Error(
+                f"cannot subscribe with a row window to unknown dataset "
+                f"{request.dataset!r} through the front node (window "
+                "intersections need the dataset's chunk_rows)"
+            )
+        sub = ShardSubscription(
+            self, client, request,
+            info.chunk_rows if info is not None else None,
+            sink=sink, on_error=on_error,
+        )
+        with self._subs_lock:
+            self._subs.add(sub)
+        try:
+            sub._start()
+        except BaseException:
+            with self._subs_lock:
+                self._subs.discard(sub)
+            raise
+        return sub
+
+    def unsubscribe(self, sub: ShardSubscription) -> None:
+        """End one fan-in subscription.  Idempotent."""
+        with self._subs_lock:
+            self._subs.discard(sub)
+        sub._terminate(None)
+
+    # -- the rest of the service surface ---------------------------------------
+
+    def set_client_class(self, client: str, qos: str) -> None:
+        """Validate + record a client's QoS class.  SN-side bookkeeping
+        only for now: data nodes schedule all front-node traffic under the
+        SN connection's class (see the class docstring)."""
+        self.config.qos_class(qos)  # KeyError on unknown, like the broker
+        self._classes[str(client)] = str(qos)
+
+    def stats(self) -> ServiceStats:
+        """Cluster rollup: every node's snapshot merged through
+        :func:`~repro.service.stats.merge_service_stats` (per-node partials
+        under ``.nodes``), with ``subscribers`` overridden by the SN-side
+        truth — each client subscription fans out to N per-node streams,
+        which must not count N times."""
+        per = {f"dn{i}": dn.stats() for i, dn in enumerate(self._dns)}
+        merged = merge_service_stats(per)
+        with self._subs_lock:
+            merged.subscribers = len(self._subs)
+        return merged
+
+    def dataset_rows(self, dataset: str, *, client: str | None = None) -> int:
+        info = self._info(dataset)
+        if info is None:
+            raise KeyError(f"no dataset {dataset!r} in cluster catalog")
+        return int(info.shape[0]) if info.shape else 0
+
+    def open_window_session(
+        self,
+        client: str,
+        dataset: str,
+        windows=None,
+        *,
+        max_rows: int | None = None,
+    ) -> LodWindowSession:
+        """Per-client LOD window playback over the cluster — every gather
+        routes through the shard planner like any other request."""
+        return LodWindowSession(self, client, dataset, windows, max_rows=max_rows)
+
+
+__all__ = ["ServiceFrontNode", "ShardSubscription"]

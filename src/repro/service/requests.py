@@ -163,6 +163,14 @@ class SubscribeRequest:
     monotonically advancing, with gaps).  ``from_chunk`` starts delivery at
     that chunk index instead of 0 — the resubscribe cursor a reconnecting
     lossless client uses to resume exactly where its last session stopped.
+
+    ``shard`` is the sharded topology's ownership filter: ``(n_nodes,
+    node_index)`` restricts delivery to chunks this node owns under
+    :func:`repro.service.shard.chunk_owner` — the front node subscribes to
+    every data node with its own shard tuple and stitches the per-node
+    streams back into one ordered stream, so each chunk is decoded and
+    pushed by exactly ONE node.  ``None`` (the default, and the only thing
+    ordinary clients send) delivers everything.
     """
 
     dataset: str
@@ -170,6 +178,7 @@ class SubscribeRequest:
     policy: str = "lossless"  # "lossless" | "drop-oldest"
     max_pending: int = 64  # drop-oldest: max committed-but-undelivered lag
     from_chunk: int = 0  # first chunk index to deliver (resume cursor)
+    shard: tuple[int, int] | None = None  # (n_nodes, node_index) ownership filter
 
     def __post_init__(self) -> None:
         if self.policy not in SUBSCRIBE_POLICIES:
@@ -182,6 +191,10 @@ class SubscribeRequest:
             raise ValueError("from_chunk must be >= 0")
         if self.rows is not None and not self.rows[0] < self.rows[1]:
             raise ValueError(f"empty subscription window {self.rows}")
+        if self.shard is not None:
+            n, i = self.shard
+            if n < 1 or not 0 <= i < n:
+                raise ValueError(f"bad shard filter {self.shard} (want 0 <= index < n_nodes)")
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,254 @@
+"""Chunk ownership + request planning for the sharded SN/DN service.
+
+The HSDS-style split (``frontnode.py`` / ``datanode.py``) partitions the
+chunk space of a run file across N data-node processes.  This module is the
+*pure* half of that design — no sockets, no processes, fully unit-testable:
+
+* **consistent hashing** (:class:`HashRing` / :func:`chunk_owner`) maps
+  every chunk id ``(dataset, chunk_index)`` to one owning data node.  The
+  ring hashes ``vnodes`` virtual points per node (MD5 — deterministic
+  across processes and Python runs, unlike the salted builtin ``hash``),
+  so growing the cluster from N to N+1 nodes only reassigns the chunks the
+  new node claims (~1/(N+1) of the space); every chunk that moves, moves
+  TO the new node — the stability property ``tests/test_shard.py`` pins.
+* **routing plans** (:func:`plan_runs` / :func:`partition_rows`) split a
+  request's row footprint at ownership boundaries: a contiguous hyperslab
+  becomes per-owner *runs* of whole chunks (clipped to the requested
+  range), an arbitrary row gather becomes per-owner index lists that
+  remember their original positions.
+* **stitching** (:func:`stitch_hyperslab` / :func:`stitch_window` /
+  :func:`stitch_query`) reassembles per-node partial answers into the one
+  bit-identical response a single-process broker would have produced.
+
+Contiguous (non-chunked) datasets have no chunk space to split — they hash
+by dataset name to a single *home node* (:func:`dataset_home`).
+"""
+
+from __future__ import annotations
+
+import bisect
+import hashlib
+import threading
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.query import QueryResult
+
+#: Virtual points per node on the ring.  64 keeps the owner histogram
+#: within a few percent of uniform for small clusters while the ring stays
+#: tiny (N*64 sorted ints, built once per (n_nodes, vnodes) and cached).
+DEFAULT_VNODES = 64
+
+
+def _h64(key: str) -> int:
+    """Deterministic 64-bit hash (MD5 prefix) — stable across processes,
+    platforms and PYTHONHASHSEED, which the builtin ``hash`` is not."""
+    return int.from_bytes(hashlib.md5(key.encode("utf-8")).digest()[:8], "big")
+
+
+class HashRing:
+    """Consistent-hash ring over ``n_nodes`` data nodes.
+
+    ``owner(key)`` walks clockwise from the key's hash to the first virtual
+    point (ties broken by the point's node id, deterministically).  Rings
+    are immutable; :func:`ring_for` memoizes them per shape.
+    """
+
+    __slots__ = ("n_nodes", "vnodes", "_points", "_owners")
+
+    def __init__(self, n_nodes: int, vnodes: int = DEFAULT_VNODES):
+        if n_nodes < 1:
+            raise ValueError("HashRing needs >= 1 node")
+        if vnodes < 1:
+            raise ValueError("HashRing needs >= 1 virtual node per node")
+        self.n_nodes = int(n_nodes)
+        self.vnodes = int(vnodes)
+        pts: list[tuple[int, int]] = []
+        for node in range(self.n_nodes):
+            for v in range(self.vnodes):
+                pts.append((_h64(f"node:{node}:vnode:{v}"), node))
+        pts.sort()
+        self._points = [p for p, _ in pts]
+        self._owners = [o for _, o in pts]
+
+    def owner(self, key: str) -> int:
+        """Node index owning ``key`` (first ring point at or after its
+        hash, wrapping past the top)."""
+        i = bisect.bisect_left(self._points, _h64(key))
+        if i == len(self._points):
+            i = 0
+        return self._owners[i]
+
+
+_RING_CACHE: dict[tuple[int, int], HashRing] = {}
+_RING_LOCK = threading.Lock()
+
+
+def ring_for(n_nodes: int, vnodes: int = DEFAULT_VNODES) -> HashRing:
+    """Memoized :class:`HashRing` — the broker's push pump asks per chunk."""
+    key = (int(n_nodes), int(vnodes))
+    ring = _RING_CACHE.get(key)
+    if ring is None:
+        with _RING_LOCK:
+            ring = _RING_CACHE.get(key)
+            if ring is None:
+                ring = _RING_CACHE[key] = HashRing(*key)
+    return ring
+
+
+def chunk_key(dataset: str, chunk_index: int) -> str:
+    """The ring key of one chunk id."""
+    return f"{dataset}#{int(chunk_index)}"
+
+
+def chunk_owner(
+    dataset: str, chunk_index: int, n_nodes: int, vnodes: int = DEFAULT_VNODES
+) -> int:
+    """Owning node of chunk ``chunk_index`` of ``dataset`` in an
+    ``n_nodes`` cluster — THE ownership function: the front node routes by
+    it and every data node's shard-filtered subscription pump applies the
+    same predicate, so both sides always agree."""
+    return ring_for(n_nodes, vnodes).owner(chunk_key(dataset, chunk_index))
+
+
+def dataset_home(dataset: str, n_nodes: int, vnodes: int = DEFAULT_VNODES) -> int:
+    """Home node of a contiguous (non-chunked) dataset, or of requests
+    with no chunk footprint at all (catalog, ping, steering)."""
+    return ring_for(n_nodes, vnodes).owner(str(dataset))
+
+
+# -- routing plans -------------------------------------------------------------
+
+
+def plan_runs(
+    dataset: str,
+    row_lo: int,
+    row_hi: int,
+    chunk_rows: int,
+    n_nodes: int,
+) -> list[tuple[int, int, int]]:
+    """Split the contiguous row range ``[row_lo, row_hi)`` into per-owner
+    runs: ``[(owner, lo, hi), ...]`` in row order, each run covering
+    consecutive chunks owned by the same node, clipped to the request.
+    One entry = the request is single-owner (pass-through route)."""
+    if row_hi <= row_lo:
+        return []
+    cr = max(int(chunk_rows), 1)
+    runs: list[tuple[int, int, int]] = []
+    ci = row_lo // cr
+    last_ci = (row_hi - 1) // cr
+    while ci <= last_ci:
+        owner = chunk_owner(dataset, ci, n_nodes)
+        cj = ci
+        while cj < last_ci and chunk_owner(dataset, cj + 1, n_nodes) == owner:
+            cj += 1
+        runs.append((owner, max(row_lo, ci * cr), min(row_hi, (cj + 1) * cr)))
+        ci = cj + 1
+    return runs
+
+
+def partition_rows(
+    dataset: str,
+    rows: Sequence[int],
+    chunk_rows: int,
+    n_nodes: int,
+) -> dict[int, tuple[list[int], list[int]]]:
+    """Partition an arbitrary row gather by chunk owner: ``{owner:
+    (positions, rows)}`` where ``positions`` are the indices into the
+    original selection (the scatter map) and ``rows`` the row ids, both in
+    the original order — per-node sub-gathers preserve the caller's row
+    ordering exactly."""
+    cr = max(int(chunk_rows), 1)
+    out: dict[int, tuple[list[int], list[int]]] = {}
+    # memoize owner per chunk: gathers revisit the same chunk many times
+    owners: dict[int, int] = {}
+    for pos, r in enumerate(rows):
+        ci = int(r) // cr
+        owner = owners.get(ci)
+        if owner is None:
+            owner = owners[ci] = chunk_owner(dataset, ci, n_nodes)
+        slot = out.get(owner)
+        if slot is None:
+            slot = out[owner] = ([], [])
+        slot[0].append(pos)
+        slot[1].append(int(r))
+    return out
+
+
+# -- stitching -----------------------------------------------------------------
+
+
+def stitch_hyperslab(parts: Iterable[np.ndarray]) -> np.ndarray:
+    """Concatenate per-run hyperslab answers (already in row order) back
+    into the single array a one-node broker would return."""
+    parts = list(parts)
+    if len(parts) == 1:
+        return parts[0]
+    return np.concatenate(parts, axis=0)
+
+
+def stitch_window(
+    n_rows: int, parts: Iterable[tuple[Sequence[int], np.ndarray]]
+) -> np.ndarray:
+    """Scatter per-owner gather answers back to their original positions:
+    ``parts`` is ``[(positions, rows_array), ...]`` from
+    :func:`partition_rows`'s plan."""
+    parts = list(parts)
+    first = parts[0][1]
+    out = np.empty((n_rows,) + first.shape[1:], dtype=first.dtype)
+    for positions, arr in parts:
+        out[np.asarray(positions, dtype=np.intp)] = arr
+    return out
+
+
+def stitch_query(parts: Sequence[QueryResult], row_start: int) -> QueryResult:
+    """Reassemble per-run :class:`~repro.core.query.QueryResult` answers
+    (in row order, covering adjacent sub-windows) into the whole-window
+    result: masks and matching rows concatenate, the match index is
+    rebuilt from the stitched mask, planner counters sum and
+    ``invalid_stats`` unions (chunk indices are absolute either way)."""
+    if len(parts) == 1:
+        return parts[0]
+    mask = np.concatenate([p.mask for p in parts])
+    rows = np.concatenate([p.rows for p in parts], axis=0)
+    invalid: set[int] = set()
+    for p in parts:
+        invalid.update(int(ci) for ci in p.invalid_stats)
+    return QueryResult(
+        rows=rows,
+        index=row_start + np.flatnonzero(mask).astype(np.int64),
+        mask=mask,
+        row_start=int(row_start),
+        n_chunks=sum(p.n_chunks for p in parts),
+        chunks_pruned=sum(p.chunks_pruned for p in parts),
+        chunks_decoded=sum(p.chunks_decoded for p in parts),
+        invalid_stats=tuple(sorted(invalid)),
+    )
+
+
+def ownership_histogram(
+    dataset: str, n_chunks: int, n_nodes: int
+) -> list[int]:
+    """Chunks-per-node histogram for ``n_chunks`` chunks of ``dataset`` —
+    diagnostics and the balance assertions in the tests."""
+    counts = [0] * n_nodes
+    for ci in range(n_chunks):
+        counts[chunk_owner(dataset, ci, n_nodes)] += 1
+    return counts
+
+
+__all__ = [
+    "DEFAULT_VNODES",
+    "HashRing",
+    "ring_for",
+    "chunk_key",
+    "chunk_owner",
+    "dataset_home",
+    "plan_runs",
+    "partition_rows",
+    "stitch_hyperslab",
+    "stitch_window",
+    "stitch_query",
+    "ownership_histogram",
+]

@@ -10,7 +10,7 @@ while p50/p99 stay representative.  Field semantics are documented in
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import Any
 
 
@@ -151,6 +151,14 @@ class ServiceStats:
     skipped on a stats proof (never fetched or decoded); ``pruned_ratio``
     is their running quotient — the fraction of consulted chunks the
     statistics index eliminated.
+
+    ``nodes`` is the sharded topology's per-node rollup: empty for a
+    single-process broker; on a :class:`~repro.service.frontnode.
+    ServiceFrontNode` snapshot (built by :func:`merge_service_stats`) it
+    maps each data node's name to a compact summary dict (``completed``,
+    ``failed``, ``bytes_served``, ``queue_depth``, ``subscribers``,
+    ``pushed_chunks``, ``cache_hit_rate``, ``p99_ms``) while the top-level
+    counters hold the cluster-wide sums.
     """
 
     queue_depth: int = 0
@@ -176,8 +184,88 @@ class ServiceStats:
     cache: dict[str, Any] = field(default_factory=dict)
     qos: dict[str, Any] = field(default_factory=dict)
     clients: dict[str, ClientStats] = field(default_factory=dict)
+    nodes: dict[str, Any] = field(default_factory=dict)
 
     @property
     def cache_hit_rate(self) -> float:
         total = self.cache.get("hits", 0) + self.cache.get("misses", 0)
         return self.cache.get("hits", 0) / total if total else 0.0
+
+
+def _wmean(pairs: list[tuple[float, int]]) -> float:
+    """Weight-averaged value over ``(value, weight)`` pairs (0.0 when all
+    weights are zero).  Percentiles cannot be merged exactly without the
+    raw reservoirs, so cluster-level latency quantiles are request-count
+    weighted means of the per-node quantiles — an approximation,
+    documented as such in ``docs/SERVICE.md``."""
+    total = sum(w for _, w in pairs)
+    return sum(v * w for v, w in pairs) / total if total else 0.0
+
+
+def merge_service_stats(per_node: dict[str, "ServiceStats"]) -> "ServiceStats":
+    """Fold per-data-node :class:`ServiceStats` snapshots into ONE
+    cluster-level snapshot (the front node's ``stats()``).
+
+    Counters and gauges sum; ``requests_by_type`` / ``qos`` / ``clients``
+    merge per key (a client served by several nodes sums its counters and
+    keeps its highest per-node latency quantiles — conservative);
+    ``pruned_ratio`` is recomputed from the summed planner counters;
+    ``cache`` sums the per-node shard caches (each holds a disjoint slice
+    of the chunk space, so the sums describe the cluster's one logical
+    cache); cluster latency quantiles are request-weighted means (see
+    :func:`_wmean`).  ``nodes`` carries the per-node rollup."""
+    out = ServiceStats()
+    lat_pairs: dict[str, list[tuple[float, int]]] = {"p50_ms": [], "p90_ms": [], "p99_ms": [], "mean_ms": []}
+    for name, st in per_node.items():
+        for fld in (
+            "queue_depth", "max_queue_depth", "inflight", "admitted", "rejected",
+            "completed", "failed", "bytes_served", "subscribers", "pushed_chunks",
+            "pushed_bytes", "dropped_chunks", "chunks_scanned", "chunks_pruned",
+        ):
+            setattr(out, fld, getattr(out, fld) + getattr(st, fld))
+        for k, v in st.requests_by_type.items():
+            out.requests_by_type[k] = out.requests_by_type.get(k, 0) + v
+        weight = max(st.completed + st.failed, 1 if st.admitted else 0)
+        for fld in lat_pairs:
+            lat_pairs[fld].append((getattr(st, fld), weight))
+        for k, v in st.cache.items():
+            if isinstance(v, (int, float)) and k != "hit_rate":
+                out.cache[k] = out.cache.get(k, 0) + v
+        for cls_name, agg in st.qos.items():
+            slot = out.qos.get(cls_name)
+            if slot is None:
+                out.qos[cls_name] = dict(agg)
+            else:
+                for k in ("clients", "requests", "bytes_served", "throttled"):
+                    slot[k] = slot.get(k, 0) + agg.get(k, 0)
+        for cid, cs in st.clients.items():
+            have = out.clients.get(cid)
+            if have is None:
+                out.clients[cid] = ClientStats(**{
+                    f.name: getattr(cs, f.name) for f in fields(ClientStats)
+                })
+            else:
+                for fld in ("requests", "bytes_served", "rejected", "chunk_hits",
+                            "chunk_misses", "throttled", "retries"):
+                    setattr(have, fld, getattr(have, fld) + getattr(cs, fld))
+                for fld in ("p50_ms", "p90_ms", "p99_ms"):
+                    setattr(have, fld, max(getattr(have, fld), getattr(cs, fld)))
+        out.nodes[name] = {
+            "completed": st.completed,
+            "failed": st.failed,
+            "bytes_served": st.bytes_served,
+            "queue_depth": st.queue_depth,
+            "subscribers": st.subscribers,
+            "pushed_chunks": st.pushed_chunks,
+            "cache_hit_rate": st.cache_hit_rate,
+            "p99_ms": st.p99_ms,
+        }
+    hits = out.cache.get("hits", 0)
+    total = hits + out.cache.get("misses", 0)
+    out.cache["hit_rate"] = hits / total if total else 0.0
+    out.pruned_ratio = (
+        out.chunks_pruned / out.chunks_scanned if out.chunks_scanned else 0.0
+    )
+    for fld, pairs in lat_pairs.items():
+        setattr(out, fld, _wmean(pairs))
+    return out

@@ -207,6 +207,22 @@ class _Conn:
         try:
             exc = fut.exception()
             if exc is not None:
+                if isinstance(exc, AdmissionError):
+                    # a routing service (the sharded front node) learns of a
+                    # data node's rejection through the future — it is still
+                    # typed backpressure, so it still travels as BUSY
+                    self._put(
+                        wire.KIND_BUSY,
+                        req_id,
+                        {
+                            "message": str(exc),
+                            "queue_depth": exc.queue_depth,
+                            "client": exc.client,
+                            "max_queue": self.server.service.config.max_queue,
+                        },
+                        None,
+                    )
+                    return
                 self._put(wire.KIND_ERROR, req_id, wire.encode_error(exc), None)
                 return
             resp = fut.result()

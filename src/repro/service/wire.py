@@ -296,6 +296,8 @@ def encode_request(client: str, req) -> tuple[dict, Any]:
             max_pending=int(req.max_pending),
             from_chunk=int(req.from_chunk),
         )
+        if req.shard is not None:  # absent for ordinary clients: old peers interop
+            meta["shard"] = [int(req.shard[0]), int(req.shard[1])]
     else:
         raise TypeError(f"request type {type(req).__name__} is not wire-encodable")
     return meta, payload
@@ -346,12 +348,14 @@ def decode_request(meta: dict, payload: memoryview) -> tuple[str, Any]:
         )
     if rtype == "SubscribeRequest":
         rows = meta.get("rows")
+        shard = meta.get("shard")
         return client, SubscribeRequest(
             dataset=meta["dataset"],
             rows=(int(rows[0]), int(rows[1])) if rows is not None else None,
             policy=str(meta.get("policy", "lossless")),
             max_pending=int(meta.get("max_pending", 64)),
             from_chunk=int(meta.get("from_chunk", 0)),
+            shard=(int(shard[0]), int(shard[1])) if shard is not None else None,
         )
     raise WireError(f"unknown request type {rtype!r} on the wire")
 

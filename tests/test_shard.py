@@ -1,0 +1,389 @@
+"""Sharded SN/DN service (``shard.py`` / ``frontnode.py`` / ``datanode.py``).
+
+Three layers of contract:
+
+* **ownership** — the consistent hash is deterministic across processes
+  and ``PYTHONHASHSEED``, balanced within small factors, and *stable*
+  under cluster growth: every chunk that changes owner when a node is
+  added moves TO the new node (nothing reshuffles between old nodes);
+* **planning/stitching** — per-owner runs and row partitions cover the
+  request exactly and reassemble bit-identically (pure, no processes);
+* **end-to-end** — a front node over real data-node subprocesses answers
+  hyperslab / window / query / subscribe traffic bit-identically to a
+  single-process broker, rolls up per-node stats, and turns a data node
+  dying mid-request into a typed ``RetryableError`` (chaos marker).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import codecs as _codecs
+from repro.core.container import TH5File
+from repro.core.query import col
+from repro.service import (
+    DataService,
+    HyperslabQuery,
+    QueryRequest,
+    RemoteDataService,
+    RetryableError,
+    ServiceConfig,
+    ServiceFrontNode,
+    ServiceServer,
+    ServiceStats,
+    StatsQuery,
+    SubscribeRequest,
+    WindowQuery,
+    chunk_owner,
+    ownership_histogram,
+)
+from repro.service.shard import (
+    partition_rows,
+    plan_runs,
+    stitch_hyperslab,
+    stitch_window,
+)
+from repro.service.stats import merge_service_stats
+
+ROWS, COLS, CHUNK_ROWS = 640, 16, 32
+N_CHUNKS = ROWS // CHUNK_ROWS
+DS = "/simulation/step_00000000/state/fields/u"
+_CODEC = _codecs.get_codec("zlib")
+
+
+def _data(rows=ROWS, seed=7):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((rows, COLS)).astype("<f4")
+
+
+def _build_run(path, data):
+    f = TH5File.create(path)
+    meta = f.create_chunked_dataset(DS, (len(data), COLS), "<f4", CHUNK_ROWS)
+    f.commit()
+    for ci in range(len(data) // CHUNK_ROWS):
+        arr = data[ci * CHUNK_ROWS : (ci + 1) * CHUNK_ROWS]
+        payload, raw_n, raw_crc, stored_crc, cid = _codecs.encode_chunk(_CODEC, arr)
+        f.append_chunk(
+            meta, payload, raw_nbytes=raw_n, raw_crc32=raw_crc,
+            stored_crc32=stored_crc, codec_id=cid,
+        )
+    f.commit()
+    f.close()
+
+
+# -- consistent-hash ownership -------------------------------------------------
+
+
+def test_ownership_deterministic_across_processes():
+    """The ring must not depend on this interpreter's hash salt: a child
+    process with a DIFFERENT PYTHONHASHSEED computes the same owners."""
+    sample = [(DS, ci) for ci in range(32)] + [("/other/ds", ci) for ci in range(8)]
+    here = [chunk_owner(d, ci, 4) for d, ci in sample]
+    prog = (
+        "from repro.service.shard import chunk_owner;"
+        f"print([chunk_owner(d, ci, 4) for d, ci in {sample!r}])"
+    )
+    env = dict(os.environ, PYTHONHASHSEED="12345")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", prog], env=env, capture_output=True, text=True
+    )
+    assert out.returncode == 0, out.stderr
+    assert eval(out.stdout.strip()) == here
+
+
+def test_ownership_stable_under_growth():
+    """Adding node N to an N-node ring only moves chunks TO the new node —
+    the consistent-hashing property that makes rescaling cheap."""
+    n_chunks = 600
+    for n in (1, 2, 3, 4, 7):
+        before = [chunk_owner(DS, ci, n) for ci in range(n_chunks)]
+        after = [chunk_owner(DS, ci, n + 1) for ci in range(n_chunks)]
+        moved = [(b, a) for b, a in zip(before, after) if b != a]
+        assert moved, f"growing {n}->{n+1} moved nothing (ring degenerate?)"
+        assert all(a == n for _, a in moved), (
+            f"growth {n}->{n+1} reshuffled between OLD nodes: "
+            f"{[(b, a) for b, a in moved if a != n][:5]}"
+        )
+        # and the new node claims roughly its fair share, never the world
+        share = len(moved) / n_chunks
+        assert 0.0 < share < 3.0 / (n + 1)
+
+
+def test_ownership_balanced():
+    hist = ownership_histogram(DS, 1000, 4)
+    assert sum(hist) == 1000
+    fair = 1000 / 4
+    for count in hist:
+        assert 0.3 * fair < count < 2.5 * fair, hist
+
+
+# -- planning + stitching (pure) -----------------------------------------------
+
+
+def test_plan_runs_cover_request_exactly():
+    for lo, hi in [(0, ROWS), (37, 301), (5, 6), (CHUNK_ROWS, 2 * CHUNK_ROWS)]:
+        runs = plan_runs(DS, lo, hi, CHUNK_ROWS, 3)
+        assert runs[0][1] == lo and runs[-1][2] == hi
+        for (_, a_lo, a_hi), (_, b_lo, _) in zip(runs, runs[1:]):
+            assert a_hi == b_lo  # contiguous, in row order
+        for owner, r_lo, r_hi in runs:
+            assert r_lo < r_hi
+            for ci in range(r_lo // CHUNK_ROWS, (r_hi - 1) // CHUNK_ROWS + 1):
+                assert chunk_owner(DS, ci, 3) == owner
+    assert plan_runs(DS, 10, 10, CHUNK_ROWS, 3) == []
+
+
+def test_partition_rows_roundtrip():
+    rng = np.random.default_rng(3)
+    rows = [int(r) for r in rng.integers(0, ROWS, 200)]
+    plan = partition_rows(DS, rows, CHUNK_ROWS, 4)
+    seen = {}
+    for owner, (positions, sub_rows) in plan.items():
+        assert len(positions) == len(sub_rows)
+        assert sorted(positions) == positions  # original order preserved
+        for pos, r in zip(positions, sub_rows):
+            assert rows[pos] == r
+            assert chunk_owner(DS, r // CHUNK_ROWS, 4) == owner
+            seen[pos] = r
+    assert len(seen) == len(rows)
+
+    data = _data()
+    parts = [
+        (positions, data[np.asarray(sub_rows)])
+        for positions, sub_rows in plan.values()
+    ]
+    np.testing.assert_array_equal(
+        stitch_window(len(rows), parts), data[np.asarray(rows)]
+    )
+
+
+def test_stitch_hyperslab_is_concat():
+    data = _data()
+    runs = plan_runs(DS, 10, 500, CHUNK_ROWS, 3)
+    parts = [data[lo:hi] for _, lo, hi in runs]
+    np.testing.assert_array_equal(stitch_hyperslab(parts), data[10:500])
+
+
+def test_merge_service_stats_rollup():
+    a, b = ServiceStats(), ServiceStats()
+    a.completed, a.bytes_served, a.queue_depth = 10, 1000, 2
+    b.completed, b.bytes_served, b.queue_depth = 5, 500, 1
+    a.cache = {"hits": 8, "misses": 2, "hit_rate": 0.8}
+    b.cache = {"hits": 0, "misses": 10, "hit_rate": 0.0}
+    merged = merge_service_stats({"dn0": a, "dn1": b})
+    assert merged.completed == 15
+    assert merged.bytes_served == 1500
+    assert merged.queue_depth == 3
+    assert merged.cache["hits"] == 8 and merged.cache["misses"] == 12
+    assert merged.cache["hit_rate"] == pytest.approx(8 / 20)
+    assert set(merged.nodes) == {"dn0", "dn1"}
+    assert merged.nodes["dn0"]["completed"] == 10
+
+
+# -- end-to-end: front node over data-node subprocesses ------------------------
+
+
+@pytest.fixture(scope="module")
+def static_cluster(tmp_path_factory):
+    """One fully-written run file served by a 2-node cluster, plus the
+    single-process reference broker over the same file."""
+    tmp = tmp_path_factory.mktemp("shard")
+    path = str(tmp / "run.th5")
+    data = _data()
+    _build_run(path, data)
+    fn = ServiceFrontNode.spawn(path, 2, str(tmp / "nodes"))
+    ref = DataService(path, ServiceConfig(n_workers=2))
+    yield fn, ref, data
+    ref.close()
+    fn.close()
+
+
+def test_hyperslab_bit_identity(static_cluster):
+    fn, ref, data = static_cluster
+    cases = [
+        (0, ROWS, None),              # whole dataset (multi-owner fan-out)
+        (37, 301, (2, 9)),            # unaligned + column slice
+        (CHUNK_ROWS, CHUNK_ROWS, None),  # exactly one chunk (pass-through)
+        (5, 10, None),                # sub-chunk
+    ]
+    for row_start, n_rows, cols in cases:
+        req = HyperslabQuery(DS, row_start, n_rows, cols=cols)
+        got = fn.request("c", req).value
+        want = ref.request("c", req).value
+        np.testing.assert_array_equal(got, want)
+        assert got.dtype == want.dtype
+
+
+def test_window_bit_identity(static_cluster):
+    fn, ref, data = static_cluster
+    rng = np.random.default_rng(11)
+    rows = tuple(int(r) for r in rng.integers(0, ROWS, 123))
+    req = WindowQuery(DS, rows)
+    np.testing.assert_array_equal(
+        fn.request("c", req).value, ref.request("c", req).value
+    )
+
+
+def test_query_bit_identity(static_cluster):
+    fn, ref, data = static_cluster
+    for pred, row_start, n_rows in [
+        (col(0) > 0.5, 0, None),
+        ((col(1) > 0.0) & (abs(col(2)) < 1.0), 17, 500),
+        (~(col(3) > 10.0), 0, ROWS),  # matches everything
+    ]:
+        req = QueryRequest(DS, pred, row_start=row_start, n_rows=n_rows)
+        got = fn.request("c", req).value
+        want = ref.request("c", req).value
+        np.testing.assert_array_equal(got.rows, want.rows)
+        np.testing.assert_array_equal(got.mask, want.mask)
+        np.testing.assert_array_equal(got.index, want.index)
+        assert got.row_start == want.row_start
+        assert got.n_chunks == want.n_chunks
+        assert (
+            got.chunks_pruned + got.chunks_decoded
+            == want.chunks_pruned + want.chunks_decoded
+        )
+
+
+def test_stats_rollup_and_wire_front(static_cluster, tmp_path):
+    """The cluster serves the ordinary wire protocol through one socket,
+    and a StatsQuery answers with every node's partial under .nodes."""
+    fn, ref, data = static_cluster
+    server = ServiceServer(fn, str(tmp_path / "sn.sock"))
+    cli = RemoteDataService(server.address)
+    try:
+        req = HyperslabQuery(DS, 3, 333)
+        np.testing.assert_array_equal(cli.request("w", req).value, data[3:336])
+        st = cli.request("w", StatsQuery()).value
+        assert set(st.nodes) == {"dn0", "dn1"}
+        assert st.completed >= 2
+        assert sum(n["completed"] for n in st.nodes.values()) == st.completed
+    finally:
+        cli.close()
+        server.close()
+
+
+@pytest.fixture()
+def live_cluster(tmp_path):
+    """A writable run file (chunks appended DURING the test) behind a
+    2-node cluster with a fast fan-out index poll."""
+    path = str(tmp_path / "live.th5")
+    f = TH5File.create(path)
+    meta = f.create_chunked_dataset(DS, (ROWS, COLS), "<f4", CHUNK_ROWS)
+    f.commit()
+    fn = ServiceFrontNode.spawn(path, 2, str(tmp_path / "nodes"), poll_s=0.05)
+    yield fn, f, meta
+    fn.close()
+    f.close()
+
+
+def _append(f, meta, data, lo_chunk, hi_chunk):
+    for ci in range(lo_chunk, hi_chunk):
+        arr = data[ci * CHUNK_ROWS : (ci + 1) * CHUNK_ROWS]
+        payload, raw_n, raw_crc, stored_crc, cid = _codecs.encode_chunk(_CODEC, arr)
+        f.append_chunk(
+            meta, payload, raw_nbytes=raw_n, raw_crc32=raw_crc,
+            stored_crc32=stored_crc, codec_id=cid,
+        )
+    f.commit()
+
+
+def test_subscribe_fan_in_bit_identity(live_cluster):
+    """Every committed chunk arrives exactly once, in chunk-index order,
+    with SN-renumbered seq, bit-identical rows — pre-committed chunks and
+    chunks committed live (seen by the data nodes via the index poll)."""
+    fn, f, meta = live_cluster
+    data = _data(seed=23)
+    _append(f, meta, data, 0, 4)  # committed before the subscribe
+    sub = fn.subscribe("viewer", SubscribeRequest(DS))
+    try:
+        got = [sub.get(timeout=30.0) for _ in range(4)]
+        _append(f, meta, data, 4, N_CHUNKS)  # live, while subscribed
+        got += [sub.get(timeout=30.0) for _ in range(N_CHUNKS - 4)]
+        assert [g.chunk_index for g in got] == list(range(N_CHUNKS))
+        assert [g.seq for g in got] == list(range(N_CHUNKS))
+        assert all(g.dropped == 0 for g in got)
+        for g in got:
+            lo = g.chunk_index * CHUNK_ROWS
+            assert g.row_start == lo
+            np.testing.assert_array_equal(g.rows, data[lo : lo + CHUNK_ROWS])
+    finally:
+        sub.close()
+    assert sub.get(timeout=10.0) is None  # clean end-of-stream sentinel
+
+
+def test_subscribe_windowed_fan_in(live_cluster):
+    """A row-windowed fan-in delivers exactly the intersecting chunks (the
+    indexes both sides predict from chunk_rows), clipped bit-identically."""
+    fn, f, meta = live_cluster
+    data = _data(seed=29)
+    _append(f, meta, data, 0, N_CHUNKS)
+    window = (CHUNK_ROWS * 2 + 5, CHUNK_ROWS * 7 - 3)
+    wanted = [
+        ci for ci in range(N_CHUNKS)
+        if ci * CHUNK_ROWS < window[1] and (ci + 1) * CHUNK_ROWS > window[0]
+    ]
+    sub = fn.subscribe("viewer", SubscribeRequest(DS, rows=window))
+    try:
+        got = [sub.get(timeout=30.0) for _ in range(len(wanted))]
+        assert [g.chunk_index for g in got] == wanted
+        for g in got:
+            lo = max(g.chunk_index * CHUNK_ROWS, window[0])
+            hi = min((g.chunk_index + 1) * CHUNK_ROWS, window[1])
+            assert g.row_start == lo
+            np.testing.assert_array_equal(g.rows, data[lo:hi])
+    finally:
+        sub.close()
+
+
+@pytest.mark.chaos
+def test_dn_death_mid_request_is_retryable(tmp_path):
+    """Killing a data node turns in-flight/following requests touching its
+    partition into typed RetryableError — never a hang, never an untyped
+    failure — while single-owner requests for surviving nodes still work."""
+    path = str(tmp_path / "run.th5")
+    data = _data()
+    _build_run(path, data)
+    fn = ServiceFrontNode.spawn(path, 2, str(tmp_path / "nodes"))
+    try:
+        np.testing.assert_array_equal(
+            fn.request("c", HyperslabQuery(DS, 0, ROWS)).value, data
+        )
+        victim = fn.handles[1]
+        victim.kill()
+        with pytest.raises(RetryableError, match="data node 1"):
+            fn.request("c", HyperslabQuery(DS, 0, ROWS))
+        # chunks wholly owned by the survivor keep serving
+        survivor_chunk = next(
+            ci for ci in range(N_CHUNKS) if chunk_owner(DS, ci, 2) == 0
+        )
+        lo = survivor_chunk * CHUNK_ROWS
+        np.testing.assert_array_equal(
+            fn.request("c", HyperslabQuery(DS, lo, CHUNK_ROWS)).value,
+            data[lo : lo + CHUNK_ROWS],
+        )
+    finally:
+        fn.close()
+
+
+@pytest.mark.chaos
+def test_dn_death_fails_subscription_typed(tmp_path):
+    path = str(tmp_path / "run.th5")
+    data = _data()
+    _build_run(path, data)
+    fn = ServiceFrontNode.spawn(path, 2, str(tmp_path / "nodes"))
+    try:
+        sub = fn.subscribe("viewer", SubscribeRequest(DS))
+        first = sub.get(timeout=30.0)
+        assert first is not None
+        fn.handles[1].kill()
+        with pytest.raises(RetryableError, match="data node 1"):
+            while True:
+                if sub.get(timeout=30.0) is None:
+                    raise AssertionError("stream ended without the typed error")
+    finally:
+        fn.close()

@@ -49,6 +49,7 @@ SMOKE_COMMANDS = [
     ("benchmarks/io_bandwidth.py", ["--smoke", "--read"]),
     ("benchmarks/service_load.py", ["--smoke"]),
     ("benchmarks/service_load.py", ["--smoke", "--transport", "socket"]),
+    ("benchmarks/service_load.py", ["--smoke", "--transport", "shard"]),
     ("benchmarks/recovery.py", ["--smoke"]),
     ("benchmarks/streaming.py", ["--smoke"]),
     ("benchmarks/query.py", ["--smoke"]),
@@ -59,6 +60,7 @@ FULL_COMMANDS = [
     ("benchmarks/io_bandwidth.py", ["--read"]),
     ("benchmarks/service_load.py", []),
     ("benchmarks/service_load.py", ["--transport", "socket"]),
+    ("benchmarks/service_load.py", ["--transport", "shard"]),
     ("benchmarks/recovery.py", []),
     ("benchmarks/streaming.py", []),
     ("benchmarks/query.py", []),
@@ -94,6 +96,18 @@ def _serve_scale(doc: dict, section: str):
     if not s:
         return None
     return (s.get("rows"), s.get("cols"), tuple(r["clients"] for r in s["traffic"]))
+
+
+def _shard_scale(doc: dict):
+    s = doc.get("serve_sharded")
+    if not s:
+        return None
+    return (
+        s.get("rows"),
+        s.get("cols"),
+        s.get("clients"),
+        tuple(r.get("dn") for r in s.get("traffic") or []),
+    )
 
 
 def _recover_scan_scale(doc: dict):
@@ -244,6 +258,51 @@ def build_checks() -> list[dict]:
                 ),
             ]
         )
+    # -- sharded topology (the `serve_sharded` section) --------------------
+    checks.extend(
+        [
+            dict(
+                # correctness is absolute: the SN's scattered + stitched
+                # responses must be byte-for-byte what a single broker over
+                # the same file returns — the bench verifies this itself
+                # and records the verdict
+                name="serve_sharded: responses bit-identical to single broker",
+                kind="invariant",
+                check=lambda d: (
+                    _get(d, "serve_sharded") is None
+                    or _get(d, "serve_sharded", "bit_identical") is True
+                ),
+            ),
+            dict(
+                name="serve_sharded: zero admission rejections",
+                kind="invariant",
+                check=lambda d: all(
+                    r.get("rejected") == 0
+                    for r in _get(d, "serve_sharded", "traffic") or []
+                ),
+            ),
+            dict(
+                # the point of the DN split: aggregate read throughput must
+                # scale with data nodes.  The floor is cpu-guarded — on a
+                # single-core box the extra processes just time-slice (we
+                # measured 0.6x there), so the scaling claim is only
+                # falsifiable with >= 2 cores (CI runners have 4)
+                name="serve_sharded: max DNs >= 1.3x 1 DN (when cores allow)",
+                kind="invariant",
+                check=lambda d: (
+                    _get(d, "serve_sharded") is None
+                    or (_get(d, "serve_sharded", "cpu_count") or 0) < 2
+                    or _get(d, "serve_sharded", "dn_scaling_max_vs_1") >= 1.3
+                ),
+            ),
+            dict(
+                name="serve_sharded: aggregate MB/s at max data nodes",
+                kind="baseline",
+                get=lambda d: _get(d, "serve_sharded", "traffic", -1, "agg_MBps"),
+                scale=_shard_scale,
+            ),
+        ]
+    )
     # -- fault tolerance (the `recover` section) ---------------------------
     checks.extend(
         [

@@ -18,6 +18,10 @@ installed):
     kind (``KIND_*``) and the exact header struct format of ``wire.py``,
     every ``QosClass`` field of ``broker.py``, and the transport classes
     (``ServiceServer`` / ``RemoteDataService``) appear in the docs;
+  * the sharded-topology section of ``docs/SERVICE.md`` names every
+    public class/function of ``shard.py`` / ``frontnode.py`` /
+    ``datanode.py`` (the SN/DN split), and ``docs/ARCHITECTURE.md``
+    carries the SN/DN topology diagram;
   * ``docs/OBSERVABILITY.md`` documents every span name (the ``SPAN_*``
     constants of ``obs/trace.py``) and every metric name (the ``M_*``
     constants of ``obs/metrics.py``), and ``docs/ARCHITECTURE.md``
@@ -188,6 +192,23 @@ def main() -> int:
     # -- failure semantics: the fault-tolerance contract -------------------
     if "## Failure modes" not in service_doc:
         missing.append('SERVICE.md: "## Failure modes" section')
+    # -- sharded topology: the SN/DN contract ------------------------------
+    if "## Sharded topology (SN/DN)" not in service_doc:
+        missing.append('SERVICE.md: "## Sharded topology (SN/DN)" section')
+    for name in (
+        "ServiceFrontNode",
+        "ShardSubscription",
+        "DataNodeHandle",
+        "start_data_nodes",
+        "HashRing",
+        "chunk_owner",
+        "dataset_home",
+        "merge_service_stats",
+        "bit_identical",
+        "fanout_poll_s",
+    ):
+        if f"`{name}`" not in service_doc:
+            missing.append(f"SERVICE.md: sharded topology must name `{name}`")
 
     # -- observability: span taxonomy + metric name registry ---------------
     obs_doc = OBS_DOC.read_text(encoding="utf-8")
@@ -210,6 +231,11 @@ def main() -> int:
             missing.append(f"OBSERVABILITY.md: must cover {surface!r}")
 
     arch = ARCH.read_text(encoding="utf-8")
+    if "## Sharded topology" not in arch or "chunk_owner" not in arch:
+        missing.append(
+            "ARCHITECTURE.md: SN/DN topology diagram (must carry a "
+            '"## Sharded topology" section showing chunk_owner routing)'
+        )
     if "OBSERVABILITY.md" not in arch or "trace_id" not in arch:
         missing.append(
             "ARCHITECTURE.md: trace-path diagram (must link OBSERVABILITY.md "
